@@ -1,0 +1,35 @@
+"""Paper §IV.E: end-to-end networks on the accelerator — full ResNets
+(incl. previously-disabled pooling and FC layers) and MobileNet-1.0
+(depthwise on the ALU via the new element-wise multiply)."""
+from __future__ import annotations
+
+from repro.vta.isa import VTAConfig
+from repro.vta.network import run_network
+from repro.vta.workloads import NETWORKS
+
+
+def run(nets=("resnet18", "resnet34", "resnet50", "mobilenet1.0"),
+        verbose: bool = True) -> dict:
+    hw = VTAConfig(gemm_ii=1, alu_ii=1)
+    rows = []
+    if verbose:
+        print("== bench_end2end (paper §IV.E) ==")
+    for name in nets:
+        layers = NETWORKS[name]()
+        rep = run_network(name, layers, hw)
+        kinds = {}
+        for l in rep.layers:
+            if not l.on_cpu:
+                kinds[l.kind] = kinds.get(l.kind, 0) + 1
+        row = {"net": name, **rep.summary(), "vta_layer_kinds": kinds}
+        rows.append(row)
+        if verbose:
+            print(f"  {name:14s}: {rep.total_cycles/1e6:8.2f}M cycles, "
+                  f"{rep.total_dram_bytes/1e6:7.1f}MB DRAM, "
+                  f"{row['macs_per_cycle']:6.1f} MACs/cy, layers on VTA: {kinds}"
+                  f" (+{row['cpu_layers']} on CPU)")
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""TPU-plane kernel bench: TPS-for-BlockSpecs tile table + interpret-mode
+validation timings for the Pallas kernels (the §Roofline/§Perf substrate)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tile_search import (select_attention_tile, select_gemm_tile)
+from repro.kernels import ops, ref
+
+
+def run(verbose: bool = True) -> dict:
+    shapes = [
+        ("qwen3 qkv", 4096, 2048 + 2048, 1024),
+        ("qwen2.5 ffn", 4096, 27648, 5120),
+        ("deepseek ffn", 4096, 22016, 8192),
+        ("mixtral expert", 8192, 16384, 6144),
+        ("lm head", 4096, 151936, 1024),
+    ]
+    tiles = []
+    if verbose:
+        print("== bench_kernels: TPS-selected matmul tiles (bf16, 64MiB VMEM) ==")
+    for name, M, N, K in shapes:
+        t = select_gemm_tile(M, N, K, in_bytes=2)
+        tiles.append({"name": name, "mnk": (M, N, K),
+                      "tile": (t.bm, t.bn, t.bk),
+                      "vmem_mib": t.vmem_bytes / 2 ** 20,
+                      "traffic_gib": t.traffic_bytes / 2 ** 30})
+        if verbose:
+            print(f"  {name:16s} M{M} N{N} K{K}: tile ({t.bm},{t.bn},{t.bk})"
+                  f"  vmem {t.vmem_bytes/2**20:6.1f}MiB"
+                  f"  HBM traffic {t.traffic_bytes/2**30:7.2f}GiB")
+    at = select_attention_tile(32768, 32768, 128, in_bytes=2)
+    if verbose:
+        print(f"  flash-attn 32k:  bq={at.bq} bkv={at.bkv} "
+              f"vmem {at.vmem_bytes/2**20:.1f}MiB")
+
+    # interpret-mode correctness timing (small shapes; CPU)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256, 512), jnp.float32)
+    w = jax.random.normal(key, (512, 384), jnp.float32)
+    t0 = time.time()
+    o = ops.gemm(x, w, act="relu", clip=6.0)
+    o.block_until_ready()
+    gemm_t = time.time() - t0
+    err = float(jnp.max(jnp.abs(
+        o - ref.matmul_ref(x, w, act="relu", clip=6.0))))
+    if verbose:
+        print(f"  gemm interpret check: err={err:.2e} ({gemm_t*1e3:.0f} ms "
+              f"incl. trace+compile)")
+    return {"tiles": tiles, "attn_tile": (at.bq, at.bkv), "gemm_err": err}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Paper §IV.F / Fig 13: area-cycle design space for ResNet-18.
+
+Sweeps GEMM shape (4x4 / 5x5 / 6x6 in log2, the paper's three ovals), memory
+interface width (8..64B) and scratchpad scale; reports the pareto frontier
+and the big-end point (paper: ~11.5x fewer cycles at ~12x area vs the
+pipelined default)."""
+from __future__ import annotations
+
+from repro.core.dse import DSEPoint, make_config, pareto, sweep
+from repro.vta.workloads import resnet
+
+
+def run(verbose: bool = True, spad_scales=(1, 2, 4), batch_logs=(0,)) -> dict:
+    layers = resnet(18)
+    ref = make_config()     # pipelined 1x16x16, 8B bus
+    points = sweep(layers, reference=ref, spad_scales=spad_scales,
+                   batch_logs=batch_logs)
+    front = pareto(points)
+    ref_pt = min((p for p in points if p.hw.log_block_in == 4
+                  and p.hw.mem_width_bytes == 8), key=lambda p: p.area)
+    best = min(points, key=lambda p: p.cycles)
+    out = {
+        "n_points": len(points),
+        "pareto": [(p.label, p.area, p.cycles) for p in front],
+        "ref": (ref_pt.label, ref_pt.area, ref_pt.cycles),
+        "best": (best.label, best.area, best.cycles),
+        "cycle_gain_best": ref_pt.cycles / best.cycles,
+        "area_cost_best": best.area / ref_pt.area,
+        "area_span": max(p.area for p in points) / min(p.area for p in points),
+    }
+    if verbose:
+        print("== bench_pareto (paper Fig 13) ==")
+        print(f"  {len(points)} feasible configurations "
+              f"(area span {out['area_span']:.1f}x)")
+        print("  pareto frontier (area_scaled, cycles):")
+        for label, a, c in out["pareto"]:
+            print(f"    {label:22s} area {a:6.2f}x  cycles {c/1e6:7.2f}M")
+        print(f"  reference {ref_pt.label}: area 1.0x, "
+              f"{ref_pt.cycles/1e6:.2f}M cycles")
+        print(f"  big end   {best.label}: {out['cycle_gain_best']:.1f}x fewer "
+              f"cycles at {out['area_cost_best']:.1f}x area  "
+              f"[paper: ~11.5x at ~12x]")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Paper §III.A / Figs 2-4: VTA roofline points + process-utilization charts."""
+from __future__ import annotations
+
+from repro.core.dse import make_config
+from repro.core.roofline import vta_attainable, vta_bounds, vta_roofline_point
+from repro.vta.network import run_network, schedule_layer
+from repro.vta.tsim import run_tsim, utilization_ascii
+from repro.vta.workloads import resnet
+
+
+def run(verbose: bool = True) -> dict:
+    layers = resnet(18)
+    points = []
+    for lb, mw, ss in [(4, 8, 1), (4, 64, 1), (5, 16, 2), (6, 64, 4)]:
+        hw = make_config(lb, mw, ss)
+        rep = run_network("resnet18", layers, hw)
+        pt = vta_roofline_point(rep.total_macs, rep.total_cycles,
+                                rep.total_dram_bytes)
+        peak, bw = vta_bounds(hw)
+        att = vta_attainable(hw, pt["ops_per_byte"])
+        points.append({"config": f"{1 << lb}x{1 << lb}/mw{mw}/sp{ss}",
+                       "ops_per_byte": pt["ops_per_byte"],
+                       "ops_per_cycle": pt["ops_per_cycle"],
+                       "attainable": att, "peak": peak,
+                       "fraction": pt["ops_per_cycle"] / att})
+    if verbose:
+        print("== bench_roofline (paper Fig 2) ==")
+        for p in points:
+            print(f"  {p['config']:20s} intensity {p['ops_per_byte']:8.1f} "
+                  f"ops/B  perf {p['ops_per_cycle']:8.1f} ops/cy  "
+                  f"attainable {p['attainable']:8.1f}  "
+                  f"({p['fraction']*100:5.1f}% of roof)")
+
+    # Fig 3/4: utilization strip chart for one layer, serial vs double-buffered
+    hw = make_config(4, 8, 1)
+    from repro.vta.workloads import resnet as _r
+    layer = [l for l in layers if l.kind == "conv" and not l.on_cpu][2]
+    charts = {}
+    for db in (False, True):
+        sched = schedule_layer(layer, hw, prefer_db=db)
+        res = run_tsim(sched.program, hw)
+        charts["db" if db else "serial"] = utilization_ascii(res, width=84)
+    if verbose:
+        print("== process utilization (paper Figs 3-4), layer "
+              f"{layer.wl.name} ==")
+        print("-- serial schedule (cf. Fig 4 right: sequential L->C->S) --")
+        print(charts["serial"])
+        print("-- virtual-threaded (double-buffered) --")
+        print(charts["db"])
+    return {"points": points, "charts": charts}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Paper §IV.D.1 / Fig 10: TPS vs fallback DRAM bytes, ResNet-18 C2-C11 on
+BLOCK_IN=BLOCK_OUT=32. Paper claim: 20x-400x reduction."""
+from __future__ import annotations
+
+from repro.core.tps import fallback_tiling, tps_search
+from repro.vta.isa import VTAConfig
+from repro.vta.workloads import resnet18_convs
+
+
+def run(verbose: bool = True) -> dict:
+    hw = VTAConfig(log_block_in=5, log_block_out=5,
+                   log_wgt_buff=20, log_acc_buff=18, log_inp_buff=16)
+    rows = []
+    for wl in resnet18_convs():
+        res = tps_search(wl, hw)
+        fb = fallback_tiling(wl, hw)
+        assert res.feasible, wl
+        rows.append({"layer": wl.name.split(".")[-1],
+                     "fallback_bytes": fb.cost_bytes,
+                     "tps_bytes": res.tiling.cost_bytes,
+                     "ratio": fb.cost_bytes / res.tiling.cost_bytes,
+                     "tiling": res.tiling})
+    ratios = [r["ratio"] for r in rows]
+    out = {"rows": rows, "min_ratio": min(ratios), "max_ratio": max(ratios),
+           "paper_range": (20, 400)}
+    if verbose:
+        print("== bench_tps (paper Fig 10: 20x-400x, C2-C11 @ BLOCK=32) ==")
+        for r in rows:
+            print(f"  {r['layer']:>4s}: fallback {r['fallback_bytes']/1e6:9.2f}MB"
+                  f"  TPS {r['tps_bytes']/1e6:8.3f}MB  ratio {r['ratio']:7.1f}x")
+        print(f"  range: {out['min_ratio']:.0f}x .. {out['max_ratio']:.0f}x"
+              f"   [paper: 20x .. 400x]")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Benchmark harness entry point: one bench per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+from benchmarks import (bench_double_buffer, bench_end2end, bench_kernels,
+                        bench_pareto, bench_pipelining, bench_roofline,
+                        bench_tps)
+
+BENCHES = {
+    "pipelining": lambda quick: bench_pipelining.run(),
+    "tps": lambda quick: bench_tps.run(),
+    "double_buffer": lambda quick: bench_double_buffer.run(
+        depths=(18, 50) if quick else (18, 34, 50, 101)),
+    "pareto": lambda quick: bench_pareto.run(
+        spad_scales=(1, 4) if quick else (1, 2, 4)),
+    "roofline": lambda quick: bench_roofline.run(),
+    "end2end": lambda quick: bench_end2end.run(
+        nets=("resnet18", "mobilenet1.0") if quick
+        else ("resnet18", "resnet34", "resnet50", "mobilenet1.0")),
+    "kernels": lambda quick: bench_kernels.run(),
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=sorted(BENCHES))
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+
+    names = [args.only] if args.only else list(BENCHES)
+    results = {}
+    t_all = time.time()
+    for name in names:
+        t0 = time.time()
+        try:
+            results[name] = BENCHES[name](args.quick)
+            status = "ok"
+        except Exception as e:  # pragma: no cover
+            results[name] = {"error": f"{type(e).__name__}: {e}"}
+            status = "FAILED"
+        print(f"-- {name}: {status} ({time.time()-t0:.1f}s)\n", flush=True)
+    print(f"== all benches done in {time.time()-t_all:.1f}s ==")
+    if args.json_out:
+        def default(o):
+            if dataclasses.is_dataclass(o):
+                return dataclasses.asdict(o)
+            return str(o)
+        with open(args.json_out, "w") as f:
+            json.dump(results, f, indent=2, default=default)
+    return 1 if any("error" in (r or {}) for r in results.values()) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

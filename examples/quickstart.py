@@ -1,0 +1,50 @@
+"""Quickstart: build an assigned architecture (reduced size), take a few
+training steps, then generate tokens with the serving engine.
+
+  PYTHONPATH=src python examples/quickstart.py [--arch qwen3-0.6b]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SMOKE_ARCHS
+from repro.models import build_model
+from repro.serve.engine import ServeSession
+from repro.train.data import DataConfig, make_batch
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=sorted(SMOKE_ARCHS))
+    ap.add_argument("--steps", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = SMOKE_ARCHS[args.arch]
+    print(f"arch: {args.arch} (reduced: {cfg.n_layers}L d{cfg.d_model}, "
+          f"{cfg.param_count()/1e6:.2f}M params)")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(model, AdamWConfig(lr=3e-3,
+                                                         warmup_steps=2,
+                                                         total_steps=100)),
+                      donate_argnums=(0, 1))
+    dcfg = DataConfig(batch=4, seq_len=64)
+    for step in range(args.steps):
+        batch = jax.tree_util.tree_map(jnp.asarray, make_batch(dcfg, cfg, step))
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        print(f"  step {step}: loss {float(metrics['loss']):.4f}")
+
+    if cfg.family not in ("vlm",):
+        sess = ServeSession(model, params)
+        prompt = (jnp.ones((1, cfg.n_codebooks, 8), jnp.int32)
+                  if cfg.n_codebooks else jnp.ones((1, 8), jnp.int32))
+        out = sess.generate(prompt, n_steps=8)
+        print(f"  generated: {out.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper-plane explorer: TPS a layer, inspect the schedule, run fsim + tsim,
+view the process-utilization strip chart, then sweep the design space.
+
+  PYTHONPATH=src python examples/vta_explore.py
+"""
+import numpy as np
+
+from repro.core.dse import make_config, pareto, sweep
+from repro.core.tps import ConvWorkload, fallback_tiling, tps_search
+from repro.vta.fsim import FSim, conv2d_ref, post_op_ref
+from repro.vta.isa import PIPELINED_VTA
+from repro.vta.scheduler import schedule_conv
+from repro.vta.tsim import run_tsim, utilization_ascii
+from repro.vta.workloads import resnet
+
+
+def main():
+    hw = PIPELINED_VTA
+    wl = ConvWorkload("demo", 1, 28, 28, 3, 3, 64, 128, 1, 1, 1, 1)
+    print(f"layer {wl.name}: {wl.macs/1e6:.1f}M MACs")
+
+    res = tps_search(wl, hw)
+    fb = fallback_tiling(wl, hw)
+    print(f"TPS tiling: {res.tiling}")
+    print(f"DRAM bytes: TPS {res.tiling.cost_bytes/1e3:.0f}KB vs fallback "
+          f"{fb.cost_bytes/1e6:.1f}MB ({fb.cost_bytes/res.tiling.cost_bytes:.0f}x)")
+
+    sched = schedule_conv(wl, res.tiling, hw)
+    print(f"instruction stream: {sched.program.counts()}")
+    sched.program.validate_encoding()
+
+    rng = np.random.default_rng(0)
+    inp = rng.integers(-32, 32, (1, 64, 28, 28), dtype=np.int8)
+    wgt = rng.integers(-8, 8, (128, 64, 3, 3), dtype=np.int8)
+    out = np.zeros((1, 128, 28, 28), np.int8)
+    FSim(hw, {"inp": inp, "wgt": wgt, "out": out}).run(sched.program)
+    ref = post_op_ref(conv2d_ref(inp, wgt, (1, 1), (1, 1)), "clip_shift")
+    print(f"fsim matches int8 oracle: {np.array_equal(out, ref)}")
+
+    ts = run_tsim(sched.program, hw)
+    print(f"tsim: {ts.total_cycles} cycles, "
+          f"{wl.macs/ts.total_cycles:.0f} MACs/cycle")
+    print(utilization_ascii(ts, width=84))
+
+    print("\ndesign-space sweep (resnet-18, quick)...")
+    pts = sweep(resnet(18), reference=make_config(), spad_scales=(1,),
+                mem_widths=(8, 64))
+    for p in pareto(pts):
+        print(f"  {p.label:22s} area {p.area:6.2f}x  cycles {p.cycles/1e6:.2f}M")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""HLO-text analysis: collective-byte accounting for the roofline.
+
+`collective_bytes` is not in XLA's cost_analysis, so we parse the compiled
+module text and sum operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (async -start variants
+counted once; -done ignored). Shapes in a post-SPMD module are per-partition,
+so the sums are per-chip, matching cost_analysis conventions.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+"
+                     r"([\w\-]+)(?:\.\d+)?\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string: 'f32[16,128]{1,0}' or a tuple thereof."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def to_dict(self) -> dict:
+        return {"total_bytes": self.total_bytes,
+                "bytes_by_kind": dict(self.bytes_by_kind),
+                "count_by_kind": dict(self.count_by_kind)}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    # symbol table: op name -> result type string (operand sizes resolve here)
+    symbols: dict[str, str] = {}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if m:
+            symbols[m.group(1)] = m.group(2)
+        else:
+            # parameters etc: "%param.3 = f32[...]{...} parameter(0)"
+            pm = re.match(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)", ln)
+            if pm:
+                symbols.setdefault(pm.group(1), pm.group(2))
+
+    stats = CollectiveStats()
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        opcode = m.group(3)
+        kind = None
+        for c in COLLECTIVES:
+            if opcode == c or opcode == c + "-start":
+                kind = c
+                break
+        if kind is None:
+            continue
+        # operand list: text between the first '(' after opcode and matching ')'
+        start = ln.index(opcode) + len(opcode)
+        depth = 0
+        args = ""
+        for ch in ln[start:]:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if depth >= 1:
+                args += ch
+        b = 0
+        for om in _OPERAND_RE.finditer(args):
+            b += shape_bytes(symbols.get(om.group(1), ""))
+        if b == 0:
+            b = shape_bytes(m.group(2))  # fall back to result size
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + b
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats

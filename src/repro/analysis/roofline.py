@@ -1,0 +1,184 @@
+"""Roofline table from dry-run JSONs (deliverable g).
+
+Scan-loop reconciliation (DESIGN.md §6): XLA's cost_analysis counts a while
+body once, so for the single-pod mesh we compile depth-1/depth-2 variants and
+extrapolate:
+
+    per_group  = cost(d2) - cost(d1)
+    total      = cost(full) + (n_groups - 1) * per_group
+    (x grad_accum for train cells — the microbatch scan is also a loop; the
+     optimizer tail is over-counted by the same factor, < 1% of step flops)
+
+MODEL_FLOPS is the analytic useful-work count (6*N_active*tokens for train,
+2*N_active*tokens for prefill/decode, + attention term), so
+MODEL_FLOPS / HLO_FLOPS exposes remat/dispatch waste per cell.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.configs.base import SHAPES, ModelConfig
+from repro.core.roofline import RooflineTerms, tpu_terms
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """Analytic useful FLOPs per step (per the assignment's MODEL_FLOPS)."""
+    shape = SHAPES[shape_name]
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0
+        ctx = shape.seq_len
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2.0
+        ctx = shape.seq_len
+    else:
+        tokens = shape.global_batch
+        mult = 2.0
+        ctx = shape.seq_len
+    total = mult * n_act * tokens
+    # attention reads/writes: 4 * ctx_eff * H * hd flops per token per attn layer
+    attn_layers = [k for k in cfg.layer_kinds if k.startswith("attn")]
+    for kind in attn_layers:
+        if shape.kind == "decode":
+            ctx_eff = ctx if kind == "attn_global" else min(
+                ctx, cfg.sliding_window or ctx)
+        else:
+            ctx_eff = (ctx / 2 if kind == "attn_global"
+                       else min(ctx, cfg.sliding_window or ctx) / 2)
+        fwd = 4.0 * ctx_eff * cfg.n_heads * cfg.head_dim * tokens
+        total += (3.0 if shape.kind == "train" else 1.0) * fwd
+    return total
+
+
+@dataclass
+class CellRoofline:
+    arch: str
+    shape: str
+    chips: int
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    coll_bytes_per_chip: float
+    terms: RooflineTerms
+    model_flops_total: float
+    peak_hbm_gib: float
+    compile_s: float
+    extrapolated: bool
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops_total / max(1.0, self.flops_per_chip * self.chips)
+
+    def row(self) -> dict:
+        t = self.terms
+        return {
+            "arch": self.arch, "shape": self.shape, "chips": self.chips,
+            "compute_s": t.compute_s, "memory_s": t.memory_s,
+            "collective_s": t.collective_s, "dominant": t.dominant,
+            "bound_s": t.bound_s,
+            "roofline_fraction": t.fraction_of_roofline(),
+            "model_flops": self.model_flops_total,
+            "hlo_flops_per_chip": self.flops_per_chip,
+            "useful_ratio": self.useful_ratio,
+            "peak_hbm_gib": self.peak_hbm_gib,
+        }
+
+
+def _load(out_dir: str, arch: str, shape: str, mesh: str, depth: str) -> Optional[dict]:
+    path = os.path.join(out_dir, f"{arch}__{shape}__{mesh}__{depth}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _coll(d: dict) -> float:
+    return float(d["collectives"]["total_bytes"])
+
+
+def cell_roofline(out_dir: str, arch: str, shape: str,
+                  cfg: ModelConfig) -> Optional[CellRoofline]:
+    full = _load(out_dir, arch, shape, "sp", "full")
+    if full is None or "error" in full:
+        return None
+    d1 = _load(out_dir, arch, shape, "sp", "d1")
+    d2 = _load(out_dir, arch, shape, "sp", "d2")
+    G = full["n_groups"]
+    accum = cfg.grad_accum if SHAPES[shape].kind == "train" else 1
+
+    extrapolated = bool(d1 and d2 and "error" not in d1 and "error" not in d2
+                        and G > 1)
+    if extrapolated:
+        pg_f = d2["flops_per_device"] - d1["flops_per_device"]
+        pg_b = d2["hbm_bytes_per_device"] - d1["hbm_bytes_per_device"]
+        pg_c = _coll(d2) - _coll(d1)
+        flops = full["flops_per_device"] + (G - 1) * max(0.0, pg_f)
+        hbm = full["hbm_bytes_per_device"] + (G - 1) * max(0.0, pg_b)
+        coll = _coll(full) + (G - 1) * max(0.0, pg_c)
+    else:
+        flops = full["flops_per_device"] * max(1, G)
+        hbm = full["hbm_bytes_per_device"] * max(1, G)
+        coll = _coll(full) * max(1, G)
+    flops *= accum
+    hbm *= accum
+    coll *= accum
+
+    return CellRoofline(
+        arch=arch, shape=shape, chips=full["chips"],
+        flops_per_chip=flops, hbm_bytes_per_chip=hbm,
+        coll_bytes_per_chip=coll,
+        terms=tpu_terms(flops, hbm, coll),
+        model_flops_total=model_flops(cfg, shape),
+        peak_hbm_gib=full["memory"]["peak_est_bytes"] / 2 ** 30,
+        compile_s=full.get("compile_s", 0.0),
+        extrapolated=extrapolated,
+    )
+
+
+def full_table(out_dir: str) -> list[CellRoofline]:
+    from repro.configs import ARCHS
+    from repro.launch.dryrun import runnable_cells
+    rows = []
+    for arch, shape in runnable_cells():
+        r = cell_roofline(out_dir, arch, shape, ARCHS[arch])
+        if r is not None:
+            rows.append(r)
+    return rows
+
+
+def format_table(rows: list[CellRoofline]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'coll_s':>10s} {'dom':>10s} {'roofl%':>7s} {'useful%':>8s} "
+           f"{'HBM GiB':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        t = r.terms
+        lines.append(
+            f"{r.arch:22s} {r.shape:12s} {t.compute_s:10.4f} {t.memory_s:10.4f} "
+            f"{t.collective_s:10.4f} {t.dominant:>10s} "
+            f"{t.fraction_of_roofline()*100:6.1f}% "
+            f"{min(9.999, r.useful_ratio)*100:7.1f}% {r.peak_hbm_gib:8.2f}")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+    rows = full_table(args.dir)
+    print(format_table(rows))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump([r.row() for r in rows], f, indent=2)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

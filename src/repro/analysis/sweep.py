@@ -1,0 +1,88 @@
+"""Dry-run sweep orchestrator: every (arch x shape) x {16x16, 2x16x16} cell.
+
+Each cell runs in a subprocess (fresh XLA, bounded memory). Single-pod cells
+also compile depth-1 / depth-2 variants for the scan-extrapolated roofline
+(analysis/roofline.py). Results land in <out>/cellname.json.
+
+  PYTHONPATH=src python -m repro.analysis.sweep --out results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+
+def cell_jobs(single_depths=("full", "d1", "d2")) -> list[dict]:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", ".."))
+    from repro.launch.dryrun import runnable_cells
+    jobs = []
+    for arch, shape in runnable_cells():
+        for depth in single_depths:
+            jobs.append({"arch": arch, "shape": shape, "multi_pod": False,
+                         "depth": depth})
+        jobs.append({"arch": arch, "shape": shape, "multi_pod": True,
+                     "depth": "full"})
+    return jobs
+
+
+def job_tag(j: dict) -> str:
+    return (f"{j['arch']}__{j['shape']}__"
+            f"{'mp' if j['multi_pod'] else 'sp'}__{j['depth']}")
+
+
+def run_job(j: dict, out_dir: str, timeout: int = 1800) -> dict:
+    tag = job_tag(j)
+    out = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(out):
+        with open(out) as f:
+            return json.load(f)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", j["arch"], "--shape", j["shape"],
+           "--depth", j["depth"], "--out", out]
+    if j["multi_pod"]:
+        cmd.append("--multi-pod")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    t0 = time.time()
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout,
+                          env=env)
+    if proc.returncode != 0:
+        err = {"arch": j["arch"], "shape": j["shape"], "depth": j["depth"],
+               "mesh": "2x16x16" if j["multi_pod"] else "16x16",
+               "error": proc.stderr[-4000:], "wall_s": time.time() - t0}
+        with open(out + ".err", "w") as f:
+            json.dump(err, f, indent=2)
+        return err
+    with open(out) as f:
+        return json.load(f)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--only-arch", default=None)
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+    jobs = cell_jobs()
+    if args.only_arch:
+        jobs = [j for j in jobs if j["arch"] == args.only_arch]
+    t0 = time.time()
+    n_err = 0
+    for i, j in enumerate(jobs):
+        r = run_job(j, args.out, timeout=args.timeout)
+        ok = "error" not in r
+        n_err += 0 if ok else 1
+        print(f"[{i+1}/{len(jobs)}] {job_tag(j):55s} "
+              f"{'OK' if ok else 'FAIL'}  ({time.time()-t0:.0f}s total)",
+              flush=True)
+    print(f"done: {len(jobs)-n_err}/{len(jobs)} ok")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,2 @@
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+from repro.configs.archs import ARCHS, SMOKE_ARCHS, smoke_variant

@@ -1,0 +1,90 @@
+"""Design-space exploration -> area/cycle pareto (paper §IV.F, Fig 13).
+
+Sweeps GEMM shape (the paper's 4x4 / 5x5 / 6x6 log2 "MAC shape" ovals),
+memory interface width (8..64 B/cycle) and scratchpad sizing, runs the
+workload through TPS + scheduler + tsim for each feasible configuration, and
+returns all points plus the pareto frontier.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.area_model import scaled_area
+from repro.vta.isa import VTAConfig
+from repro.vta.network import run_network
+
+
+@dataclass
+class DSEPoint:
+    hw: VTAConfig
+    cycles: int
+    area: float                 # scaled to reference
+    dram_bytes: int
+    label: str = ""
+
+    @property
+    def mac_shape(self) -> str:
+        return f"{self.hw.log_block_in}x{self.hw.log_block_out}"
+
+
+def make_config(log_block: int = 4, mem_width: int = 8, spad_scale: int = 1,
+                batch_log: int = 0, pipelined: bool = True) -> VTAConfig:
+    """One DSE candidate. spad_scale multiplies every scratchpad (pow2)."""
+    import math
+    s = int(math.log2(spad_scale))
+    # scale wgt/acc with block area so depth (tiles held) stays comparable
+    blk = log_block - 4
+    return VTAConfig(
+        log_batch=batch_log,
+        log_block_in=log_block,
+        log_block_out=log_block,
+        log_inp_buff=15 + s + blk + batch_log,
+        log_wgt_buff=18 + s + 2 * blk,
+        log_acc_buff=17 + s + blk + batch_log,
+        log_uop_buff=15 + s,
+        mem_width_bytes=mem_width,
+        gemm_ii=1 if pipelined else 4,
+        alu_ii=1 if pipelined else 4,
+    )
+
+
+def sweep(layers, *, reference: Optional[VTAConfig] = None,
+          log_blocks=(4, 5, 6), mem_widths=(8, 16, 32, 64),
+          spad_scales=(1, 2, 4), batch_logs=(0,), network: str = "resnet18",
+          progress=None) -> list[DSEPoint]:
+    reference = reference or make_config()
+    points: list[DSEPoint] = []
+    for lb in log_blocks:
+        for mw in mem_widths:
+            for ss in spad_scales:
+                for bl in batch_logs:
+                    hw = make_config(lb, mw, ss, bl)
+                    if hw.validate():
+                        continue
+                    try:
+                        rep = run_network(network, layers, hw)
+                    except (AssertionError, RuntimeError, ValueError):
+                        continue      # infeasible point (sparse design space, §V)
+                    pt = DSEPoint(hw=hw, cycles=rep.total_cycles,
+                                  area=scaled_area(hw, reference),
+                                  dram_bytes=rep.total_dram_bytes,
+                                  label=f"b{1 << bl}x{1 << lb}x{1 << lb}"
+                                        f"/mw{mw}/sp{ss}")
+                    points.append(pt)
+                    if progress:
+                        progress(pt)
+    return points
+
+
+def pareto(points: list[DSEPoint]) -> list[DSEPoint]:
+    """Lower-left frontier: min cycles for given area."""
+    pts = sorted(points, key=lambda p: (p.area, p.cycles))
+    front: list[DSEPoint] = []
+    best = float("inf")
+    for p in pts:
+        if p.cycles < best:
+            front.append(p)
+            best = p.cycles
+    return front

@@ -1,0 +1,76 @@
+"""Roofline model — both planes.
+
+VTA plane (paper Fig 2): Ops/Cycle vs Ops/Byte, compute bound = 2*MACs
+ops/cycle, memory bound = mem_width_bytes/cycle * intensity.
+
+TPU plane (deliverable g): the three-term time roofline used by the dry-run
+analysis — compute / HBM / ICI terms per chip; see analysis/roofline.py for
+the HLO-derived pipeline. Hardware constants here are the single source of
+truth (TPU v5e-class, per the assignment):
+    197 TFLOP/s bf16 per chip | 819 GB/s HBM | ~50 GB/s/link ICI (x4 links)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.vta.isa import VTAConfig
+
+# --- TPU v5e-class constants (assignment-specified) ---
+PEAK_FLOPS = 197e12            # bf16 FLOP/s per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW_PER_LINK = 50e9         # bytes/s per link
+ICI_LINKS = 4                  # torus links usable per chip (2D mesh: 4)
+
+
+@dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Lower-bound step time (perfectly overlapped terms)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def serial_s(self) -> float:
+        return self.compute_s + self.memory_s + self.collective_s
+
+    def fraction_of_roofline(self) -> float:
+        """compute_time / bound: 1.0 == MXU-limited with all else hidden."""
+        return self.compute_s / max(self.bound_s, 1e-30)
+
+
+def tpu_terms(flops_per_chip: float, hbm_bytes_per_chip: float,
+              coll_bytes_per_chip: float, *, ici_links: int = ICI_LINKS) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops_per_chip / PEAK_FLOPS,
+        memory_s=hbm_bytes_per_chip / HBM_BW,
+        collective_s=coll_bytes_per_chip / (ICI_BW_PER_LINK * ici_links),
+    )
+
+
+# --------------------------------------------------------------------------
+# VTA roofline (paper Fig 2)
+# --------------------------------------------------------------------------
+def vta_bounds(hw: VTAConfig):
+    """Returns (peak_ops_per_cycle, bytes_per_cycle)."""
+    return 2.0 * hw.macs, float(hw.mem_width_bytes)
+
+
+def vta_roofline_point(macs: int, cycles: int, dram_bytes: int) -> dict:
+    ops = 2.0 * macs
+    return {"ops_per_byte": ops / max(1, dram_bytes),
+            "ops_per_cycle": ops / max(1, cycles)}
+
+
+def vta_attainable(hw: VTAConfig, ops_per_byte: float) -> float:
+    peak, bw = vta_bounds(hw)
+    return min(peak, bw * ops_per_byte)

@@ -1,0 +1,140 @@
+import os
+if "--xla" not in str(os.environ.get("XLA_FLAGS", "")):
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""SPS — Sharding Parameter Search (beyond-paper, TPS lifted to the mesh).
+
+The paper's TPS formulation:  min DRAM bytes  s.t. scratchpad capacities.
+SPS:                          min collective bytes  s.t. per-chip HBM.
+
+Candidates are logical-rule-table variants (sequence parallelism on/off,
+FSDP axis choice, expert placement, batch mapping); each is lowered+compiled
+like a dry-run cell and scored by (collective bytes, HLO bytes) with a hard
+HBM-capacity constraint — an exhaustive enumeration over a small discrete
+space, exactly the paper's search shape.
+
+  PYTHONPATH=src python -m repro.core.sharding_search \
+      --arch qwen2.5-32b --shape train_4k
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+HBM_CAP_GIB = 16.0   # v5e-class
+
+
+def candidate_tables() -> dict:
+    """Named rule-table variants (deltas on DEFAULT_RULES)."""
+    return {
+        "baseline": {},
+        "no_seq_parallel": {"seq": ()},
+        "fsdp_off": {"d_model": ()},
+        "seq_on_data": {"seq": ("data",), "d_model": ("model",)},
+        "experts_on_data": {"experts": ("data",)},
+        "batch_data_only": {"batch": ("data",)},
+    }
+
+
+@dataclass
+class SPSResult:
+    name: str
+    coll_bytes: float
+    hbm_bytes: float
+    flops: float
+    peak_gib: float
+    feasible: bool
+    compile_s: float
+
+    def key(self):
+        return (not self.feasible, self.coll_bytes, self.hbm_bytes)
+
+
+def evaluate(arch: str, shape: str, overrides: dict, name: str) -> SPSResult:
+    import jax
+    from repro.analysis.hlo import parse_collectives
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import input_specs
+    from repro.models.registry import build_model
+    from repro.sharding.logical import DEFAULT_RULES, LogicalRules, use_rules
+    from repro.serve.engine import make_decode_step, make_prefill_step
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.step import (abstract_opt_state, abstract_params,
+                                  make_train_step)
+    from repro.configs import ARCHS, SHAPES
+
+    cfg = ARCHS[arch]
+    mesh = make_production_mesh()
+    rules = LogicalRules(mesh)
+    rules.rules.update(overrides)
+    t0 = time.time()
+    with mesh, use_rules(rules):
+        model = build_model(cfg)
+        specs = input_specs(model, shape, rules)
+        kind = SHAPES[shape].kind
+        if kind == "train":
+            fn = jax.jit(make_train_step(model, AdamWConfig()),
+                         donate_argnums=(0, 1))
+            args = (abstract_params(model, rules),
+                    abstract_opt_state(model, rules), specs["batch"])
+        elif kind == "prefill":
+            fn = jax.jit(make_prefill_step(model))
+            args = (abstract_params(model, rules), specs["batch"])
+        else:
+            fn = jax.jit(make_decode_step(model), donate_argnums=(2,))
+            args = (abstract_params(model, rules), specs["batch"],
+                    specs["caches"], specs["pos"])
+        compiled = fn.lower(*args).compile()
+    mem = compiled.memory_analysis()
+    peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 2 ** 30
+    cost = compiled.cost_analysis()
+    colls = parse_collectives(compiled.as_text())
+    return SPSResult(name=name, coll_bytes=float(colls.total_bytes),
+                     hbm_bytes=float(cost.get("bytes accessed", 0.0)),
+                     flops=float(cost.get("flops", 0.0)), peak_gib=peak,
+                     feasible=peak <= HBM_CAP_GIB,
+                     compile_s=time.time() - t0)
+
+
+def sps_search(arch: str, shape: str, candidates: Optional[dict] = None,
+               verbose: bool = True) -> list[SPSResult]:
+    candidates = candidates or candidate_tables()
+    results = []
+    for name, ov in candidates.items():
+        try:
+            r = evaluate(arch, shape, ov, name)
+        except Exception as e:   # infeasible layouts are data, not crashes
+            r = SPSResult(name, float("inf"), float("inf"), 0.0, float("inf"),
+                          False, 0.0)
+            if verbose:
+                print(f"  {name:20s} FAILED: {type(e).__name__}: {e}")
+        results.append(r)
+        if verbose and r.compile_s:
+            print(f"  {name:20s} coll={r.coll_bytes/2**20:9.1f}MiB "
+                  f"hbm={r.hbm_bytes/2**30:7.2f}GiB peak={r.peak_gib:6.2f}GiB "
+                  f"{'ok' if r.feasible else 'OVER-CAP'} ({r.compile_s:.0f}s)")
+    results.sort(key=lambda r: r.key())
+    if verbose:
+        print(f"  SPS winner: {results[0].name}")
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    res = sps_search(args.arch, args.shape)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump([r.__dict__ for r in res], f, indent=2)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

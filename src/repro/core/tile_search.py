@@ -1,0 +1,133 @@
+"""TPS-for-BlockSpecs: the paper's Appendix-A formulation lifted to TPU.
+
+VTA TPS minimizes DRAM->scratchpad bytes subject to scratchpad capacities.
+The TPU analogue minimizes HBM->VMEM bytes subject to the VMEM budget, over
+Pallas matmul block shapes (bm, bn, bk):
+
+    traffic(bm, bn, bk) = M*K * ceil(N/bn)      # x re-read per n-tile
+                        + K*N * ceil(M/bm)      # w re-read per m-tile
+                        + 2 * M*N               # out write (+ f32 acc read)
+    vmem(bm, bn, bk)    = (bm*bk + bk*bn) * buf * e_in + bm*bn * e_acc
+
+with MXU/VPU alignment constraints (last dim multiple of 128, second-minor
+multiple of 8/16 by dtype) standing in for VTA's BLOCK divisibility.
+`buf` is the pipeline multi-buffering factor (2 = double buffering — the
+paper's virtual threads, automatic in Pallas grid pipelining).
+
+The same helper sizes flash-attention and elementwise blocks.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+VMEM_BYTES = 64 * 1024 * 1024     # usable VMEM budget per core (conservative)
+LANE = 128                        # MXU/VPU lane width
+
+
+def _sublane(dtype_bytes: int) -> int:
+    return {4: 8, 2: 16, 1: 32}.get(dtype_bytes, 8)
+
+
+@dataclass(frozen=True)
+class GemmTile:
+    bm: int
+    bn: int
+    bk: int
+    traffic_bytes: float
+    vmem_bytes: int
+
+    def grid(self, M: int, N: int, K: int) -> tuple:
+        return (-(-M // self.bm), -(-N // self.bn), -(-K // self.bk))
+
+
+def _candidates(dim: int, align: int, cap: int) -> list[int]:
+    """Aligned tile sizes covering dim (powers of two of align, plus dim)."""
+    out = []
+    c = align
+    while c < min(dim, cap):
+        out.append(c)
+        c *= 2
+    out.append(min(-(-dim // align) * align, max(align, cap)))
+    d_aligned = -(-dim // align) * align
+    if d_aligned <= cap and d_aligned not in out:
+        out.append(d_aligned)
+    return sorted(set(x for x in out if x <= cap))
+
+
+def select_gemm_tile(M: int, N: int, K: int, *, in_bytes: int = 2,
+                     acc_bytes: int = 4, vmem: int = VMEM_BYTES,
+                     buffers: int = 2) -> GemmTile:
+    """Exhaustive TPS-style enumeration of (bm, bn, bk)."""
+    sub = _sublane(in_bytes)
+    bms = _candidates(M, sub, 4096)
+    bns = _candidates(N, LANE, 4096)
+    bks = _candidates(K, LANE, 8192)
+    best: Optional[GemmTile] = None
+    for bm in bms:
+        for bn in bns:
+            for bk in bks:
+                use = (bm * bk + bk * bn) * buffers * in_bytes \
+                    + bm * bn * acc_bytes
+                if use > vmem:
+                    continue
+                traffic = (M * K * -(-N // bn) + K * N * -(-M // bm)) * in_bytes \
+                    + 2 * M * N * acc_bytes
+                cand = GemmTile(bm, bn, bk, traffic, use)
+                if best is None or (cand.traffic_bytes, -cand.vmem_bytes) < \
+                        (best.traffic_bytes, -best.vmem_bytes):
+                    best = cand
+    if best is None:
+        # minimal aligned tile (the "fallback schedule": compilable anywhere)
+        best = GemmTile(sub, LANE, LANE,
+                        float((M * K * -(-N // LANE) + K * N * -(-M // sub))
+                              * in_bytes + 2 * M * N * acc_bytes),
+                        (sub * LANE + LANE * LANE) * buffers * in_bytes
+                        + sub * LANE * acc_bytes)
+    return best
+
+
+@dataclass(frozen=True)
+class AttnTile:
+    bq: int
+    bkv: int
+    vmem_bytes: int
+
+
+def select_attention_tile(seq_q: int, seq_k: int, head_dim: int, *,
+                          in_bytes: int = 2, vmem: int = VMEM_BYTES,
+                          buffers: int = 2) -> AttnTile:
+    """Flash-attention block sizing under the VMEM budget (q-block resident,
+    kv streamed; scores bq*bkv in f32)."""
+    best = None
+    for bq in _candidates(seq_q, _sublane(in_bytes), 2048):
+        for bkv in _candidates(seq_k, LANE, 4096):
+            use = (bq * head_dim + 2 * bkv * head_dim) * buffers * in_bytes \
+                + bq * bkv * 4 + 2 * bq * head_dim * 4
+            if use > vmem:
+                continue
+            # traffic ~ K,V re-read per q block: minimize #q blocks, then #kv
+            traffic = seq_k * head_dim * 2 * -(-seq_q // bq)
+            cand = (traffic, -bq * bkv, AttnTile(bq, bkv, use))
+            if best is None or cand[:2] < best[:2]:
+                best = cand
+    assert best is not None
+    return best[2]
+
+
+def select_elementwise_block(shape: tuple, n_operands: int = 2, *,
+                             in_bytes: int = 4, vmem: int = VMEM_BYTES,
+                             buffers: int = 2) -> tuple:
+    """Row-blocked VPU tiling for ALU-style kernels: (rows, LANE-aligned cols)."""
+    rows = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
+    cols = shape[-1]
+    cols_t = min(-(-cols // LANE) * LANE, 65536)
+    budget = vmem // (buffers * (n_operands + 1) * in_bytes)
+    rows_t = max(1, min(rows, budget // max(1, cols_t)))
+    sub = _sublane(in_bytes)
+    if rows_t > sub:
+        rows_t = rows_t // sub * sub
+    return (rows_t, cols_t)

@@ -1,0 +1,69 @@
+"""VPU elementwise kernel — the VTA ALU analogue (paper §IV.A.2, §IV.D.3).
+
+One fused pass computes  y = clip((op(x, y|imm)) * 2^-shift, -c, c)  over
+LANE-aligned VMEM blocks: the pipelined-ALU + new-clip-instruction insight
+(do the whole requantize/activation pattern in a single initiation) mapped to
+a single VPU kernel instead of multiple ALU instruction passes.
+
+Ops: add | mul | max | min  (mul with a second operand is the paper's new
+element-wise multiply that enables depthwise convolution on the ALU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+
+from repro.core.tile_search import select_elementwise_block
+
+
+def _alu_kernel(x_ref, y_ref, o_ref, *, op: str, imm: float, use_imm: bool,
+                shift: int, clip: Optional[float]):
+    a = x_ref[...].astype(jnp.float32)
+    b = jnp.float32(imm) if use_imm else y_ref[...].astype(jnp.float32)
+    if op == "add":
+        r = a + b
+    elif op == "mul":
+        r = a * b
+    elif op == "max":
+        r = jnp.maximum(a, b)
+    elif op == "min":
+        r = jnp.minimum(a, b)
+    else:
+        raise ValueError(op)
+    if shift:
+        r = r * (2.0 ** -shift)
+    if clip is not None:
+        r = jnp.clip(r, -clip, clip)
+    o_ref[...] = r.astype(o_ref.dtype)
+
+
+def alu(x, y=None, *, op: str = "add", imm: float = 0.0, shift: int = 0,
+        clip: Optional[float] = None, interpret: bool = True):
+    """Fused elementwise op over arbitrary-rank x (blocked on trailing dim)."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    use_imm = y is None
+    y2 = x2 if use_imm else y.reshape(-1, shape[-1])
+    R, C = x2.shape
+    br, bc = select_elementwise_block((R, C), in_bytes=x.dtype.itemsize)
+    br, bc = min(br, R), min(bc, C)
+    while R % br:
+        br -= 1
+    while C % bc:
+        bc -= 1
+    kernel = functools.partial(_alu_kernel, op=op, imm=imm, use_imm=use_imm,
+                               shift=shift, clip=clip)
+    out = pl.pallas_call(
+        kernel,
+        grid=(R // br, C // bc),
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+                  pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+        interpret=interpret,
+    )(x2, y2)
+    return out.reshape(shape)

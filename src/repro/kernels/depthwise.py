@@ -1,0 +1,63 @@
+"""Depthwise-conv Pallas kernel (paper §IV.D.3 adapted to the VPU).
+
+The paper routes depthwise convolution to the VTA ALU via its new element-wise
+multiply opcode. The TPU analogue: depthwise conv has no channel reduction, so
+the MXU is wasted — run it on the VPU as KH*KW shifted multiply-accumulates
+over an NHWC block resident in VMEM. The channel dim is LANE-blocked; each
+grid cell owns one (batch, channel-block) image whose spatial extent stays in
+VMEM (fine up to ~224x224x128xf32 = 25 MiB; larger images block over channels
+harder).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+
+LANE = 128
+
+
+def _dw_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, stride: int,
+               oh: int, ow: int):
+    x = x_ref[...].astype(jnp.float32)          # (1, Hp, Wp, bc)
+    w = w_ref[...].astype(jnp.float32)          # (kh, kw, bc)
+    acc = jnp.zeros(o_ref.shape, jnp.float32)   # (1, oh, ow, bc)
+    for dy in range(kh):
+        for dx in range(kw):
+            sub = jax.lax.slice(
+                x, (0, dy, dx, 0),
+                (1, dy + (oh - 1) * stride + 1, dx + (ow - 1) * stride + 1,
+                 x.shape[3]),
+                (1, stride, stride, 1))
+            acc = acc + sub * w[dy, dx]
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def depthwise_conv(x, w, *, stride: int = 1, pad: int = 0,
+                   interpret: bool = True):
+    """NHWC depthwise conv. x (B,H,W,C); w (KH,KW,C)."""
+    B, H, W, C = x.shape
+    KH, KW, _ = w.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    Hp, Wp = H + 2 * pad, W + 2 * pad
+    OH = (Hp - KH) // stride + 1
+    OW = (Wp - KW) // stride + 1
+    bc = min(LANE, C)
+    while C % bc:
+        bc //= 2
+
+    kernel = functools.partial(_dw_kernel, kh=KH, kw=KW, stride=stride,
+                               oh=OH, ow=OW)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, C // bc),
+        in_specs=[
+            pl.BlockSpec((1, Hp, Wp, bc), lambda b, c: (b, 0, 0, c)),
+            pl.BlockSpec((KH, KW, bc), lambda b, c: (0, 0, c)),
+        ],
+        out_specs=pl.BlockSpec((1, OH, OW, bc), lambda b, c: (b, 0, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((B, OH, OW, C), x.dtype),
+        interpret=interpret,
+    )(xp, w)

@@ -1,0 +1,119 @@
+"""Flash-attention Pallas kernel (beyond-paper hot-spot kernel).
+
+The paper's technique is tiling-for-scratchpad; attention at 32k context is
+the transformer workload where that insight bites hardest on TPU, so we apply
+the same TPS discipline: q/kv block sizes from core/tile_search.py's
+VMEM-constrained search, online softmax so no (Sq, Sk) tensor ever
+materializes, causal/sliding-window masking, and the gemma2 logit softcap
+fused in-kernel (the VTA `clip` pattern again).
+
+GQA is expressed through the kv BlockSpec index map (q-head -> kv-head), so
+grouped heads share kv DMAs instead of materializing repeated kv.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.tile_search import select_attention_tile
+
+NEG_INF = -2.0e38
+LANE = 128
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               n_k: int, scale: float, causal: bool, window: Optional[int],
+               softcap: Optional[float], bq: int, bk: int, sq: int, sk: int):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)              # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jnp.dot(q * scale, k.T, preferred_element_type=jnp.float32)
+
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    i = pl.program_id(2)
+    qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + (sk - sq)
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, :1]                            # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # rows with no visible key yet keep m = NEG_INF; avoid exp overflow
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+    l_new = l_ref[:, :1] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == n_k - 1)
+    def _final():
+        denom = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    block_q: Optional[int] = None,
+                    block_k: Optional[int] = None,
+                    interpret: bool = True):
+    """q (B,H,Sq,D); k/v (B,KV,Sk,D) with H a multiple of KV (GQA)."""
+    B, H, Sq, D = q.shape
+    _, KV, Sk, _ = k.shape
+    assert H % KV == 0
+    G = H // KV
+    scale = D ** -0.5 if scale is None else scale
+    tile = select_attention_tile(Sq, Sk, D, in_bytes=q.dtype.itemsize)
+    bq = min(block_q or tile.bq, Sq)
+    bk = min(block_k or tile.bkv, Sk)
+    while Sq % bq:
+        bq //= 2
+    while Sk % bk:
+        bk //= 2
+    bq, bk = max(bq, 1), max(bk, 1)
+    n_k = Sk // bk
+
+    kernel = functools.partial(
+        _fa_kernel, n_k=n_k, scale=scale, causal=causal, window=window,
+        softcap=softcap, bq=bq, bk=bk, sq=Sq, sk=Sk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, Sq // bq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j, g=G: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j, g=G: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, LANE), jnp.float32),   # running max
+            pltpu.VMEM((bq, LANE), jnp.float32),   # running denom
+            pltpu.VMEM((bq, D), jnp.float32),      # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,72 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+`interpret` defaults to True off-TPU (CPU validation per the kernel contract)
+and False on TPU. Tiles come from core/tile_search.py (TPS-for-BlockSpecs)
+unless overridden.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import alu as _alu
+from repro.kernels import depthwise as _dw
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gemm as _gemm
+from repro.kernels import pool2d as _pool
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("act", "clip", "interpret"))
+def gemm(x, w, bias=None, *, act: Optional[str] = None,
+         clip: Optional[float] = None, interpret: Optional[bool] = None):
+    return _gemm.gemm(x, w, bias, act=act, clip=clip,
+                      interpret=_default_interpret() if interpret is None
+                      else interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "imm", "shift", "clip",
+                                             "interpret"))
+def alu(x, y=None, *, op: str = "add", imm: float = 0.0, shift: int = 0,
+        clip: Optional[float] = None, interpret: Optional[bool] = None):
+    return _alu.alu(x, y, op=op, imm=imm, shift=shift, clip=clip,
+                    interpret=_default_interpret() if interpret is None
+                    else interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad", "interpret"))
+def depthwise_conv(x, w, *, stride: int = 1, pad: int = 0,
+                   interpret: Optional[bool] = None):
+    return _dw.depthwise_conv(x, w, stride=stride, pad=pad,
+                              interpret=_default_interpret() if interpret is None
+                              else interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride", "pad", "mode",
+                                             "interpret"))
+def pool2d(x, *, k: int, stride: int, pad: int = 0, mode: str = "max",
+           interpret: Optional[bool] = None):
+    return _pool.pool2d(x, k=k, stride=stride, pad=pad, mode=mode,
+                        interpret=_default_interpret() if interpret is None
+                        else interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    block_q: Optional[int] = None,
+                    block_k: Optional[int] = None,
+                    interpret: Optional[bool] = None):
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        block_q=block_q, block_k=block_k,
+        interpret=_default_interpret() if interpret is None else interpret)

@@ -1,0 +1,63 @@
+"""Pooling Pallas kernel with selectable pad value (paper §IV.E / abstract:
+"load with a choice of pad values to support max pooling").
+
+Max pool pads with -inf (the int8 machine pads with INT8_MIN); avg pads with
+0. Same VPU structure as the depthwise kernel: taps are shifted strided
+slices of a VMEM-resident NHWC block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+
+LANE = 128
+
+
+def _pool_kernel(x_ref, o_ref, *, k: int, stride: int, oh: int, ow: int,
+                 mode: str):
+    x = x_ref[...].astype(jnp.float32)
+    acc = None
+    for dy in range(k):
+        for dx in range(k):
+            sub = jax.lax.slice(
+                x, (0, dy, dx, 0),
+                (1, dy + (oh - 1) * stride + 1, dx + (ow - 1) * stride + 1,
+                 x.shape[3]),
+                (1, stride, stride, 1))
+            if acc is None:
+                acc = sub
+            elif mode == "max":
+                acc = jnp.maximum(acc, sub)
+            else:
+                acc = acc + sub
+    if mode == "avg":
+        acc = acc / (k * k)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def pool2d(x, *, k: int, stride: int, pad: int = 0, mode: str = "max",
+           interpret: bool = True):
+    """NHWC pooling. x (B,H,W,C)."""
+    B, H, W, C = x.shape
+    fill = float("-inf") if mode == "max" else 0.0
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)),
+                 constant_values=x.dtype.type(fill) if mode == "max" else 0)
+    Hp, Wp = H + 2 * pad, W + 2 * pad
+    OH = (Hp - k) // stride + 1
+    OW = (Wp - k) // stride + 1
+    bc = min(LANE, C)
+    while C % bc:
+        bc //= 2
+    kernel = functools.partial(_pool_kernel, k=k, stride=stride, oh=OH, ow=OW,
+                               mode=mode)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, C // bc),
+        in_specs=[pl.BlockSpec((1, Hp, Wp, bc), lambda b, c: (b, 0, 0, c))],
+        out_specs=pl.BlockSpec((1, OH, OW, bc), lambda b, c: (b, 0, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((B, OH, OW, C), x.dtype),
+        interpret=interpret,
+    )(xp)

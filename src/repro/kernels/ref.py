@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for every Pallas kernel (the `fsim` of the TPU plane)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w, *, bias=None, act: Optional[str] = None,
+               clip: Optional[float] = None):
+    """x (M,K) @ w (K,N) in f32 accum, fused epilogue (bias/act/clip)."""
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if act == "relu":
+        out = jax.nn.relu(out)
+    elif act == "silu":
+        out = jax.nn.silu(out)
+    elif act == "gelu":
+        out = jax.nn.gelu(out, approximate=True)
+    if clip is not None:
+        out = jnp.clip(out, -clip, clip)
+    return out.astype(x.dtype)
+
+
+def alu_ref(x, y=None, *, op: str = "add", imm: float = 0.0,
+            shift: int = 0, clip: Optional[float] = None):
+    """VTA-ALU analogue on f32 tensors: binary/immediate op + optional
+    shift-right (scale by 2^-shift) + optional symmetric clip."""
+    a = x.astype(jnp.float32)
+    b = (y.astype(jnp.float32) if y is not None else jnp.float32(imm))
+    if op == "add":
+        r = a + b
+    elif op == "mul":
+        r = a * b
+    elif op == "max":
+        r = jnp.maximum(a, b)
+    elif op == "min":
+        r = jnp.minimum(a, b)
+    else:
+        raise ValueError(op)
+    if shift:
+        r = r * (2.0 ** -shift)
+    if clip is not None:
+        r = jnp.clip(r, -clip, clip)
+    return r.astype(x.dtype)
+
+
+def depthwise_ref(x, w, *, stride: int = 1, pad: int = 0):
+    """NHWC depthwise conv. x (B,H,W,C); w (KH,KW,C)."""
+    B, H, W, C = x.shape
+    KH, KW, _ = w.shape
+    xp = jnp.pad(x.astype(jnp.float32),
+                 ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    OH = (H + 2 * pad - KH) // stride + 1
+    OW = (W + 2 * pad - KW) // stride + 1
+    out = jnp.zeros((B, OH, OW, C), jnp.float32)
+    for dy in range(KH):
+        for dx in range(KW):
+            sub = xp[:, dy:dy + stride * OH:stride, dx:dx + stride * OW:stride]
+            out = out + sub * w[dy, dx].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def pool2d_ref(x, *, k: int, stride: int, pad: int, mode: str = "max"):
+    """NHWC pooling with explicit pad value (-inf for max, 0 for avg)."""
+    B, H, W, C = x.shape
+    fill = -jnp.inf if mode == "max" else 0.0
+    xp = jnp.full((B, H + 2 * pad, W + 2 * pad, C), fill, jnp.float32)
+    xp = xp.at[:, pad:pad + H, pad:pad + W].set(x.astype(jnp.float32))
+    OH = (H + 2 * pad - k) // stride + 1
+    OW = (W + 2 * pad - k) // stride + 1
+    taps = [xp[:, dy:dy + stride * OH:stride, dx:dx + stride * OW:stride]
+            for dy in range(k) for dx in range(k)]
+    s = jnp.stack(taps)
+    if mode == "max":
+        return jnp.max(s, 0).astype(x.dtype)
+    return (jnp.sum(s, 0) / (k * k)).astype(x.dtype)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                  softcap: Optional[float] = None, scale: Optional[float] = None):
+    """q (B,Sq,H,D); k/v (B,Sk,H,D) (kv heads already expanded). f32 softmax."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = D ** -0.5 if scale is None else scale
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -2.0e38)
+    wts = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", wts, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, lw, u, S0):
+    """Exact sequential RWKV6 recurrence (f32). Shapes (B,T,H,N); u (H,N);
+    S0 (B,H,N,N). Returns (y, S_T)."""
+    def step(S, inp):
+        rt, kt, vt, lwt = inp
+        y = jnp.einsum("bhd,bhde->bhe", rt, S) + \
+            jnp.einsum("bhd,hd,bhd,bhe->bhe", rt, u, kt, vt)
+        S = jnp.exp(lwt)[..., None] * S + kt[..., None] * vt[..., None, :]
+        return S, y
+    xs = tuple(jnp.moveaxis(z, 1, 0) for z in (r, k, v, lw))
+    S_T, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1), S_T

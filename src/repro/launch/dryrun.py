@@ -1,0 +1,189 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax-importing module: jax locks the
+# device count at first backend init. Only the dry-run sees 512 placeholder
+# devices; tests and benches run with the real device count.
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+For each cell this prints/dumps:
+  * compiled.memory_analysis()  — proves the step fits per-chip HBM;
+  * compiled.cost_analysis()    — per-device FLOPs/bytes for the roofline;
+  * collective bytes parsed from the compiled HLO (analysis/hlo.py).
+
+`--depth {full,d1,d2}` compiles reduced-depth variants of the same config
+(1 or 2 scan groups at full width). XLA counts a while-loop body once, so the
+roofline pipeline extrapolates per-group cost as cost(d2) - cost(d1) and
+total ~= cost(full) + (n_groups - 1) * per_group (see DESIGN.md §6 and
+analysis/roofline.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k \
+      [--multi-pod] [--depth full|d1|d2] [--out out.json] [--save-hlo dir]
+  python -m repro.launch.dryrun --list-cells
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+
+def runnable_cells() -> list[tuple[str, str]]:
+    """The assigned (arch x shape) grid, with the long_500k skip rule."""
+    from repro.configs import ARCHS, SHAPES
+    cells = []
+    for arch, cfg in ARCHS.items():
+        for shape in SHAPES:
+            if shape == "long_500k" and not cfg.long_context_capable:
+                continue   # pure full-attention archs skip (DESIGN.md §4)
+            cells.append((arch, shape))
+    return cells
+
+
+def parse_overrides(pairs: list[str]) -> dict:
+    """--set key=value config overrides (int/float/bool/str inferred)."""
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        if v in ("true", "True", "false", "False"):
+            out[k] = v.lower() == "true"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+    return out
+
+
+def build_cell(arch: str, shape_name: str, depth: str, overrides=None):
+    from repro.configs import ARCHS, SHAPES
+    cfg = ARCHS[arch]
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    if depth != "full":
+        # depth probes are UNROLLED so cost_analysis sees every layer (a
+        # lax.scan body is counted once regardless of trip count)
+        k = {"d1": 1, "d2": 2}[depth]
+        cfg = cfg.replace(n_layers=len(cfg.pattern) * k, unroll_layers=True)
+    return cfg, SHAPES[shape_name]
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             depth: str = "full", save_hlo: str | None = None,
+             verbose: bool = True, overrides: dict | None = None) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis.hlo import parse_collectives
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import input_specs
+    from repro.models.registry import build_model
+    from repro.sharding.logical import LogicalRules, use_rules
+    from repro.serve.engine import make_decode_step, make_prefill_step
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.step import (abstract_opt_state, abstract_params,
+                                  make_train_step)
+
+    cfg, shape = build_cell(arch, shape_name, depth, overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = LogicalRules(mesh)
+    t0 = time.time()
+    with mesh, use_rules(rules):
+        model = build_model(cfg)
+        specs = input_specs(model, shape_name, rules)
+        if shape.kind == "train":
+            step = make_train_step(model, AdamWConfig())
+            args = (abstract_params(model, rules),
+                    abstract_opt_state(model, rules), specs["batch"])
+            jitted = jax.jit(step, donate_argnums=(0, 1))
+        elif shape.kind == "prefill":
+            step = make_prefill_step(model)
+            args = (abstract_params(model, rules), specs["batch"])
+            jitted = jax.jit(step)
+        else:
+            step = make_decode_step(model)
+            args = (abstract_params(model, rules), specs["batch"],
+                    specs["caches"], specs["pos"])
+            jitted = jax.jit(step, donate_argnums=(2,))
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    if save_hlo:
+        os.makedirs(save_hlo, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{'mp' if multi_pod else 'sp'}_{depth}"
+        with open(os.path.join(save_hlo, tag + ".hlo.txt"), "w") as f:
+            f.write(hlo)
+
+    n_chips = 512 if multi_pod else 256
+    result = {
+        "arch": arch, "shape": shape_name, "depth": depth,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": n_chips,
+        "n_groups": cfg.n_groups, "n_layers": cfg.n_layers,
+        "pattern": list(cfg.pattern),
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "hbm_bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collectives": colls.to_dict(),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_est_bytes": mem.argument_size_in_bytes
+                + mem.output_size_in_bytes + mem.temp_size_in_bytes
+                - mem.alias_size_in_bytes,
+        },
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} ({result['mesh']}, {depth}): "
+              f"COMPILE OK in {t_compile:.1f}s")
+        print(f"  memory_analysis: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+              f"out={mem.output_size_in_bytes/2**30:.2f}GiB "
+              f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB "
+              f"alias={mem.alias_size_in_bytes/2**30:.2f}GiB")
+        print(f"  cost_analysis: flops/dev={result['flops_per_device']:.3e} "
+              f"bytes/dev={result['hbm_bytes_per_device']:.3e}")
+        print(f"  collectives: {colls.total_count} ops, "
+              f"{colls.total_bytes/2**20:.1f} MiB/dev "
+              f"{colls.bytes_by_kind}")
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--depth", default="full", choices=("full", "d1", "d2"))
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--list-cells", action="store_true")
+    ap.add_argument("--set", action="append", default=[], dest="overrides",
+                    help="config override key=value (repeatable)")
+    args = ap.parse_args(argv)
+
+    if args.list_cells:
+        for a, s in runnable_cells():
+            print(f"{a} {s}")
+        return 0
+
+    assert args.arch and args.shape, "--arch and --shape required"
+    res = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   depth=args.depth, save_hlo=args.save_hlo,
+                   overrides=parse_overrides(args.overrides))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=2)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,100 @@
+"""Abstract input specs for every (architecture x input-shape) dry-run cell.
+
+`input_specs()` returns weak-type-correct, shardable ShapeDtypeStructs — no
+device allocation. The modality frontends of the [vlm]/[audio] archs are
+stubs per the assignment: qwen2-vl receives precomputed patch embeddings
+(+ M-RoPE positions); musicgen receives EnCodec token codes.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.models.registry import Model
+from repro.sharding.logical import LogicalRules, get_rules
+
+
+def _sds(shape, dtype, names, rules: Optional[LogicalRules]):
+    if rules is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=rules.sharding(names, shape, is_act=True))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, *, with_labels: bool,
+                rules: Optional[LogicalRules] = None) -> dict:
+    rules = rules or get_rules()
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind != "decode" else 1
+    out: dict = {}
+    if cfg.family == "vlm" and cfg.vision_stub:
+        out["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16,
+                             ("batch", "seq", "d_model"), rules)
+        out["positions"] = _sds((3, B, S), jnp.int32,
+                                (None, "batch", "seq"), rules)
+    elif cfg.n_codebooks:
+        out["tokens"] = _sds((B, cfg.n_codebooks, S), jnp.int32,
+                             ("batch", "codebooks", "seq"), rules)
+    else:
+        out["tokens"] = _sds((B, S), jnp.int32, ("batch", "seq"), rules)
+    if with_labels:
+        if cfg.n_codebooks:
+            out["labels"] = _sds((B, S, cfg.n_codebooks), jnp.int32,
+                                 ("batch", "seq", "codebooks"), rules)
+        else:
+            out["labels"] = _sds((B, S), jnp.int32, ("batch", "seq"), rules)
+    return out
+
+
+_CACHE_DIM_NAMES = {
+    "k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    "tm_x": ("layers", "batch", "d_model"),
+    "tm_S": ("layers", "batch", "heads", "head_dim", "head_dim"),
+    "cm_x": ("layers", "batch", "d_model"),
+    "conv": ("layers", "batch", "conv_w", "lru"),
+    "h": ("layers", "batch", "lru"),
+}
+
+
+def cache_specs_sharded(model: Model, shape: ShapeConfig,
+                        rules: Optional[LogicalRules] = None) -> dict:
+    """Abstract KV/state cache tree with logical shardings attached."""
+    rules = rules or get_rules()
+    tree = model.cache_specs(shape.global_batch, shape.seq_len)
+
+    def annotate(path, leaf):
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        names = _CACHE_DIM_NAMES.get(key)
+        if names is None or rules is None:
+            return leaf
+        names = names[-leaf.ndim:] if leaf.ndim < len(names) else names
+        # unscanned remainder-layer caches have no leading "layers" dim
+        if leaf.ndim > len(names):
+            names = (None,) * (leaf.ndim - len(names)) + names
+        return jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype,
+            sharding=rules.sharding(names, leaf.shape, is_act=True))
+
+    return jax.tree_util.tree_map_with_path(annotate, tree)
+
+
+def input_specs(model: Model, shape_name: str,
+                rules: Optional[LogicalRules] = None) -> dict:
+    """All abstract inputs for the given cell, keyed by step-arg name."""
+    shape = SHAPES[shape_name]
+    cfg = model.cfg
+    rules = rules or get_rules()
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, shape, with_labels=True, rules=rules)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, shape, with_labels=False, rules=rules)}
+    # decode: one new token against a seq_len cache
+    return {
+        "batch": batch_specs(cfg, shape, with_labels=False, rules=rules),
+        "caches": cache_specs_sharded(model, shape, rules=rules),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,205 @@
+"""Shared building blocks: param specs, norms, rotary embeddings, MLPs.
+
+Every parameter in the stack is declared as a `Spec` (shape + logical dim
+names + initializer). A single spec tree is the source of truth for real
+initialization, abstract ShapeDtypeStruct trees (dry-run) and sharding.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Spec:
+    shape: tuple
+    names: tuple                       # logical dim names (len == len(shape))
+    init: str = "normal"               # normal|zeros|ones|decay|lambda|uniform_small
+    scale: Optional[float] = None      # stddev override for "normal"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.names), (self.shape, self.names)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def _fan_in(shape) -> int:
+    if len(shape) == 1:
+        return shape[0]
+    return int(np.prod(shape[:-1]))
+
+
+def materialize(spec: Spec, key, dtype) -> jax.Array:
+    """Turn one Spec into an initialized array."""
+    shp = spec.shape
+    if spec.init == "zeros":
+        return jnp.zeros(shp, dtype)
+    if spec.init == "ones":
+        return jnp.ones(shp, dtype)
+    if spec.init == "normal":
+        std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(max(1, _fan_in(shp)))
+        return (jax.random.normal(key, shp, jnp.float32) * std).astype(dtype)
+    if spec.init == "decay":       # RWKV6 per-channel log-log decay base
+        c = shp[-1]
+        base = jnp.linspace(-6.0, -0.5, c, dtype=jnp.float32)
+        return jnp.broadcast_to(base, shp).astype(dtype)
+    if spec.init == "lambda":      # RG-LRU Λ s.t. a = exp(-8*softplus(Λ)) ∈ [.9,.999]
+        c = shp[-1]
+        sp = jnp.linspace(1.25e-4, 1.32e-2, c, dtype=jnp.float32)
+        lam = jnp.log(jnp.expm1(sp))
+        return jnp.broadcast_to(lam, shp).astype(dtype)
+    if spec.init == "uniform_small":
+        return (jax.random.uniform(key, shp, jnp.float32, -0.01, 0.01)).astype(dtype)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def init_tree(specs, key, dtype):
+    """Materialize a pytree of Specs with independent keys per leaf."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [materialize(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_tree(specs, dtype, sharding_fn=None):
+    """Spec tree -> ShapeDtypeStruct tree (optionally with shardings)."""
+
+    def _one(s: Spec):
+        if sharding_fn is not None:
+            return jax.ShapeDtypeStruct(s.shape, dtype, sharding=sharding_fn(s.names, s.shape))
+        return jax.ShapeDtypeStruct(s.shape, dtype)
+
+    return jax.tree_util.tree_map(_one, specs, is_leaf=is_spec)
+
+
+def names_tree(specs):
+    return jax.tree_util.tree_map(lambda s: s.names, specs, is_leaf=is_spec)
+
+
+def stack_specs(specs, n: int, name: str = "layers"):
+    """Prepend a stacked leading dim (for scan-over-groups params)."""
+    return jax.tree_util.tree_map(
+        lambda s: Spec((n,) + s.shape, (name,) + s.names, s.init, s.scale),
+        specs, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+def rms_norm(x, scale, eps: float = 1e-6, upcast: bool = True):
+    """RMSNorm. upcast=True materializes the f32 normalized tensor (safest);
+    upcast=False keeps the reduction in f32 but applies the inverse-rms and
+    scale in the input dtype — halves the normalized-tensor bytes (§Perf)."""
+    dt = x.dtype
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    if upcast:
+        y = x.astype(jnp.float32) * inv
+        return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+    y = x * inv.astype(dt)
+    return y * (1.0 + scale).astype(dt)
+
+
+def group_norm(x, scale, bias, n_groups: int, eps: float = 1e-5):
+    """GroupNorm over the channel dim (used by RWKV6 after WKV)."""
+    dt = x.dtype
+    *lead, c = x.shape
+    x = x.astype(jnp.float32).reshape(*lead, n_groups, c // n_groups)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(*lead, c)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (incl. M-RoPE for qwen2-vl)
+# ---------------------------------------------------------------------------
+def rope_angles(positions, head_dim: int, theta: float,
+                mrope_sections: Optional[Sequence[int]] = None):
+    """positions: (B, S) int32, or (3, B, S) for M-RoPE.
+
+    Returns (sin, cos) of shape (B, S, head_dim//2) float32.
+    """
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if mrope_sections is None:
+        if positions.ndim == 3:          # tolerate (3,B,S) given to plain rope
+            positions = positions[0]
+        ang = positions.astype(jnp.float32)[..., None] * inv_freq  # (B,S,half)
+    else:
+        assert positions.ndim == 3 and positions.shape[0] == len(mrope_sections)
+        sec_id = np.repeat(np.arange(len(mrope_sections)), mrope_sections)  # (half,)
+        assert sec_id.shape[0] == half, (mrope_sections, half)
+        pos = positions.astype(jnp.float32)          # (3,B,S)
+        pos_per_band = pos[sec_id]                   # (half,B,S)
+        ang = jnp.moveaxis(pos_per_band, 0, -1) * inv_freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x: (B, S, H, head_dim); sin/cos: (B, S, half). Rotate-half convention."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s, c = sin[:, :, None, :], cos[:, :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Dense (gated) MLP
+# ---------------------------------------------------------------------------
+def mlp_specs(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wi": Spec((d, f), ("d_model", "d_ff")),
+        "wg": Spec((d, f), ("d_model", "d_ff")),
+        "wo": Spec((f, d), ("d_ff", "d_model")),
+    }
+
+
+def mlp_apply(p, x, cfg: ModelConfig):
+    from repro.sharding import lshard
+    a = act_fn(cfg.mlp_act)
+    h = a(jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype)))
+    h = h * jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+    h = lshard(h, "batch", "seq", "d_ff")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))
+
+
+def cross_entropy(logits, labels, final_cap: Optional[float] = None,
+                  z_loss: float = 0.0):
+    """Mean token cross-entropy in f32. logits (..., V), labels (...) int."""
+    logits = logits.astype(jnp.float32)
+    logits = softcap(logits, final_cap)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - gold
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return jnp.mean(loss)

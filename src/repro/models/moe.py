@@ -1,0 +1,107 @@
+"""Capacity-based top-k Mixture-of-Experts (GShard/Switch-style dispatch).
+
+Static-shape sparse dispatch suitable for TPU + GSPMD:
+  1. router softmax over experts, top-k per token;
+  2. position-in-expert via cumsum over a (T, E) one-hot; tokens beyond the
+     per-expert capacity C are dropped (standard capacity-factor semantics);
+  3. gather tokens to (E, C, d), batched expert FFN, weighted scatter-add back.
+
+FLOPs are proportional to E*C = k * T * capacity_factor (active-expert compute,
+not dense E*T) — this is what the MoE roofline entries assume.
+
+Expert parallelism: the "experts" logical dim maps to the "model" mesh axis
+when divisible (moonshot 64e); mixtral's 8e fall back to expert-sharded d_ff
+via the divisibility rule in sharding/logical.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Spec, act_fn
+from repro.sharding import lshard
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    return {
+        "router": Spec((d, e), ("d_model", "experts"), scale=0.02),
+        "wi": Spec((e, d, f), ("experts", "d_model", "moe_d_ff")),
+        "wg": Spec((e, d, f), ("experts", "d_model", "moe_d_ff")),
+        "wo": Spec((e, f, d), ("experts", "moe_d_ff", "d_model")),
+    }
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(cfg.capacity_factor * cfg.top_k * n_tokens / cfg.n_experts)
+    return max(cfg.top_k, -(-c // 8) * 8)  # round up to 8 for tiling
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (y, aux) with load-balance aux loss."""
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(cfg, T)
+    dt = x.dtype
+    xf = x.reshape(T, d)
+
+    # --- routing (f32 for numerics) ---
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)              # (T, K)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    # --- load-balancing aux loss (Switch eq. 4) ---
+    me = jnp.mean(probs, axis=0)                                 # (E,)
+    one_hot_top1 = jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # --- position within expert (capacity assignment) ---
+    flat_expert = expert_idx.reshape(T * K)                      # token-major
+    sel = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)        # (T*K, E)
+    # running count per expert. NB: explicitly log-depth (associative_scan):
+    # jnp.cumsum lowers to reduce-window, whose cost model is quadratic in
+    # T*K and wrecks the roofline accounting (measured in EXPERIMENTS §Perf).
+    csum = jax.lax.associative_scan(jnp.add, sel, axis=0)
+    pos_in_expert = (csum - sel) * sel                           # (T*K, E)
+    pos = jnp.sum(pos_in_expert, axis=-1)                        # (T*K,)
+    keep = pos < C
+    gate_flat = gate_vals.reshape(T * K) * keep.astype(jnp.float32)
+
+    # --- dispatch: scatter token ids into (E, C) slot table ---
+    token_id = jnp.repeat(jnp.arange(T), K)
+    slot_e = jnp.where(keep, flat_expert, E)                     # drop -> row E
+    slot_c = jnp.where(keep, pos, 0)
+    slot_table = jnp.zeros((E + 1, C), jnp.int32).at[slot_e, slot_c].set(token_id)
+    slot_table = slot_table[:E]                                  # (E, C)
+    slot_valid = jnp.zeros((E + 1, C), bool).at[slot_e, slot_c].set(keep)[:E]
+
+    xe = jnp.take(xf, slot_table, axis=0)                        # (E, C, d)
+    xe = xe * slot_valid[..., None].astype(dt)
+    # dispatch-buffer layout (§Perf M1): "batch" on the capacity dim keeps
+    # the expert contraction dim whole (no partial-sum all-reduce of the
+    # (E,C,f) activations); default keeps the d_model/data layout
+    cap_name = "batch" if cfg.moe_shard_tokens else "expert_cap"
+    d_name = None if cfg.moe_shard_tokens else "d_model"
+    xe = lshard(xe, "experts", cap_name, d_name)
+
+    # --- expert FFN ---
+    a = act_fn(cfg.mlp_act)
+    h = a(jnp.einsum("ecd,edf->ecf", xe, p["wg"].astype(dt)))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, p["wi"].astype(dt))
+    h = lshard(h, "experts", cap_name, "moe_d_ff")
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt))
+    ye = lshard(ye, "experts", cap_name, d_name)
+
+    # --- combine: weighted scatter-add back to tokens ---
+    gate_ec = jnp.zeros((E + 1, C), jnp.float32).at[slot_e, slot_c].set(gate_flat)[:E]
+    y = jnp.zeros((T, d), jnp.float32)
+    y = y.at[slot_table.reshape(-1)].add(
+        (ye * gate_ec[..., None].astype(dt)).reshape(E * C, d).astype(jnp.float32),
+        mode="drop")
+    # invalid slots all point at token 0 with gate 0 -> contribute nothing
+    return y.reshape(B, S, d).astype(dt), aux

@@ -1,0 +1,42 @@
+"""Model facade: config -> bound init/apply/serve functions."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable            # (key) -> params
+    specs: Callable           # () -> Spec tree
+    logical_names: Callable   # () -> names tree
+    forward: Callable         # (params, batch) -> (logits, aux, caches)
+    loss: Callable            # (params, batch) -> (loss, metrics)
+    prefill: Callable         # (params, batch) -> (logits, caches)
+    decode: Callable          # (params, batch, caches, pos) -> (logits, caches)
+    cache_specs: Callable     # (batch, seq) -> abstract cache tree
+    init_caches: Callable     # (batch, seq) -> zero cache tree
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    def prefill(params, batch):
+        logits, _, caches = tfm.forward(params, batch, cfg, want_cache=True)
+        return logits, caches
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: tfm.init_params(cfg, key),
+        specs=lambda: tfm.model_specs(cfg),
+        logical_names=lambda: tfm.param_logical_names(cfg),
+        forward=lambda params, batch: tfm.forward(params, batch, cfg),
+        loss=lambda params, batch: tfm.loss_fn(params, batch, cfg),
+        prefill=prefill,
+        decode=lambda params, batch, caches, pos: tfm.decode_step(
+            params, batch, caches, pos, cfg),
+        cache_specs=lambda batch, seq: tfm.cache_specs(cfg, batch, seq),
+        init_caches=lambda batch, seq: tfm.init_caches(cfg, batch, seq),
+    )

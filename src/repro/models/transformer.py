@@ -1,0 +1,414 @@
+"""Generic decoder composing all assigned families.
+
+A model is a tiled repeating `pattern` of layers (see ModelConfig). The params
+of one pattern group are stacked over `n_groups` and iterated with
+`jax.lax.scan` (+ optional remat), keeping HLO size and compile time flat in
+depth — required for the 95-layer dry-run cells. Pattern remainders (e.g.
+griffin's 38 = 12*3 + 2) are unscanned trailing layers.
+
+All functions are pure; params are nested dicts materialized from Spec trees
+(single source of truth for init, abstract dry-run inputs and sharding).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, RGLRU, RWKV6,
+                                ModelConfig)
+from repro.models import attention as attn
+from repro.models import griffin, moe, rwkv6
+from repro.models.layers import (Spec, cross_entropy, init_tree, mlp_apply,
+                                 mlp_specs, names_tree, rms_norm, rope_angles,
+                                 softcap, stack_specs)
+from repro.sharding import lshard
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+def layer_specs(cfg: ModelConfig, kind: str) -> dict:
+    d = cfg.d_model
+    s: dict = {"mixer_norm": Spec((d,), ("d_model",), "zeros"),
+               "ffn_norm": Spec((d,), ("d_model",), "zeros")}
+    if cfg.post_norms:
+        s["mixer_post_norm"] = Spec((d,), ("d_model",), "zeros")
+        s["ffn_post_norm"] = Spec((d,), ("d_model",), "zeros")
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        s["mixer"] = attn.attn_specs(cfg)
+    elif kind == RWKV6:
+        s["mixer"] = rwkv6.rwkv6_specs(cfg)
+    elif kind == RGLRU:
+        s["mixer"] = griffin.rglru_specs(cfg)
+    if kind == RWKV6:
+        s["ffn"] = rwkv6.rwkv6_cm_specs(cfg)
+    elif cfg.family == "moe":
+        s["ffn"] = moe.moe_specs(cfg)
+    else:
+        s["ffn"] = mlp_specs(cfg)
+    return s
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    emb_shape = (cfg.n_codebooks, v, d) if cfg.n_codebooks else (v, d)
+    emb_names = (("codebooks", "vocab", "d_model") if cfg.n_codebooks
+                 else ("vocab", "d_model"))
+    specs: dict = {
+        "embed": Spec(emb_shape, emb_names, scale=0.02),
+        "final_norm": Spec((d,), ("d_model",), "zeros"),
+    }
+    if not cfg.tie_embeddings:
+        head_shape = (cfg.n_codebooks, d, v) if cfg.n_codebooks else (d, v)
+        head_names = (("codebooks", "d_model", "vocab") if cfg.n_codebooks
+                      else ("d_model", "vocab"))
+        specs["head"] = Spec(head_shape, head_names, scale=0.02)
+    group = {f"l{i}": layer_specs(cfg, k) for i, k in enumerate(cfg.pattern)}
+    if cfg.n_groups > 0:
+        specs["scan"] = stack_specs(group, cfg.n_groups)
+    rem_kinds = cfg.layer_kinds[cfg.n_groups * len(cfg.pattern):]
+    if rem_kinds:
+        specs["rem"] = {f"l{j}": layer_specs(cfg, k)
+                        for j, k in enumerate(rem_kinds)}
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Layer application (full-sequence path)
+# ---------------------------------------------------------------------------
+def _apply_layer(p, x, kind: str, cfg: ModelConfig, ctx: dict):
+    """Residual layer. Returns (x, aux, cache_out)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["mixer_norm"], cfg.norm_eps, cfg.norm_upcast)
+    cache = None
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        local = kind == ATTN_LOCAL
+        y, (k, v) = attn.attention_full(p["mixer"], h, cfg, ctx["sin"],
+                                        ctx["cos"], local=local)
+        if ctx.get("want_cache"):
+            L = attn.cache_len(cfg, x.shape[1], local=local)
+            cache = {"k": attn.quantize_kv(cfg, k[:, -L:]),
+                     "v": attn.quantize_kv(cfg, v[:, -L:])}
+    elif kind == RWKV6:
+        y, (tm_x, tm_S) = rwkv6.rwkv6_time_mix(p["mixer"], h, cfg)
+        cache = {"tm_x": tm_x, "tm_S": tm_S}
+    elif kind == RGLRU:
+        y, (conv, hlast) = griffin.rglru_block(p["mixer"], h, cfg)
+        cache = {"conv": conv, "h": hlast}
+    if cfg.post_norms:
+        y = rms_norm(y, p["mixer_post_norm"], cfg.norm_eps, cfg.norm_upcast)
+    x = x + y
+    x = lshard(x, "batch", "seq", "d_model")
+
+    h = rms_norm(x, p["ffn_norm"], cfg.norm_eps, cfg.norm_upcast)
+    if kind == RWKV6:
+        y, cm_x = rwkv6.rwkv6_channel_mix(p["ffn"], h, cfg)
+        if cache is not None:
+            cache["cm_x"] = cm_x
+    elif cfg.family == "moe":
+        y, aux = moe.moe_apply(p["ffn"], h, cfg)
+    else:
+        y = mlp_apply(p["ffn"], h, cfg)
+    if cfg.post_norms:
+        y = rms_norm(y, p["ffn_post_norm"], cfg.norm_eps, cfg.norm_upcast)
+    x = x + y
+    x = lshard(x, "batch", "seq", "d_model")
+    return x, aux, cache
+
+
+def _apply_group(gp, x, cfg: ModelConfig, ctx: dict):
+    aux = jnp.zeros((), jnp.float32)
+    caches = {}
+    for i, kind in enumerate(cfg.pattern):
+        x, a, c = _apply_layer(gp[f"l{i}"], x, kind, cfg, ctx)
+        aux = aux + a
+        if ctx.get("want_cache"):
+            caches[f"l{i}"] = c
+    return x, aux, caches
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def embed(params, batch, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    if "embeds" in batch:                      # vlm stub frontend
+        x = batch["embeds"].astype(dt)
+    else:
+        tok = batch["tokens"]
+        w = params["embed"]
+        if cfg.n_codebooks:                    # (B,K,S) -> sum_k E_k[tok_k]
+            xs = [jnp.take(w[k], tok[:, k], axis=0) for k in range(cfg.n_codebooks)]
+            x = functools.reduce(jnp.add, xs).astype(dt)
+        else:
+            x = jnp.take(w, tok, axis=0).astype(dt)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    return lshard(x, "batch", "seq", "d_model")
+
+
+def lm_head(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        w = params["embed"]
+        logits = jnp.einsum("bsd,vd->bsv", x, w.astype(x.dtype))
+    elif cfg.n_codebooks:
+        logits = jnp.einsum("bsd,kdv->bskv", x, params["head"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(x.dtype))
+    return lshard(logits, "batch", "seq", None, "vocab") \
+        if cfg.n_codebooks else lshard(logits, "batch", "seq", "vocab")
+
+
+def _make_ctx(cfg: ModelConfig, batch, B: int, S: int, *, want_cache=False):
+    if cfg.attention_free and ATTN_GLOBAL not in cfg.pattern \
+            and ATTN_LOCAL not in cfg.pattern:
+        return {"sin": None, "cos": None, "want_cache": want_cache}
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    sin, cos = rope_angles(positions, cfg.head_dim, cfg.rope_theta,
+                           cfg.mrope_sections)
+    return {"sin": sin, "cos": cos, "want_cache": want_cache}
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+def forward(params, batch, cfg: ModelConfig, *, want_cache: bool = False):
+    """Returns (logits, aux, caches)."""
+    x = embed(params, batch, cfg)
+    B, S, _ = x.shape
+    ctx = _make_ctx(cfg, batch, B, S, want_cache=want_cache)
+
+    def group_fn(x, gp):
+        return _apply_group(gp, x, cfg, ctx)
+
+    body = _remat(group_fn, cfg) if not want_cache else group_fn
+
+    caches = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    if "scan" in params:
+        def scan_body(carry, gp):
+            x, aux = carry
+            x, a, c = body(x, gp)
+            return (x, aux + a), c
+        (x, aux_total), scan_caches = jax.lax.scan(
+            scan_body, (x, aux_total), params["scan"])
+        if want_cache:
+            caches["scan"] = scan_caches
+    if "rem" in params:
+        rem_kinds = cfg.layer_kinds[cfg.n_groups * len(cfg.pattern):]
+        rem_caches = {}
+        for j, kind in enumerate(rem_kinds):
+            x, a, c = _apply_layer(params["rem"][f"l{j}"], x, kind, cfg, ctx)
+            aux_total = aux_total + a
+            rem_caches[f"l{j}"] = c
+        if want_cache:
+            caches["rem"] = rem_caches
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.norm_upcast)
+    logits = lm_head(params, x, cfg)
+    return logits, aux_total, (caches if want_cache else None)
+
+
+def _remat(fn, cfg: ModelConfig):
+    if not cfg.remat or cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        # save matmul outputs, recompute elementwise: trades HBM for the
+        # recompute bytes the roofline's memory term pays (§Perf knob)
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def forward_backbone(params, batch, cfg: ModelConfig):
+    """Forward through embed + blocks + final norm; no LM head.
+
+    Split out so the training loss can fuse head-projection + cross-entropy
+    per sequence chunk — the full (tokens, vocab) logits tensor never
+    materializes in fwd or bwd (jax.checkpoint recomputes per chunk)."""
+    x = embed(params, batch, cfg)
+    B, S, _ = x.shape
+    ctx = _make_ctx(cfg, batch, B, S)
+
+    def group_fn(x, gp):
+        return _apply_group(gp, x, cfg, ctx)
+
+    body = _remat(group_fn, cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    if "scan" in params:
+        def scan_body(carry, gp):
+            x, aux = carry
+            x, a, _ = body(x, gp)
+            return (x, aux + a), None
+        (x, aux_total), _ = jax.lax.scan(scan_body, (x, aux_total),
+                                         params["scan"])
+    if "rem" in params:
+        rem_kinds = cfg.layer_kinds[cfg.n_groups * len(cfg.pattern):]
+        for j, kind in enumerate(rem_kinds):
+            x, a, _ = _apply_layer(params["rem"][f"l{j}"], x, kind, cfg, ctx)
+            aux_total = aux_total + a
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.norm_upcast)
+    return x, aux_total
+
+
+def fused_head_loss(params, x, labels, cfg: ModelConfig,
+                    n_chunks: int = 0):
+    """Chunked (over seq) fused LM-head + cross-entropy; returns mean loss."""
+    B, S, d = x.shape
+    n_chunks = min(n_chunks or cfg.loss_chunks, S)
+    while S % n_chunks:
+        n_chunks -= 1
+    c = S // n_chunks
+
+    def chunk_loss(xc, lc):
+        logits = lm_head(params, xc, cfg)
+        # cross_entropy means over every label position; rescale to a sum
+        return cross_entropy(logits, lc, cfg.final_logit_softcap) * lc.size
+
+    chunk_loss = jax.checkpoint(chunk_loss)
+    total = jnp.zeros((), jnp.float32)
+    count = 0
+    for s0 in range(0, S, c):
+        lc = labels[:, s0:s0 + c]
+        total = total + chunk_loss(x[:, s0:s0 + c], lc)
+        count += lc.size
+    return total / count
+
+
+def loss_fn(params, batch, cfg: ModelConfig, aux_weight: float = 0.01):
+    x, aux = forward_backbone(params, batch, cfg)
+    loss = fused_head_loss(params, x, batch["labels"], cfg)
+    n_aux_layers = sum(1 for k in cfg.layer_kinds) or 1
+    return loss + aux_weight * aux / n_aux_layers, {"xent": loss, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token against caches)
+# ---------------------------------------------------------------------------
+def _decode_layer(p, x, kind: str, cfg: ModelConfig, cache, ctx):
+    h = rms_norm(x, p["mixer_norm"], cfg.norm_eps, cfg.norm_upcast)
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        y, new_cache = attn.attention_decode(
+            p["mixer"], h, cache, ctx["pos"], cfg, ctx["sin"], ctx["cos"],
+            local=(kind == ATTN_LOCAL))
+    elif kind == RWKV6:
+        y, (tm_x, tm_S) = rwkv6.rwkv6_decode(p["mixer"], h, cache["tm_x"],
+                                             cache["tm_S"], cfg)
+        new_cache = {"tm_x": tm_x, "tm_S": tm_S, "cm_x": cache["cm_x"]}
+    elif kind == RGLRU:
+        y, (conv, hh) = griffin.rglru_decode(p["mixer"], h, cache["conv"],
+                                             cache["h"], cfg)
+        new_cache = {"conv": conv, "h": hh}
+    if cfg.post_norms:
+        y = rms_norm(y, p["mixer_post_norm"], cfg.norm_eps, cfg.norm_upcast)
+    x = x + y
+
+    h = rms_norm(x, p["ffn_norm"], cfg.norm_eps, cfg.norm_upcast)
+    if kind == RWKV6:
+        y, cm_x = rwkv6.rwkv6_channel_mix(p["ffn"], h, cfg,
+                                          xprev=cache["cm_x"][:, None])
+        new_cache["cm_x"] = cm_x
+    elif cfg.family == "moe":
+        y, _ = moe.moe_apply(p["ffn"], h, cfg)
+    else:
+        y = mlp_apply(p["ffn"], h, cfg)
+    if cfg.post_norms:
+        y = rms_norm(y, p["ffn_post_norm"], cfg.norm_eps, cfg.norm_upcast)
+    return x + y, new_cache
+
+
+def decode_step(params, batch, caches, pos, cfg: ModelConfig):
+    """One-token decode. batch: {"tokens": (B,1)[,(B,K,1)]} or {"embeds"}.
+
+    pos: scalar int32 current absolute position. Returns (logits, caches)."""
+    x = embed(params, batch, cfg)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos.astype(jnp.int32), (B, 1))
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(positions, (3, B, 1))
+    ctx = _make_ctx(cfg, {"positions": positions}, B, 1)
+    ctx["pos"] = pos
+
+    new_caches = {}
+    if "scan" in params:
+        def scan_body(x, gp_gc):
+            gp, gc = gp_gc
+            ncs = {}
+            for i, kind in enumerate(cfg.pattern):
+                x, nc = _decode_layer(gp[f"l{i}"], x, kind, cfg, gc[f"l{i}"], ctx)
+                ncs[f"l{i}"] = nc
+            return x, ncs
+        x, new_scan = jax.lax.scan(scan_body, x, (params["scan"], caches["scan"]))
+        new_caches["scan"] = new_scan
+    if "rem" in params:
+        rem_kinds = cfg.layer_kinds[cfg.n_groups * len(cfg.pattern):]
+        new_caches["rem"] = {}
+        for j, kind in enumerate(rem_kinds):
+            x, nc = _decode_layer(params["rem"][f"l{j}"], x, kind, cfg,
+                                  caches["rem"][f"l{j}"], ctx)
+            new_caches["rem"][f"l{j}"] = nc
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.norm_upcast)
+    logits = lm_head(params, x, cfg)
+    logits = softcap(logits, cfg.final_logit_softcap)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Cache initialization (steady-state decode at a given context length)
+# ---------------------------------------------------------------------------
+def _layer_cache_spec(cfg: ModelConfig, kind: str, B: int, S: int) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        L = attn.cache_len(cfg, S, local=(kind == ATTN_LOCAL))
+        shp = (B, L, cfg.n_kv_heads, cfg.head_dim)
+        kv_dt = attn.kv_cache_dtype(cfg)
+        return {"k": jax.ShapeDtypeStruct(shp, kv_dt),
+                "v": jax.ShapeDtypeStruct(shp, kv_dt)}
+    if kind == RWKV6:
+        C, n = cfg.d_model, cfg.rwkv_head_dim
+        return {"tm_x": jax.ShapeDtypeStruct((B, C), dt),
+                "tm_S": jax.ShapeDtypeStruct((B, C // n, n, n), jnp.float32),
+                "cm_x": jax.ShapeDtypeStruct((B, C), dt)}
+    if kind == RGLRU:
+        w = cfg.lru_width or cfg.d_model
+        return {"conv": jax.ShapeDtypeStruct((B, cfg.conv1d_width - 1, w), dt),
+                "h": jax.ShapeDtypeStruct((B, w), jnp.float32)}
+    raise ValueError(kind)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """Abstract cache tree (ShapeDtypeStructs) for decode at context seq_len."""
+    out: dict = {}
+    if cfg.n_groups > 0:
+        group = {f"l{i}": _layer_cache_spec(cfg, k, batch, seq_len)
+                 for i, k in enumerate(cfg.pattern)}
+        out["scan"] = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((cfg.n_groups,) + s.shape, s.dtype),
+            group)
+    rem_kinds = cfg.layer_kinds[cfg.n_groups * len(cfg.pattern):]
+    if rem_kinds:
+        out["rem"] = {f"l{j}": _layer_cache_spec(cfg, k, batch, seq_len)
+                      for j, k in enumerate(rem_kinds)}
+    return out
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq_len: int):
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                  cache_specs(cfg, batch, seq_len))
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key):
+    return init_tree(model_specs(cfg), key, jnp.dtype(cfg.param_dtype))
+
+
+def param_logical_names(cfg: ModelConfig):
+    return names_tree(model_specs(cfg))

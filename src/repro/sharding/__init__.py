@@ -1,0 +1,10 @@
+from repro.sharding.logical import (
+    LogicalRules,
+    set_rules,
+    get_rules,
+    clear_rules,
+    lshard,
+    logical_sharding,
+    DEFAULT_RULES,
+    use_rules,
+)

@@ -1,0 +1,196 @@
+"""Logical axis rules with divisibility-adaptive mesh mapping.
+
+Tensors throughout the model code carry *logical* dim names; a rules table maps
+each logical name to zero or more mesh axes. The mapping is applied only when a
+mesh context is active (set by the launcher / dry-run) and only when the dim
+size is divisible by the product of the mapped mesh-axis sizes — otherwise the
+mapping *falls back* (drops trailing axes until divisible). This keeps every
+assigned architecture shardable on the fixed production mesh even when e.g.
+qwen2.5's 40 heads don't divide the 16-way model axis.
+
+This table is itself a search space: `core/sharding_search.py` (SPS) enumerates
+rule tables with the paper's TPS formulation (min communication bytes subject
+to per-chip HBM capacity).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical dim vocabulary used across the model code.
+LOGICAL_DIMS = (
+    "batch", "seq", "d_model", "d_ff", "heads", "kv_heads", "head_dim",
+    "vocab", "experts", "expert_cap", "moe_d_ff", "lru", "layers", "codebooks",
+    "kv_seq", "conv_w", "low_rank",
+)
+
+# Default rule table: DP over (pod, data), TP over model, FSDP of the
+# contraction dim over data. `None` entries are explicitly unsharded.
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": ("model",),           # sequence parallelism for the residual stream;
+                                 # loses to heads/d_ff/vocab by priority inside
+                                 # attention/MLP/loss tensors
+    "kv_seq": ("data",),         # decode KV caches: seq-shard when batch can't use data
+    "d_model": ("data",),        # FSDP: weights' d_model dim sharded over data
+    "d_ff": ("model",),
+    "moe_d_ff": ("model",),      # claimed only when "experts" can't take model
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": ("model",),      # fallback TP when heads/kv_heads don't divide
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_cap": (),
+    "lru": ("model",),
+    "layers": (),
+    "codebooks": (),
+    "conv_w": (),
+    "low_rank": (),
+}
+
+# Axis-assignment priority: earlier names claim mesh axes first (independent
+# of their position in the tensor). E.g. q (batch, seq, heads, head_dim):
+# "heads" outranks "seq", so heads take the model axis and seq stays full
+# inside attention, while the residual stream (no heads dim) is seq-sharded —
+# Megatron-style TP+SP emerging from one declarative table.
+#
+# Weights vs activations rank "head_dim" differently: for weights it is the
+# TP fallback when head counts don't divide (qwen2.5's 40 heads); for
+# activations a head_dim-sharded attention contraction would all-reduce full
+# (seq x seq) logits, so sequence sharding must win instead.
+PRIORITY_WEIGHTS = (
+    "experts", "heads", "kv_heads", "vocab", "d_ff", "moe_d_ff", "lru",
+    "head_dim", "batch", "kv_seq", "seq", "d_model", "expert_cap", "layers",
+    "codebooks", "conv_w", "low_rank",
+)
+PRIORITY_ACTS = (
+    "experts", "heads", "kv_heads", "vocab", "d_ff", "moe_d_ff", "lru",
+    "batch", "kv_seq", "seq", "head_dim", "d_model", "expert_cap", "layers",
+    "codebooks", "conv_w", "low_rank",
+)
+
+
+def _rank(name: Optional[str], *, is_act: bool) -> int:
+    table = PRIORITY_ACTS if is_act else PRIORITY_WEIGHTS
+    try:
+        return table.index(name)
+    except ValueError:
+        return len(table)
+
+
+@dataclass
+class LogicalRules:
+    mesh: Mesh
+    rules: dict[str, tuple[str, ...]] = field(default_factory=lambda: dict(DEFAULT_RULES))
+    # Activation rules may differ from weight rules (e.g. sequence parallelism
+    # for activations while weights stay FSDP-sharded).
+    act_overrides: dict[str, tuple[str, ...]] = field(default_factory=dict)
+
+    def axis_size(self, axis: str) -> int:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape)).get(axis, 1)
+
+    def _resolve(self, name: Optional[str], dim_size: int, *, is_act: bool) -> Optional[tuple]:
+        if name is None:
+            return None
+        table = self.rules
+        if is_act and name in self.act_overrides:
+            axes = self.act_overrides[name]
+        else:
+            axes = table.get(name, ())
+        axes = tuple(a for a in axes if a in self.mesh.axis_names)
+        # divisibility fallback: drop trailing axes until the dim divides
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= self.axis_size(a)
+            if prod > 0 and dim_size % prod == 0:
+                break
+            axes = axes[:-1]
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    def spec(self, names: Sequence[Optional[str]], shape: Sequence[int], *,
+             is_act: bool = False) -> P:
+        assert len(names) == len(shape), (names, shape)
+        used: set = set()
+        parts: list = [None] * len(names)
+        # dims claim mesh axes in PRIORITY order, not positional order
+        order = sorted(range(len(names)),
+                       key=lambda i: _rank(names[i], is_act=is_act))
+        for i in order:
+            n, s = names[i], shape[i]
+            r = self._resolve(n, s, is_act=is_act)
+            if r is not None:
+                axes = r if isinstance(r, tuple) else (r,)
+                # drop already-claimed axes (keep the surviving prefix)
+                free = []
+                for a in axes:
+                    if a in used:
+                        break
+                    free.append(a)
+                # re-check divisibility on the surviving prefix
+                if free:
+                    prod = 1
+                    for a in free:
+                        prod *= self.axis_size(a)
+                    if s % prod != 0:
+                        free = []
+                if not free:
+                    r = None
+                else:
+                    used.update(free)
+                    r = tuple(free) if len(free) > 1 else free[0]
+            parts[i] = r
+        return P(*parts)
+
+    def sharding(self, names: Sequence[Optional[str]], shape: Sequence[int], *,
+                 is_act: bool = False) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(names, shape, is_act=is_act))
+
+
+_ctx = threading.local()
+
+
+def set_rules(rules: Optional[LogicalRules]):
+    _ctx.rules = rules
+
+
+def get_rules() -> Optional[LogicalRules]:
+    return getattr(_ctx, "rules", None)
+
+
+def clear_rules():
+    _ctx.rules = None
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[LogicalRules]):
+    prev = get_rules()
+    set_rules(rules)
+    try:
+        yield rules
+    finally:
+        set_rules(prev)
+
+
+def lshard(x, *names):
+    """Apply a logical sharding constraint to activation `x` (no-op without an
+    active rules context, so model code runs unchanged on a single CPU)."""
+    r = get_rules()
+    if r is None:
+        return x
+    spec = r.spec(names, x.shape, is_act=True)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))
+
+
+def logical_sharding(names, shape, *, is_act=False) -> Optional[NamedSharding]:
+    r = get_rules()
+    if r is None:
+        return None
+    return r.sharding(names, shape, is_act=is_act)

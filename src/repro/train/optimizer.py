@@ -1,0 +1,84 @@
+"""AdamW + schedules, implemented from scratch (no optax dependency).
+
+Optimizer state mirrors the param tree (same logical sharding), so the
+dry-run's memory analysis covers the full training footprint.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        1.0, cfg.total_steps - cfg.warmup_steps)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params) -> dict:
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "nu": jax.tree_util.tree_map(jnp.zeros_like, params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mhat = mu / bc1
+        nhat = nu / bc2
+        step_ = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        newp = p.astype(jnp.float32) - lr * (step_ + cfg.weight_decay
+                                             * p.astype(jnp.float32))
+        return newp.astype(p.dtype), mu.astype(p.dtype), nu.astype(p.dtype)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_mu = jax.tree_util.tree_leaves(state["mu"])
+    flat_nu = jax.tree_util.tree_leaves(state["nu"])
+    outs = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+    new_mu = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+    new_nu = jax.tree_util.tree_unflatten(tdef, [o[2] for o in outs])
+    return new_p, {"step": step, "mu": new_mu, "nu": new_nu}, \
+        {"grad_norm": gnorm, "lr": lr}

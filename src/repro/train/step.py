@@ -1,0 +1,79 @@
+"""Training / serving step factories with logical-sharding-aware jit."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.registry import Model, build_model
+from repro.models.layers import abstract_tree
+from repro.sharding.logical import LogicalRules, get_rules
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    grad_accum: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    grad_accum > 1 scans over microbatches (batch's leading dim must divide).
+    """
+    cfg = model.cfg
+    grad_accum = max(grad_accum, getattr(cfg, "grad_accum", 1))
+
+    def loss_fn(params_c, batch):
+        loss, metrics = model.loss(params_c, batch)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        # mixed precision: the compute copy of the master params is cast once,
+        # sharded, outside the layer scan — FSDP all-gathers then move bf16
+        from repro.utils.tree import tree_cast
+        params_c = tree_cast(params, jnp.dtype(cfg.dtype))
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params_c, batch)
+        else:
+            def micro(carry, mb):
+                acc_l, acc_g = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params_c, mb)
+                g = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc_g, g)
+                return (acc_l + l, g), m
+            mb = jax.tree_util.tree_map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), metrics = jax.lax.scan(
+                micro, (jnp.zeros(()), zero_g), mb)
+            loss = loss / grad_accum
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+def abstract_params(model: Model, rules: Optional[LogicalRules] = None):
+    """ShapeDtypeStruct tree for params (with shardings when rules given)."""
+    rules = rules or get_rules()
+    fn = (lambda names, shape: rules.sharding(names, shape)) if rules else None
+    return abstract_tree(model.specs(), jnp.dtype(model.cfg.param_dtype), fn)
+
+
+def abstract_opt_state(model: Model, rules: Optional[LogicalRules] = None):
+    p = abstract_params(model, rules)
+    rep = None
+    if rules is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        rep = NamedSharding(rules.mesh, P())
+    return {
+        "step": jax.ShapeDtypeStruct((), jnp.int32, sharding=rep),
+        "mu": p,
+        "nu": p,
+    }

@@ -1,0 +1,49 @@
+"""Pytree helpers shared across the stack."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_param_count(tree) -> int:
+    """Total number of scalar parameters in a pytree of arrays."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(l.shape) for l in leaves if hasattr(l, "shape")))
+
+
+def tree_size_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays / ShapeDtypeStructs."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for l in leaves:
+        if hasattr(l, "shape") and hasattr(l, "dtype"):
+            total += int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+    return total
+
+
+def tree_cast(tree, dtype):
+    """Cast every inexact leaf to `dtype` (ints/bools untouched)."""
+
+    def _cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.inexact):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map(_cast, tree)
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def flatten_dict(d: dict, prefix: str = "", sep: str = "/") -> dict:
+    """Flatten a nested dict into {path: leaf}."""
+    out = {}
+    for k, v in d.items():
+        path = f"{prefix}{sep}{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            out.update(flatten_dict(v, path, sep))
+        else:
+            out[path] = v
+    return out

@@ -1,0 +1,1 @@
+from repro.vta.isa import VTAConfig, DEFAULT_VTA

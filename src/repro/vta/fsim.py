@@ -1,0 +1,286 @@
+"""Functional simulator — bit-accurate behavioural model of the VTA machine
+(paper's `fsim` role: the simple reference the RTL/tsim targets are debugged
+against, §III.C / §IV.G).
+
+Executes a Program in global program order against numpy scratchpads:
+    inp (depth, BV, BI) i8 | wgt (depth, BO, BI) i8 | acc (depth, BV, BO) i32
+
+Loads/stores carry a `meta` dict describing the DRAM-side tensor slice (the
+architectural fields are validated separately by `Program.validate_encoding`).
+A trace hook records per-instruction state digests for the paper's dynamic
+trace-based divergence debugging methodology (vta/trace.py).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.vta.isa import (AluInsn, AluOp, Buffer, GemmInsn, LoadInsn, Op,
+                           StoreInsn, VTAConfig)
+from repro.vta.runtime import Program
+
+
+class FSim:
+    def __init__(self, hw: VTAConfig, dram: dict):
+        """dram: {"inp": (B,FI,H,W) i8, "wgt": (FO,FI,KH,KW) i8,
+                  "bias": (FO,) i32, "out": (B,FO,OH,OW) i8 (written),
+                  "dw_wgt": (C,KH,KW) i8}"""
+        self.hw = hw
+        self.dram = dram
+        self.inp = np.zeros((hw.inp_depth, hw.batch, hw.block_in), np.int8)
+        self.wgt = np.zeros((hw.wgt_depth, hw.block_out, hw.block_in), np.int8)
+        self.acc = np.zeros((hw.acc_depth, hw.batch, hw.block_out), np.int32)
+        self.uop = np.zeros((hw.uop_depth, 3), np.int64)
+        self.trace_hook: Optional[Callable] = None
+
+    # ------------------------------------------------------------------
+    def run(self, prog: Program):
+        self.uop_mem = np.array(
+            [(u.acc_idx, u.inp_idx, u.wgt_idx) for u in prog.uop_mem],
+            np.int64).reshape(-1, 3)
+        for step, insn in enumerate(prog.order):
+            if isinstance(insn, LoadInsn):
+                self._load(insn)
+            elif isinstance(insn, GemmInsn):
+                self._gemm(insn)
+            elif isinstance(insn, AluInsn):
+                self._alu(insn)
+            elif isinstance(insn, StoreInsn):
+                self._store(insn)
+            if self.trace_hook is not None:
+                self.trace_hook(step, insn, self)
+
+    # ------------------------------------------------------------------
+    def _load(self, insn: LoadInsn):
+        hw = self.hw
+        meta = getattr(insn, "meta", None)
+        if insn.buffer == Buffer.UOP:
+            n = insn.x_size
+            self.uop[insn.sram_base:insn.sram_base + n] = \
+                self.uop_mem[insn.dram_base:insn.dram_base + n]
+            return
+        assert meta is not None, "data loads need meta"
+        kind = meta["kind"]
+        if kind == "inp":
+            BV, BI = hw.batch, hw.block_in
+            a = self.dram["inp"]
+            tb, tci, ih, iw = meta["tb"], meta["tci"], meta["ih"], meta["iw"]
+            patch = np.zeros((tb, tci, ih, iw, BV, BI), np.int8)
+            y0, x0 = meta["y0"], meta["x0"]
+            H, W = a.shape[2], a.shape[3]
+            ys, ye = max(y0, 0), min(y0 + ih, H)
+            xs, xe = max(x0, 0), min(x0 + iw, W)
+            for b_i in range(tb):
+                bb = (meta["b0"] + b_i) * BV
+                for ci in range(tci):
+                    cc = (meta["ci0"] + ci) * BI
+                    sub = a[bb:bb + BV, cc:cc + BI, ys:ye, xs:xe]
+                    patch[b_i, ci, ys - y0:ye - y0, xs - x0:xe - x0] = \
+                        sub.transpose(2, 3, 0, 1)
+            n = tb * tci * ih * iw
+            self.inp[insn.sram_base:insn.sram_base + n] = patch.reshape(n, BV, BI)
+        elif kind == "wgt":
+            BO, BI = hw.block_out, hw.block_in
+            a = self.dram["wgt"]
+            tco, tci, kh, kw = meta["tco"], meta["tci"], meta["kh"], meta["kw"]
+            tile = np.zeros((tco, tci, kh, kw, BO, BI), np.int8)
+            for co_i in range(tco):
+                oo = (meta["co0"] + co_i) * BO
+                for ci in range(tci):
+                    cc = (meta["ci0"] + ci) * BI
+                    tile[co_i, ci] = a[oo:oo + BO, cc:cc + BI].transpose(2, 3, 0, 1)
+            n = tco * tci * kh * kw
+            self.wgt[insn.sram_base:insn.sram_base + n] = tile.reshape(n, BO, BI)
+        elif kind == "bias":
+            BV, BO = hw.batch, hw.block_out
+            b = self.dram["bias"]
+            tb, tco = meta["tb"], meta["tco"]
+            tile = np.zeros((tb, tco, BV, BO), np.int32)
+            for co_i in range(tco):
+                oo = (meta["co0"] + co_i) * BO
+                tile[:, co_i] = np.broadcast_to(b[oo:oo + BO], (tb, BV, BO))
+            n = tb * tco
+            self.acc[insn.sram_base:insn.sram_base + n] = tile.reshape(n, BV, BO)
+        elif kind == "dw_patch":
+            BV, BO = hw.batch, hw.block_out
+            a = self.dram["inp"]
+            ih, iw = meta["ih"], meta["iw"]
+            pad = meta.get("pad_value", 0)
+            patch = np.full((ih, iw, BV, BO), pad, np.int32)
+            y0, x0 = meta["y0"], meta["x0"]
+            H, W = a.shape[2], a.shape[3]
+            ys, ye = max(y0, 0), min(y0 + ih, H)
+            xs, xe = max(x0, 0), min(x0 + iw, W)
+            bb = meta["b0"] * BV
+            cc = meta["c0"] * BO
+            sub = a[bb:bb + BV, cc:cc + BO, ys:ye, xs:xe]
+            patch[ys - y0:ye - y0, xs - x0:xe - x0] = \
+                sub.transpose(2, 3, 0, 1).astype(np.int32)
+            n = ih * iw
+            self.acc[insn.sram_base:insn.sram_base + n] = patch.reshape(n, BV, BO)
+        elif kind == "dw_wgt":
+            BV, BO = hw.batch, hw.block_out
+            a = self.dram["dw_wgt"]
+            kh, kw = meta["kh"], meta["kw"]
+            cc = meta["c0"] * BO
+            tile = a[cc:cc + BO].transpose(1, 2, 0).astype(np.int32)  # (kh,kw,BO)
+            tile = np.broadcast_to(tile[:, :, None, :], (kh, kw, BV, BO))
+            n = kh * kw
+            self.acc[insn.sram_base:insn.sram_base + n] = tile.reshape(n, BV, BO)
+        else:
+            raise ValueError(kind)
+
+    # ------------------------------------------------------------------
+    def _indices(self, insn, bases, f0s, f1s):
+        """Affine index grids for (lp0, lp1, uops)."""
+        l0 = np.arange(insn.lp0)[:, None, None]
+        l1 = np.arange(insn.lp1)[None, :, None]
+        out = []
+        for base, f0, f1 in zip(bases, f0s, f1s):
+            out.append((base[None, None, :] + l0 * f0 + l1 * f1).reshape(-1))
+        return out
+
+    def _gemm(self, insn: GemmInsn):
+        uops = self.uop[insn.uop_bgn:insn.uop_end]
+        acc_i, inp_i, wgt_i = self._indices(
+            insn, (uops[:, 0], uops[:, 1], uops[:, 2]),
+            (insn.acc_f0, insn.inp_f0, insn.wgt_f0),
+            (insn.acc_f1, insn.inp_f1, insn.wgt_f1))
+        if insn.reset:
+            self.acc[np.unique(acc_i)] = 0
+            return
+        prod = np.einsum("nbi,noi->nbo", self.inp[inp_i].astype(np.int32),
+                         self.wgt[wgt_i].astype(np.int32))
+        np.add.at(self.acc, acc_i, prod)
+
+    def _alu(self, insn: AluInsn):
+        uops = self.uop[insn.uop_bgn:insn.uop_end]
+        dst_i, src_i = self._indices(
+            insn, (uops[:, 0], uops[:, 1]),
+            (insn.dst_f0, insn.src_f0), (insn.dst_f1, insn.src_f1))
+        dst = self.acc[dst_i]
+        src = np.int32(insn.imm) if insn.use_imm else self.acc[src_i]
+        if insn.alu_op == AluOp.ADD:
+            r = dst + src
+        elif insn.alu_op == AluOp.MAX:
+            r = np.maximum(dst, src)
+        elif insn.alu_op == AluOp.MIN:
+            r = np.minimum(dst, src)
+        elif insn.alu_op == AluOp.SHR:
+            r = dst >> src
+        elif insn.alu_op == AluOp.MUL:
+            r = dst * src
+        elif insn.alu_op == AluOp.CLIP:
+            bound = abs(int(insn.imm))
+            r = np.clip(dst, -bound, bound)
+        else:
+            raise ValueError(insn.alu_op)
+        self.acc[dst_i] = r
+
+    # ------------------------------------------------------------------
+    def _store(self, insn: StoreInsn):
+        hw = self.hw
+        meta = insn.meta
+        BV, BO = hw.batch, hw.block_out
+        out = self.dram["out"]
+        narrowed = np.clip(self.acc, -128, 127).astype(np.int8)
+        if meta["kind"] == "out":
+            tb, tco, th, tw = meta["tb"], meta["tco"], meta["th"], meta["tw"]
+            n = tb * tco * th * tw
+            tiles = narrowed[insn.sram_base:insn.sram_base + n] \
+                .reshape(tb, tco, th, tw, BV, BO)
+            for b_i in range(tb):
+                bb = (meta["b0"] + b_i) * BV
+                for co_i in range(tco):
+                    oo = (meta["co0"] + co_i) * BO
+                    out[bb:bb + BV, oo:oo + BO,
+                        meta["y0"]:meta["y0"] + th,
+                        meta["x0"]:meta["x0"] + tw] = \
+                        tiles[b_i, co_i].transpose(2, 3, 0, 1)
+        elif meta["kind"] == "dw_out":
+            th, tw = meta["th"], meta["tw"]
+            n = th * tw
+            tiles = narrowed[insn.sram_base:insn.sram_base + n] \
+                .reshape(th, tw, BV, BO)
+            bb = meta["b0"] * BV
+            cc = meta["c0"] * BO
+            ys, xs = meta["y0"], meta["x0"]
+            ye = min(ys + th, out.shape[2])
+            xe = min(xs + tw, out.shape[3])
+            out[bb:bb + BV, cc:cc + BO, ys:ye, xs:xe] = \
+                tiles[:ye - ys, :xe - xs].transpose(2, 3, 0, 1)
+        else:
+            raise ValueError(meta["kind"])
+
+
+# ---------------------------------------------------------------------------
+# numpy oracles (reference semantics the machine is validated against)
+# ---------------------------------------------------------------------------
+def conv2d_ref(inp: np.ndarray, wgt: np.ndarray, stride=(1, 1), pad=(0, 0),
+               bias: Optional[np.ndarray] = None) -> np.ndarray:
+    """int8 conv -> int32 acc. inp (B,FI,H,W), wgt (FO,FI,KH,KW)."""
+    B, FI, H, W = inp.shape
+    FO, _, KH, KW = wgt.shape
+    sh, sw = stride
+    ph, pw = pad
+    x = np.pad(inp.astype(np.int32), ((0, 0), (0, 0), (ph, ph), (pw, pw)))
+    OH = (H + 2 * ph - KH) // sh + 1
+    OW = (W + 2 * pw - KW) // sw + 1
+    out = np.zeros((B, FO, OH, OW), np.int32)
+    for dy in range(KH):
+        for dx in range(KW):
+            sub = x[:, :, dy:dy + sh * OH:sh, dx:dx + sw * OW:sw]
+            out += np.einsum("bchw,fc->bfhw", sub, wgt[:, :, dy, dx].astype(np.int32))
+    if bias is not None:
+        out += bias[None, :, None, None]
+    return out
+
+
+def depthwise_ref(inp, wgt, stride=(1, 1), pad=(0, 0)):
+    """inp (B,C,H,W) i8; wgt (C,KH,KW) i8 -> i32."""
+    B, C, H, W = inp.shape
+    _, KH, KW = wgt.shape
+    sh, sw = stride
+    ph, pw = pad
+    x = np.pad(inp.astype(np.int32), ((0, 0), (0, 0), (ph, ph), (pw, pw)))
+    OH = (H + 2 * ph - KH) // sh + 1
+    OW = (W + 2 * pw - KW) // sw + 1
+    out = np.zeros((B, C, OH, OW), np.int32)
+    for dy in range(KH):
+        for dx in range(KW):
+            out += x[:, :, dy:dy + sh * OH:sh, dx:dx + sw * OW:sw] \
+                * wgt[:, dy, dx].astype(np.int32)[None, :, None, None]
+    return out
+
+
+def pool_ref(inp, k, stride, pad, mode="max"):
+    B, C, H, W = inp.shape
+    kh, kw = k
+    sh, sw = stride
+    ph, pw = pad
+    fill = -128 if mode == "max" else 0
+    x = np.full((B, C, H + 2 * ph, W + 2 * pw), fill, np.int32)
+    x[:, :, ph:ph + H, pw:pw + W] = inp.astype(np.int32)
+    OH = (H + 2 * ph - kh) // sh + 1
+    OW = (W + 2 * pw - kw) // sw + 1
+    taps = [x[:, :, dy:dy + sh * OH:sh, dx:dx + sw * OW:sw]
+            for dy in range(kh) for dx in range(kw)]
+    stacked = np.stack(taps)
+    if mode == "max":
+        return stacked.max(0)
+    return stacked.sum(0) >> max(0, int(round(np.log2(kh * kw))))
+
+
+def post_op_ref(acc: np.ndarray, post_op: str) -> np.ndarray:
+    if post_op == "none":
+        r = acc
+    elif post_op == "relu":
+        r = np.maximum(acc, 0)
+    elif post_op == "relu_shift":
+        r = np.maximum(acc >> 8, 0)
+    elif post_op in ("clip_shift", "clip_shift_legacy"):
+        r = np.clip(acc >> 8, -127, 127)
+    else:
+        raise ValueError(post_op)
+    return np.clip(r, -128, 127).astype(np.int8)

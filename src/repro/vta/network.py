@@ -1,0 +1,99 @@
+"""Network-level scheduling + cycle accounting (end-to-end workloads, §IV.E-F)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.tps import ConvWorkload, Tiling, tps_search
+from repro.vta.isa import VTAConfig
+from repro.vta.scheduler import (Schedule, schedule_conv, schedule_depthwise,
+                                 schedule_pool)
+from repro.vta.tsim import TsimResult, run_tsim
+from repro.vta.workloads import Layer, pad_for_blocking
+
+
+@dataclass
+class LayerReport:
+    name: str
+    kind: str
+    cycles: int = 0
+    dram_bytes: int = 0
+    macs: int = 0
+    on_cpu: bool = False
+    tiling: Optional[Tiling] = None
+    counts: dict = field(default_factory=dict)
+    util: dict = field(default_factory=dict)
+    bytes_by_buffer: dict = field(default_factory=dict)
+
+
+@dataclass
+class NetworkReport:
+    name: str
+    hw: VTAConfig
+    layers: list = field(default_factory=list)
+
+    @property
+    def total_cycles(self) -> int:
+        return sum(l.cycles for l in self.layers if not l.on_cpu)
+
+    @property
+    def total_dram_bytes(self) -> int:
+        return sum(l.dram_bytes for l in self.layers if not l.on_cpu)
+
+    @property
+    def total_macs(self) -> int:
+        return sum(l.macs for l in self.layers if not l.on_cpu)
+
+    def summary(self) -> dict:
+        return {"network": self.name, "cycles": self.total_cycles,
+                "dram_bytes": self.total_dram_bytes, "macs": self.total_macs,
+                "macs_per_cycle": self.total_macs / max(1, self.total_cycles),
+                "vta_layers": sum(1 for l in self.layers if not l.on_cpu),
+                "cpu_layers": sum(1 for l in self.layers if l.on_cpu)}
+
+
+def schedule_layer(layer: Layer, hw: VTAConfig, *, prefer_db: bool = True,
+                   dedup_loads: bool = False,
+                   tiling_fn=None) -> Optional[Schedule]:
+    wl = pad_for_blocking(layer.wl, hw)
+    if layer.kind in ("conv", "dense"):
+        tiling = tiling_fn(wl, hw) if tiling_fn is not None else None
+        if tiling is None:
+            res = tps_search(wl, hw, require_db=True) if prefer_db else None
+            if res is None or not res.feasible:
+                res = tps_search(wl, hw)
+            if not res.feasible:
+                raise RuntimeError(f"no feasible tiling for {wl.name} on {hw}")
+            tiling = res.tiling
+        return schedule_conv(wl, tiling, hw, post_op=layer.post_op,
+                             dedup_loads=dedup_loads, bias=layer.bias)
+    if layer.kind == "depthwise":
+        return schedule_depthwise(wl, hw, post_op=layer.post_op)
+    if layer.kind in ("maxpool", "avgpool"):
+        return schedule_pool(wl, hw, mode=layer.kind[:3])
+    raise ValueError(layer.kind)
+
+
+def run_network(name: str, layers: list[Layer], hw: VTAConfig, *,
+                prefer_db: bool = True, dedup_loads: bool = False,
+                validate_encoding: bool = False,
+                tiling_fn=None) -> NetworkReport:
+    report = NetworkReport(name=name, hw=hw)
+    for layer in layers:
+        lr = LayerReport(name=layer.wl.name, kind=layer.kind,
+                         macs=layer.wl.macs, on_cpu=layer.on_cpu)
+        if not layer.on_cpu:
+            sched = schedule_layer(layer, hw, prefer_db=prefer_db,
+                                   dedup_loads=dedup_loads,
+                                   tiling_fn=tiling_fn)
+            if validate_encoding:
+                sched.program.validate_encoding()
+            ts = run_tsim(sched.program, hw)
+            lr.cycles = ts.total_cycles
+            lr.dram_bytes = ts.dram_bytes
+            lr.tiling = sched.tiling
+            lr.counts = ts.counts
+            lr.util = ts.utilization()
+            lr.bytes_by_buffer = dict(sched.dram_bytes)
+        report.layers.append(lr)
+    return report

@@ -1,0 +1,532 @@
+"""Lower DNN layers to VTA instruction streams using TPS tilings (paper §IV.D).
+
+Layout conventions (match the TPS cost model):
+  activations  (B, FI, H, W)  int8, blocked (BV, BI) tiles
+  weights      (FO, FI, KH, KW) int8, blocked (BO, BI) tiles
+  acc/output   (B, FO, OH, OW) int32 -> int8 on store
+
+Scratchpad-local indexing inside one task (== what the uops encode):
+  inp tile idx = ((b_i*tci_i + ci)*ih_i + y)*iw_i + x
+  wgt tile idx = ((co_i*tci_i + ci)*kh + dy)*kw + dx
+  acc tile idx = ((b_i*tco_i + co_i)*th_i + row)*tw_i + col
+
+Virtual threading (double buffering): with oc_n=2 the tco_o loop is split
+across 2 contexts, each owning half of every scratchpad; with h_n=2 the th_o
+loop is split. `dedup_loads=True` enables the paper's §IV.D.2 redundant-load
+elimination: the operand shared between the two contexts (input when oc_n=2,
+weights when h_n=2) is loaded once into ctx0's half and ctx1's uops read it
+there — turning the access pattern (I1,W1),(I2,W2),(I1,W1),(I2,W2) into
+(I1,W1),(I1,W2),(I2,W1),(I2,W2).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.tps import ConvWorkload, Tiling
+from repro.vta.isa import (AluInsn, AluOp, Buffer, GemmInsn, LoadInsn, Op,
+                           StoreInsn, Uop, VTAConfig)
+from repro.vta.runtime import Program, Task, UopAllocator, finalize
+
+INT8_MIN = -128
+
+
+@dataclass
+class Schedule:
+    program: Program
+    tiling: Tiling
+    wl: ConvWorkload
+    uop_flushes: int = 0
+    dram_bytes: dict = field(default_factory=dict)
+
+
+def _ceil_div(a, b):
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# Convolution (and dense = 1x1x1 conv)
+# ---------------------------------------------------------------------------
+def schedule_conv(wl: ConvWorkload, t: Tiling, hw: VTAConfig, *,
+                  post_op: str = "clip_shift", dedup_loads: bool = False,
+                  bias: bool = False) -> Schedule:
+    BV, BI, BO = hw.batch, hw.block_in, hw.block_out
+    assert wl.b % BV == 0 and wl.fo % BO == 0 and wl.fi % BI == 0, (wl, hw)
+    di, do, bo_ct = wl.fi // BI, wl.fo // BO, wl.b // BV
+    oh, ow = wl.oh, wl.ow
+    # inner extents
+    tb_i = bo_ct // t.tb_o
+    th_i = oh // t.th_o
+    tw_i = ow // t.tw_o
+    tco_i = do // t.tco_o
+    tci_i = di // t.tci_o
+    ih_i = (th_i - 1) * wl.sh + wl.kh
+    iw_i = (tw_i - 1) * wl.sw + wl.kw
+
+    n_ctx = 2 if t.double_buffered else 1
+    inp_half = hw.inp_depth // n_ctx
+    wgt_half = hw.wgt_depth // n_ctx
+    acc_half = hw.acc_depth // n_ctx
+    n_inp = tb_i * tci_i * ih_i * iw_i
+    n_wgt = tco_i * tci_i * wl.kh * wl.kw
+    n_acc = tb_i * tco_i * th_i * tw_i
+    assert n_inp <= inp_half, f"inp tiles {n_inp} > half depth {inp_half}"
+    assert n_wgt <= wgt_half, f"wgt tiles {n_wgt} > half depth {wgt_half}"
+    assert n_acc + (tb_i * tco_i if bias else 0) <= acc_half, \
+        f"acc tiles {n_acc} > half depth {acc_half}"
+
+    alloc = UopAllocator(hw)
+    tasks: list[Task] = []
+
+    # gemm uop sequence for one (task, reduction step); offsets select halves
+    def gemm_uops(inp_base: int, wgt_base: int, acc_base: int) -> tuple:
+        seq = []
+        for b_i in range(tb_i):
+            for co_i in range(tco_i):
+                for ci in range(tci_i):
+                    for dy in range(wl.kh):
+                        for dx in range(wl.kw):
+                            acc = acc_base + (b_i * tco_i + co_i) * th_i * tw_i
+                            inp = inp_base + ((b_i * tci_i + ci) * ih_i + dy) * iw_i + dx
+                            wgt = wgt_base + ((co_i * tci_i + ci) * wl.kh + dy) * wl.kw + dx
+                            seq.append(Uop(acc, inp, wgt))
+        return tuple(seq)
+
+    def acc_uops(acc_base: int, src_base: Optional[int] = None) -> tuple:
+        seq = []
+        for b_i in range(tb_i):
+            for co_i in range(tco_i):
+                a = acc_base + (b_i * tco_i + co_i) * th_i * tw_i
+                s = a if src_base is None else src_base + (b_i * tco_i + co_i)
+                seq.append(Uop(a, s, 0))
+        return tuple(seq)
+
+    def emit_compute(task: Task, seq: tuple, make):
+        """Place uops (split on buffer capacity) and emit compute insns."""
+        cap = max(1, hw.uop_depth)
+        for s0 in range(0, len(seq), cap):
+            chunk = seq[s0:s0 + cap]
+            bgn, ld = alloc.place(chunk)
+            if ld is not None:
+                task.computes.append(ld)
+            task.computes.append(make(bgn, bgn + len(chunk)))
+
+    # ------------------------------------------------------------------
+    # Outer iteration -> "units". Normally a unit is one (bo,ho,wo,coo)
+    # sub-iteration; with dedup_loads the two sub-iterations that share an
+    # operand (coo pair for oc_n=2, ho pair for h_n=2) are merged into one
+    # unit whose shared operand is loaded once (the paper's reordered
+    # access pattern (I1,W1),(I1,W2),(I2,W1),(I2,W2)). Units alternate
+    # scratchpad halves (ctx = unit index % n_ctx) for double buffering.
+    # ------------------------------------------------------------------
+    outer: list[tuple] = []
+    for bo in range(t.tb_o):
+        for ho in range(t.th_o):
+            for wo in range(t.tw_o):
+                for coo in range(t.tco_o):
+                    outer.append((bo, ho, wo, coo))
+    if t.h_n == 2:
+        # make ho pairs adjacent: reorder (bo, wo, coo, ho)
+        outer.sort(key=lambda o: (o[0], o[2], o[3], o[1] // 2, o[1] % 2))
+
+    units: list[list[tuple]]
+    if dedup_loads and t.double_buffered:
+        units = [outer[i:i + 2] for i in range(0, len(outer), 2)]
+    else:
+        units = [[o] for o in outer]
+
+    merged = dedup_loads and t.double_buffered
+    for ui, unit in enumerate(units):
+        ctx = ui % n_ctx
+        # Buffer policy:
+        #  * normal: every buffer split in ctx halves (classic virtual threads)
+        #  * merged (dedup): the *shared* operand alternates halves (that's the
+        #    paper's I1/I2), while the pair's two distinct chunks of the other
+        #    operand occupy the full buffer (W1,W2 resident side by side); acc
+        #    holds both sub-results. WAR between consecutive pairs on the
+        #    full-buffer regions is closed by the t-2 token sync (see tsim).
+        if merged:
+            inp_base0 = (ctx * inp_half) if t.oc_n == 2 else 0
+            wgt_base0 = 0 if t.oc_n == 2 else (ctx * wgt_half)
+            acc_base0 = 0
+        else:
+            inp_base0 = ctx * inp_half
+            wgt_base0 = ctx * wgt_half
+            acc_base0 = ctx * acc_half
+        # distinct operand keys within the unit (shared ones load once)
+        inp_keys: list[tuple] = []
+        wgt_keys: list[tuple] = []
+        subs = []
+        for (bo, ho, wo, coo) in unit:
+            ik = (bo, ho, wo)
+            wk = (coo,)
+            if ik not in inp_keys:
+                inp_keys.append(ik)
+            if wk not in wgt_keys:
+                wgt_keys.append(wk)
+            subs.append((bo, ho, wo, coo, inp_keys.index(ik), wgt_keys.index(wk)))
+        acc_per_sub = n_acc + (tb_i * tco_i if bias else 0)
+        if merged:
+            assert len(inp_keys) * n_inp <= (inp_half if t.oc_n == 2 else hw.inp_depth)
+            assert len(wgt_keys) * n_wgt <= (hw.wgt_depth if t.oc_n == 2 else wgt_half)
+            assert len(subs) * acc_per_sub <= hw.acc_depth
+        else:
+            assert len(inp_keys) * n_inp <= inp_half, "inp tiles exceed half"
+            assert len(wgt_keys) * n_wgt <= wgt_half, "wgt tiles exceed half"
+            assert len(subs) * acc_per_sub <= acc_half
+
+        for r in range(t.tci_o):
+            task = Task(ctx=ctx)
+            # ---- loads ----
+            for ii, (bo, ho, wo) in enumerate(inp_keys):
+                y0 = ho * th_i * wl.sh - wl.ph
+                x0 = wo * tw_i * wl.sw - wl.pw
+                ypad0 = max(0, -y0)
+                ypad1 = max(0, y0 + ih_i - wl.h)
+                xpad0 = max(0, -x0)
+                xpad1 = max(0, x0 + iw_i - wl.w)
+                ld = LoadInsn(
+                    op=Op.LOAD, buffer=Buffer.INP,
+                    sram_base=inp_base0 + ii * n_inp,
+                    dram_base=ui % (1 << 20),
+                    y_size=ih_i - ypad0 - ypad1, x_size=iw_i - xpad0 - xpad1,
+                    x_stride=max(1, wl.w),
+                    y_pad0=min(15, ypad0), y_pad1=min(15, ypad1),
+                    x_pad0=min(15, xpad0), x_pad1=min(15, xpad1))
+                ld.meta = {"kind": "inp", "b0": bo * tb_i, "tb": tb_i,
+                           "ci0": r * tci_i, "tci": tci_i,
+                           "y0": y0, "x0": x0, "ih": ih_i, "iw": iw_i}
+                task.loads.append(ld)
+            for wi_, (coo,) in enumerate(wgt_keys):
+                ld = LoadInsn(
+                    op=Op.LOAD, buffer=Buffer.WGT,
+                    sram_base=wgt_base0 + wi_ * n_wgt,
+                    dram_base=ui % (1 << 20),
+                    y_size=tco_i, x_size=tci_i * wl.kh * wl.kw,
+                    x_stride=max(1, di * wl.kh * wl.kw))
+                ld.meta = {"kind": "wgt", "co0": coo * tco_i, "tco": tco_i,
+                           "ci0": r * tci_i, "tci": tci_i,
+                           "kh": wl.kh, "kw": wl.kw}
+                task.loads.append(ld)
+
+            # ---- computes (per sub-iteration) ----
+            for si, (bo, ho, wo, coo, ik, wk) in enumerate(subs):
+                acc_base = acc_base0 + si * (n_acc + (tb_i * tco_i if bias else 0))
+                bias_base = acc_base + n_acc
+                inp_base = inp_base0 + ik * n_inp
+                wgt_base = wgt_base0 + wk * n_wgt
+                if r == 0:
+                    if bias:
+                        ld = LoadInsn(op=Op.LOAD, buffer=Buffer.ACC,
+                                      sram_base=bias_base, dram_base=0,
+                                      y_size=1, x_size=tb_i * tco_i,
+                                      x_stride=tb_i * tco_i)
+                        ld.meta = {"kind": "bias", "co0": coo * tco_i,
+                                   "tco": tco_i, "tb": tb_i}
+                        task.computes.append(ld)
+                    emit_compute(task, acc_uops(acc_base),
+                                 lambda b, e: GemmInsn(op=Op.GEMM, reset=True,
+                                                       uop_bgn=b, uop_end=e,
+                                                       lp0=th_i, lp1=tw_i,
+                                                       acc_f0=tw_i, acc_f1=1))
+                seq = gemm_uops(inp_base, wgt_base, acc_base)
+                emit_compute(task, seq, lambda b, e: GemmInsn(
+                    op=Op.GEMM, uop_bgn=b, uop_end=e, lp0=th_i, lp1=tw_i,
+                    acc_f0=tw_i, acc_f1=1,
+                    inp_f0=wl.sh * iw_i, inp_f1=wl.sw))
+
+                if r == t.tci_o - 1:
+                    if bias:
+                        emit_compute(task, acc_uops(acc_base, bias_base),
+                                     lambda b, e: AluInsn(
+                                         op=Op.ALU, alu_op=AluOp.ADD,
+                                         uop_bgn=b, uop_end=e,
+                                         lp0=th_i, lp1=tw_i,
+                                         dst_f0=tw_i, dst_f1=1,
+                                         src_f0=0, src_f1=0))
+                    _emit_post_ops(task, emit_compute, acc_uops(acc_base),
+                                   th_i, tw_i, post_op)
+                    st = StoreInsn(op=Op.STORE, sram_base=acc_base,
+                                   dram_base=ui % (1 << 20),
+                                   y_size=tb_i * tco_i, x_size=th_i * tw_i,
+                                   x_stride=max(1, oh * ow))
+                    st.meta = {"kind": "out", "b0": bo * tb_i, "tb": tb_i,
+                               "co0": coo * tco_i, "tco": tco_i,
+                               "y0": ho * th_i, "th": th_i,
+                               "x0": wo * tw_i, "tw": tw_i}
+                    task.stores.append(st)
+            tasks.append(task)
+
+    prog = finalize(tasks, hw, n_ctx=n_ctx)
+    prog.uop_mem = alloc.mem
+    sched = Schedule(program=prog, tiling=t, wl=wl, uop_flushes=alloc.flushes)
+    sched.dram_bytes = program_dram_bytes(prog, hw)
+    return sched
+
+
+def _emit_post_ops(task, emit_compute, uops, lp0, lp1, post_op: str):
+    def alu(op, imm=0, imm2=0):
+        return lambda b, e: AluInsn(op=Op.ALU, alu_op=op, uop_bgn=b, uop_end=e,
+                                    lp0=lp0, lp1=lp1, dst_f0=lp1, dst_f1=1,
+                                    src_f0=lp1, src_f1=1, use_imm=True,
+                                    imm=imm, imm2=imm2)
+    if post_op == "none":
+        return
+    if post_op == "relu":
+        emit_compute(task, uops, alu(AluOp.MAX, 0))
+    elif post_op == "relu_shift":
+        emit_compute(task, uops, alu(AluOp.SHR, 8))
+        emit_compute(task, uops, alu(AluOp.MAX, 0))
+    elif post_op == "clip_shift":
+        emit_compute(task, uops, alu(AluOp.SHR, 8))
+        # NEW clip insn: one op instead of MIN+MAX (paper abstract)
+        emit_compute(task, uops, alu(AluOp.CLIP, 127))
+    elif post_op == "clip_shift_legacy":
+        emit_compute(task, uops, alu(AluOp.SHR, 8))
+        emit_compute(task, uops, alu(AluOp.MIN, 127))
+        emit_compute(task, uops, alu(AluOp.MAX, -127))
+    else:
+        raise ValueError(post_op)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise conv (§IV.D.3): ALU MUL/ADD over taps, channel-blocked
+# ---------------------------------------------------------------------------
+def schedule_depthwise(wl: ConvWorkload, hw: VTAConfig, *,
+                       post_op: str = "relu_shift") -> Schedule:
+    """Depthwise conv on the ALU: per tap (copy, MUL weight-row, ADD into out).
+
+    Channels are blocked by BO; activations for the patch live in the acc
+    scratchpad (widened on load); one weight row tile per tap.
+    """
+    BV, BO = hw.batch, hw.block_out
+    assert wl.fi == wl.fo and wl.b % BV == 0 and wl.fo % BO == 0
+    dc = wl.fo // BO
+    oh, ow = wl.oh, wl.ow
+    # choose a spatial tile that fits: patch + out + tmp + wgt in acc half
+    th_i, tw_i = oh, ow
+    def fits(th, tw):
+        ih = (th - 1) * wl.sh + wl.kh
+        iw = (tw - 1) * wl.sw + wl.kw
+        need = ih * iw + th * tw * 2 + wl.kh * wl.kw
+        return need <= hw.acc_depth
+    while not fits(th_i, tw_i) and th_i > 1:
+        th_i = _ceil_div(th_i, 2)
+    while not fits(th_i, tw_i) and tw_i > 1:
+        tw_i = _ceil_div(tw_i, 2)
+    assert fits(th_i, tw_i), "acc scratchpad too small for depthwise tile"
+    th_o, tw_o = _ceil_div(oh, th_i), _ceil_div(ow, tw_i)
+    ih_i = (th_i - 1) * wl.sh + wl.kh
+    iw_i = (tw_i - 1) * wl.sw + wl.kw
+
+    alloc = UopAllocator(hw)
+    tasks = []
+    patch_base = 0
+    out_base = ih_i * iw_i
+    tmp_base = out_base + th_i * tw_i
+    wgt_base = tmp_base + th_i * tw_i
+
+    def tile_uops(dst, src, n):
+        return tuple(Uop(dst + i, src + i, 0) for i in range(0, 1)), n
+
+    for b in range(wl.b // BV):
+        for c in range(dc):
+            for ho in range(th_o):
+                for wo in range(tw_o):
+                    task = Task(ctx=0)
+                    y0 = ho * th_i * wl.sh - wl.ph
+                    x0 = wo * tw_i * wl.sw - wl.pw
+                    ld = LoadInsn(op=Op.LOAD, buffer=Buffer.ACC,
+                                  sram_base=patch_base, dram_base=0,
+                                  y_size=ih_i, x_size=iw_i, x_stride=wl.w)
+                    ld.meta = {"kind": "dw_patch", "b0": b, "c0": c,
+                               "y0": y0, "x0": x0, "ih": ih_i, "iw": iw_i}
+                    task.computes.append(ld)
+                    lw = LoadInsn(op=Op.LOAD, buffer=Buffer.ACC,
+                                  sram_base=wgt_base, dram_base=0,
+                                  y_size=1, x_size=wl.kh * wl.kw,
+                                  x_stride=wl.kh * wl.kw)
+                    lw.meta = {"kind": "dw_wgt", "c0": c, "kh": wl.kh, "kw": wl.kw}
+                    task.computes.append(lw)
+
+                    def emit(seq, make):
+                        bgn, uld = alloc.place(seq)
+                        if uld is not None:
+                            task.computes.append(uld)
+                        task.computes.append(make(bgn, bgn + len(seq)))
+
+                    # zero the out region
+                    emit((Uop(out_base, out_base, 0),),
+                         lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.MUL,
+                                               uop_bgn=b_, uop_end=e,
+                                               lp0=th_i, lp1=tw_i,
+                                               dst_f0=tw_i, dst_f1=1,
+                                               src_f0=tw_i, src_f1=1,
+                                               use_imm=True, imm=0))
+                    for dy in range(wl.kh):
+                        for dx in range(wl.kw):
+                            src = patch_base + dy * iw_i + dx
+                            # tmp = 0; tmp += shifted patch; tmp *= w[dy,dx]; out += tmp
+                            emit((Uop(tmp_base, tmp_base, 0),),
+                                 lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.MUL,
+                                                       uop_bgn=b_, uop_end=e,
+                                                       lp0=th_i, lp1=tw_i,
+                                                       dst_f0=tw_i, dst_f1=1,
+                                                       src_f0=tw_i, src_f1=1,
+                                                       use_imm=True, imm=0))
+                            emit((Uop(tmp_base, src, 0),),
+                                 lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.ADD,
+                                                       uop_bgn=b_, uop_end=e,
+                                                       lp0=th_i, lp1=tw_i,
+                                                       dst_f0=tw_i, dst_f1=1,
+                                                       src_f0=wl.sh * iw_i,
+                                                       src_f1=wl.sw))
+                            emit((Uop(tmp_base, wgt_base + dy * wl.kw + dx, 0),),
+                                 lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.MUL,
+                                                       uop_bgn=b_, uop_end=e,
+                                                       lp0=th_i, lp1=tw_i,
+                                                       dst_f0=tw_i, dst_f1=1,
+                                                       src_f0=0, src_f1=0))
+                            emit((Uop(out_base, tmp_base, 0),),
+                                 lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.ADD,
+                                                       uop_bgn=b_, uop_end=e,
+                                                       lp0=th_i, lp1=tw_i,
+                                                       dst_f0=tw_i, dst_f1=1,
+                                                       src_f0=tw_i, src_f1=1))
+                    _emit_post_ops(task, lambda t_, s, m: emit(s, m),
+                                   (Uop(out_base, out_base, 0),), th_i, tw_i, post_op)
+                    st = StoreInsn(op=Op.STORE, sram_base=out_base, dram_base=0,
+                                   y_size=1, x_size=th_i * tw_i, x_stride=oh * ow)
+                    st.meta = {"kind": "dw_out", "b0": b, "c0": c,
+                               "y0": ho * th_i, "th": th_i,
+                               "x0": wo * tw_i, "tw": tw_i}
+                    task.stores.append(st)
+                    tasks.append(task)
+    prog = finalize(tasks, hw, n_ctx=1)
+    prog.uop_mem = alloc.mem
+    sched = Schedule(program=prog, tiling=Tiling(1, th_o, tw_o, dc, 1), wl=wl,
+                     uop_flushes=alloc.flushes)
+    sched.dram_bytes = program_dram_bytes(prog, hw)
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# Pooling (§IV.E): max pool via pad-value load + ALU MAX; avg via ADD + SHR
+# ---------------------------------------------------------------------------
+def schedule_pool(wl: ConvWorkload, hw: VTAConfig, *, mode: str = "max") -> Schedule:
+    BV, BO = hw.batch, hw.block_out
+    assert wl.fi == wl.fo and wl.fo % BO == 0
+    dc = wl.fo // BO
+    oh, ow = wl.oh, wl.ow
+    th_i, tw_i = oh, ow
+    def fits(th, tw):
+        ih = (th - 1) * wl.sh + wl.kh
+        iw = (tw - 1) * wl.sw + wl.kw
+        return ih * iw + th * tw <= hw.acc_depth
+    while not fits(th_i, tw_i) and th_i > 1:
+        th_i = _ceil_div(th_i, 2)
+    assert fits(th_i, tw_i)
+    th_o, tw_o = _ceil_div(oh, th_i), _ceil_div(ow, tw_i)
+    ih_i = (th_i - 1) * wl.sh + wl.kh
+    iw_i = (tw_i - 1) * wl.sw + wl.kw
+    pad_value = INT8_MIN if mode == "max" else 0
+
+    alloc = UopAllocator(hw)
+    tasks = []
+    patch_base, out_base = 0, ih_i * iw_i
+    for b in range(wl.b // BV):
+        for c in range(dc):
+            for ho in range(th_o):
+                for wo in range(tw_o):
+                    task = Task(ctx=0)
+                    y0 = ho * th_i * wl.sh - wl.ph
+                    x0 = wo * tw_i * wl.sw - wl.pw
+                    ld = LoadInsn(op=Op.LOAD, buffer=Buffer.ACC,
+                                  sram_base=patch_base, dram_base=0,
+                                  y_size=ih_i, x_size=iw_i, x_stride=wl.w,
+                                  pad_value=pad_value)
+                    ld.meta = {"kind": "dw_patch", "b0": b, "c0": c,
+                               "y0": y0, "x0": x0, "ih": ih_i, "iw": iw_i,
+                               "pad_value": pad_value}
+                    task.computes.append(ld)
+
+                    def emit(seq, make):
+                        bgn, uld = alloc.place(seq)
+                        if uld is not None:
+                            task.computes.append(uld)
+                        task.computes.append(make(bgn, bgn + len(seq)))
+
+                    # out = 0 (MUL imm 0); out += tap0 (copy); then MAX/ADD rest
+                    emit((Uop(out_base, out_base, 0),),
+                         lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.MUL,
+                                               uop_bgn=b_, uop_end=e,
+                                               lp0=th_i, lp1=tw_i,
+                                               dst_f0=tw_i, dst_f1=1,
+                                               src_f0=tw_i, src_f1=1,
+                                               use_imm=True, imm=0))
+                    op = AluOp.MAX if mode == "max" else AluOp.ADD
+                    for ti, (dy, dx) in enumerate(
+                            (dy, dx) for dy in range(wl.kh) for dx in range(wl.kw)):
+                        src = patch_base + dy * iw_i + dx
+                        tap_op = AluOp.ADD if ti == 0 else op
+                        emit((Uop(out_base, src, 0),),
+                             lambda b_, e, o=tap_op: AluInsn(
+                                 op=Op.ALU, alu_op=o,
+                                 uop_bgn=b_, uop_end=e,
+                                 lp0=th_i, lp1=tw_i,
+                                 dst_f0=tw_i, dst_f1=1,
+                                 src_f0=wl.sh * iw_i, src_f1=wl.sw))
+                    if mode == "avg":
+                        shift = max(0, int(round(math.log2(wl.kh * wl.kw))))
+                        emit((Uop(out_base, out_base, 0),),
+                             lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.SHR,
+                                                   uop_bgn=b_, uop_end=e,
+                                                   lp0=th_i, lp1=tw_i,
+                                                   dst_f0=tw_i, dst_f1=1,
+                                                   src_f0=tw_i, src_f1=1,
+                                                   use_imm=True, imm=shift))
+                    st = StoreInsn(op=Op.STORE, sram_base=out_base, dram_base=0,
+                                   y_size=1, x_size=th_i * tw_i, x_stride=oh * ow)
+                    st.meta = {"kind": "dw_out", "b0": b, "c0": c,
+                               "y0": ho * th_i, "th": th_i,
+                               "x0": wo * tw_i, "tw": tw_i}
+                    task.stores.append(st)
+                    tasks.append(task)
+    prog = finalize(tasks, hw, n_ctx=1)
+    prog.uop_mem = alloc.mem
+    sched = Schedule(program=prog, tiling=Tiling(1, th_o, tw_o, dc, 1), wl=wl,
+                     uop_flushes=alloc.flushes)
+    sched.dram_bytes = program_dram_bytes(prog, hw)
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# DRAM traffic accounting (drives Fig 10/11 benches + tsim memory timing)
+# ---------------------------------------------------------------------------
+def insn_dram_bytes(insn, hw: VTAConfig) -> int:
+    if isinstance(insn, LoadInsn):
+        per_tile = {Buffer.INP: hw.inp_tile_bytes, Buffer.WGT: hw.wgt_tile_bytes,
+                    Buffer.ACC: hw.acc_tile_bytes, Buffer.UOP: hw.uop_bytes,
+                    Buffer.OUT: hw.out_tile_bytes}[insn.buffer]
+        if insn.buffer == Buffer.ACC and getattr(insn, "meta", {}).get("kind") in \
+                ("dw_patch",):
+            per_tile = hw.batch * hw.block_out * hw.inp_bytes  # widening load
+        return insn.dram_tiles() * per_tile
+    if isinstance(insn, StoreInsn):
+        return insn.tiles() * hw.out_tile_bytes
+    return 0
+
+
+def program_dram_bytes(prog: Program, hw: VTAConfig) -> dict:
+    out = {"inp": 0, "wgt": 0, "acc": 0, "uop": 0, "out": 0, "total": 0}
+    for i in prog.order:
+        b = insn_dram_bytes(i, hw)
+        if isinstance(i, LoadInsn):
+            key = {Buffer.INP: "inp", Buffer.WGT: "wgt", Buffer.ACC: "acc",
+                   Buffer.UOP: "uop", Buffer.OUT: "out"}[i.buffer]
+            out[key] += b
+        elif isinstance(i, StoreInsn):
+            out["out"] += b
+        out["total"] += b
+    return out

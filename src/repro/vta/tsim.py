@@ -1,0 +1,175 @@
+"""Cycle-level performance model of the VTA machine ("tsim" role).
+
+Marked-graph simulation of the three decoupled processes (load / compute /
+store) synchronized by the 4 dependency-token queues (paper Fig 1), with:
+
+  * GEMM initiation interval `gemm_ii` (4 unpipelined -> 1 pipelined, §IV.A.1)
+    + pipeline-flush depth per instruction;
+  * ALU II (4/5 unpipelined; 1 imm / 2 two-operand pipelined, §IV.A.2 — the
+    accumulator register file allows one read per cycle);
+  * a shared memory engine with `mem_width_bytes`/cycle throughput and
+    `dram_latency` to first beat, with in-flight pipelining across requests
+    (the multiple-outstanding-request VME of §IV.A.3 / Fig 6);
+  * UOP/ACC loads issued from the compute queue (as on real VTA).
+
+Outputs total cycles + per-process busy intervals — the data behind the
+paper's process-utilization visualizations (Fig 3-4) and roofline points.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+
+from repro.vta.isa import (AluInsn, Buffer, FinishInsn, GemmInsn, LoadInsn,
+                           StoreInsn, VTAConfig)
+from repro.vta.runtime import Program, queue_of
+from repro.vta.scheduler import insn_dram_bytes
+
+DECODE_OVERHEAD = 4   # fetch/decode cycles per instruction
+CMD_OVERHEAD = 4      # DMA command setup per load/store
+
+
+@dataclass
+class TsimResult:
+    total_cycles: int
+    busy: dict                      # queue -> [(start, end, kind)]
+    counts: dict
+    dram_bytes: int
+    stalls: dict = field(default_factory=dict)
+
+    def utilization(self) -> dict:
+        out = {}
+        for q, spans in self.busy.items():
+            t = sum(e - s for s, e, _ in spans)
+            out[q] = t / max(1, self.total_cycles)
+        return out
+
+    def busy_by_kind(self) -> dict:
+        out: dict = {}
+        for q, spans in self.busy.items():
+            for s, e, kind in spans:
+                out[kind] = out.get(kind, 0) + (e - s)
+        return out
+
+
+def _alu_ii(hw: VTAConfig, two_operand: bool) -> int:
+    if hw.alu_ii >= 4:                       # unpipelined (as published)
+        return hw.alu_ii + 1 if two_operand else hw.alu_ii
+    # pipelined: II=2 for two operands (one acc read port), II=1 immediate
+    return max(hw.alu_ii, 2) if two_operand else hw.alu_ii
+
+
+def insn_cycles(insn, hw: VTAConfig) -> int:
+    """Execution occupancy of the owning module (memory time modelled apart)."""
+    if isinstance(insn, GemmInsn):
+        return insn.iterations() * hw.gemm_ii + hw.gemm_depth + DECODE_OVERHEAD
+    if isinstance(insn, AluInsn):
+        return insn.iterations() * _alu_ii(hw, insn.two_operand) \
+            + hw.gemm_depth + DECODE_OVERHEAD
+    if isinstance(insn, (LoadInsn, StoreInsn)):
+        return CMD_OVERHEAD
+    return DECODE_OVERHEAD
+
+
+def run_tsim(prog: Program, hw: VTAConfig, *, check_hazards: bool = False) -> TsimResult:
+    queues = prog.queues
+    names = ("load", "compute", "store")
+    idx = {q: 0 for q in names}
+    qtime = {q: 0 for q in names}
+    busy = {q: [] for q in names}
+    tokens: dict = {("load", "compute"): deque(), ("compute", "load"): deque(),
+                    ("compute", "store"): deque(), ("store", "compute"): deque()}
+    engine_free = 0
+    stall_cycles = {q: 0 for q in names}
+    total_dram = 0
+
+    def pops_of(insn, q):
+        out = []
+        if q == "load" and insn.pop_next:
+            out.append(("compute", "load"))
+        if q == "compute":
+            if insn.pop_prev:
+                out.append(("load", "compute"))
+            if insn.pop_next:
+                out.append(("store", "compute"))
+        if q == "store" and insn.pop_prev:
+            out.append(("compute", "store"))
+        return out
+
+    def pushes_of(insn, q):
+        out = []
+        if q == "load" and insn.push_next:
+            out.append(("load", "compute"))
+        if q == "compute":
+            if insn.push_prev:
+                out.append(("compute", "load"))
+            if insn.push_next:
+                out.append(("compute", "store"))
+        if q == "store" and insn.push_prev:
+            out.append(("store", "compute"))
+        return out
+
+    progress = True
+    while progress:
+        progress = False
+        for q in names:
+            while idx[q] < len(queues[q]):
+                insn = queues[q][idx[q]]
+                pops = pops_of(insn, q)
+                if any(not tokens[p] for p in pops):
+                    break
+                ready = qtime[q]
+                for p in pops:
+                    ready = max(ready, tokens[p].popleft())
+                start = ready
+                if isinstance(insn, (LoadInsn, StoreInsn)):
+                    nonloc_bytes = insn_dram_bytes(insn, hw)
+                    occ = math.ceil(nonloc_bytes / hw.mem_width_bytes)
+                    issue = max(start, engine_free)
+                    engine_free = issue + occ
+                    end = issue + hw.dram_latency + occ + CMD_OVERHEAD
+                    total_dram += nonloc_bytes
+                    kind = ("uop_load" if getattr(insn, "buffer", None) == Buffer.UOP
+                            else "acc_load" if getattr(insn, "buffer", None) == Buffer.ACC
+                            and isinstance(insn, LoadInsn)
+                            else "store" if isinstance(insn, StoreInsn) else "load")
+                else:
+                    end = start + insn_cycles(insn, hw)
+                    kind = ("gemm" if isinstance(insn, GemmInsn)
+                            else "alu" if isinstance(insn, AluInsn) else "ctrl")
+                stall_cycles[q] += max(0, start - qtime[q])
+                if end > start:
+                    busy[q].append((start, end, kind))
+                qtime[q] = end
+                for p in pushes_of(insn, q):
+                    tokens[p].append(end)
+                idx[q] += 1
+                progress = True
+    for q in names:
+        if idx[q] < len(queues[q]):
+            raise RuntimeError(
+                f"tsim deadlock: queue {q} stuck at insn {idx[q]}/{len(queues[q])} "
+                f"({type(queues[q][idx[q]]).__name__})")
+    total = max(qtime.values())
+    return TsimResult(total_cycles=total, busy=busy, counts=prog.counts(),
+                      dram_bytes=total_dram, stalls=stall_cycles)
+
+
+def utilization_ascii(res: TsimResult, width: int = 100) -> str:
+    """Process-utilization strip chart (paper Fig 3/4), ASCII rendition."""
+    total = max(1, res.total_cycles)
+    lines = []
+    symbols = {"gemm": "G", "alu": "A", "load": "L", "store": "S",
+               "uop_load": "u", "acc_load": "a", "ctrl": "."}
+    for q in ("load", "compute", "store"):
+        row = [" "] * width
+        for s, e, kind in res.busy[q]:
+            c0 = int(s / total * width)
+            c1 = max(c0 + 1, int(e / total * width))
+            for c in range(c0, min(c1, width)):
+                row[c] = symbols.get(kind, "#")
+        lines.append(f"{q:8s}|{''.join(row)}|")
+    util = res.utilization()
+    lines.append("util: " + "  ".join(f"{q}={util[q]*100:.0f}%" for q in util))
+    return "\n".join(lines)

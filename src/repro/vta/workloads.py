@@ -1,0 +1,156 @@
+"""Paper workloads: ResNet-18/34/50/101 + MobileNet-1.0 layer tables.
+
+The C2-C11 convolution list matches the canonical TVM/VTA ResNet-18 workload
+table (the layers of paper Fig 10); conv1 (3 input channels) runs on the CPU
+as in the upstream stack (§IV.E). Channel counts are rounded up to the VTA
+block size when a configuration's BLOCK exceeds a layer's channels (MobileNet
+early layers on BLOCK=32/64) — the padding overhead is part of the measured
+cost, as on the real machine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.tps import ConvWorkload
+
+
+@dataclass(frozen=True)
+class Layer:
+    kind: str                  # conv | depthwise | maxpool | avgpool | dense
+    wl: ConvWorkload
+    post_op: str = "clip_shift"
+    bias: bool = False
+    on_cpu: bool = False       # channel-light layers the stack leaves on CPU
+
+
+def _conv(name, b, hw_, fi, fo, k, p, s, post="clip_shift") -> Layer:
+    return Layer("conv", ConvWorkload(name, b, hw_, hw_, k, k, fi, fo, p, p, s, s),
+                 post_op=post)
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18 C2-C11 (the canonical VTA conv workloads; Fig 10 layers)
+# ---------------------------------------------------------------------------
+def resnet18_convs(batch: int = 1) -> list[ConvWorkload]:
+    t = [
+        ("C2", 56, 64, 64, 3, 1, 1),
+        ("C3", 56, 64, 128, 3, 1, 2),
+        ("C4", 56, 64, 128, 1, 0, 2),
+        ("C5", 28, 128, 128, 3, 1, 1),
+        ("C6", 28, 128, 256, 3, 1, 2),
+        ("C7", 28, 128, 256, 1, 0, 2),
+        ("C8", 14, 256, 256, 3, 1, 1),
+        ("C9", 14, 256, 512, 3, 1, 2),
+        ("C10", 14, 256, 512, 1, 0, 2),
+        ("C11", 7, 512, 512, 3, 1, 1),
+    ]
+    return [ConvWorkload(f"resnet18.{n}", batch, s, s, k, k, fi, fo, p, p, st, st)
+            for (n, s, fi, fo, k, p, st) in t]
+
+
+def _basic_block(name, b, size, fi, fo, stride) -> list[Layer]:
+    layers = [_conv(f"{name}.a", b, size, fi, fo, 3, 1, stride)]
+    layers.append(_conv(f"{name}.b", b, size // stride, fo, fo, 3, 1, 1))
+    if stride != 1 or fi != fo:
+        layers.append(_conv(f"{name}.ds", b, size, fi, fo, 1, 0, stride))
+    return layers
+
+
+def _bottleneck(name, b, size, fi, mid, fo, stride) -> list[Layer]:
+    layers = [_conv(f"{name}.1", b, size, fi, mid, 1, 0, 1),
+              _conv(f"{name}.2", b, size, mid, mid, 3, 1, stride),
+              _conv(f"{name}.3", b, size // stride, mid, fo, 1, 0, 1)]
+    if stride != 1 or fi != fo:
+        layers.append(_conv(f"{name}.ds", b, size, fi, fo, 1, 0, stride))
+    return layers
+
+
+def _resnet(name: str, blocks: list[int], bottleneck: bool, batch: int) -> list[Layer]:
+    layers: list[Layer] = [
+        Layer("conv", ConvWorkload(f"{name}.conv1", batch, 224, 224, 7, 7, 3, 64,
+                                   3, 3, 2, 2), on_cpu=True),
+        Layer("maxpool", ConvWorkload(f"{name}.pool1", batch, 112, 112, 3, 3,
+                                      64, 64, 1, 1, 2, 2)),
+    ]
+    size = 56
+    fi = 64
+    for stage, n in enumerate(blocks):
+        for i in range(n):
+            stride = 2 if (stage > 0 and i == 0) else 1
+            if bottleneck:
+                mid = 64 * (2 ** stage)
+                fo = mid * 4
+                layers += _bottleneck(f"{name}.s{stage}b{i}", batch, size, fi,
+                                      mid, fo, stride)
+            else:
+                fo = 64 * (2 ** stage)
+                layers += _basic_block(f"{name}.s{stage}b{i}", batch, size, fi,
+                                       fo, stride)
+            size //= stride
+            fi = fo
+    layers.append(Layer("avgpool", ConvWorkload(f"{name}.gap", batch, 7, 7, 7, 7,
+                                                fi, fi, 0, 0, 7, 7)))
+    layers.append(Layer("dense", ConvWorkload(f"{name}.fc", batch, 1, 1, 1, 1,
+                                              fi, 1008, 0, 0, 1, 1),
+                        post_op="none", bias=True))
+    return layers
+
+
+def resnet(depth: int, batch: int = 1) -> list[Layer]:
+    cfg = {18: ([2, 2, 2, 2], False), 34: ([3, 4, 6, 3], False),
+           50: ([3, 4, 6, 3], True), 101: ([3, 4, 23, 3], True)}[depth]
+    return _resnet(f"resnet{depth}", cfg[0], cfg[1], batch)
+
+
+# ---------------------------------------------------------------------------
+# MobileNet 1.0 (depthwise-separable; §IV.D.3 / IV.E)
+# ---------------------------------------------------------------------------
+def mobilenet_v1(batch: int = 1) -> list[Layer]:
+    layers: list[Layer] = [
+        Layer("conv", ConvWorkload("mbn.conv1", batch, 224, 224, 3, 3, 3, 32,
+                                   1, 1, 2, 2), on_cpu=True),
+    ]
+    spec = [  # (size_in, cin, cout, stride)
+        (112, 32, 64, 1), (112, 64, 128, 2), (56, 128, 128, 1),
+        (56, 128, 256, 2), (28, 256, 256, 1), (28, 256, 512, 2),
+        (14, 512, 512, 1), (14, 512, 512, 1), (14, 512, 512, 1),
+        (14, 512, 512, 1), (14, 512, 512, 1), (14, 512, 1024, 2),
+        (7, 1024, 1024, 1),
+    ]
+    for i, (size, ci, co, s) in enumerate(spec):
+        layers.append(Layer("depthwise",
+                            ConvWorkload(f"mbn.dw{i}", batch, size, size, 3, 3,
+                                         ci, ci, 1, 1, s, s),
+                            post_op="relu_shift"))
+        layers.append(_conv(f"mbn.pw{i}", batch, size // s, ci, co, 1, 0, 1,
+                            post="relu_shift"))
+    layers.append(Layer("avgpool", ConvWorkload("mbn.gap", batch, 7, 7, 7, 7,
+                                                1024, 1024, 0, 0, 7, 7)))
+    layers.append(Layer("dense", ConvWorkload("mbn.fc", batch, 1, 1, 1, 1,
+                                              1024, 1008, 0, 0, 1, 1),
+                        post_op="none", bias=True))
+    return layers
+
+
+def pad_for_blocking(wl: ConvWorkload, hw) -> ConvWorkload:
+    """Round channel counts up to the VTA block sizes (cost of mis-fit)."""
+    from dataclasses import replace
+    fi = max(wl.fi, hw.block_in) if not wl.depthwise else max(wl.fi, hw.block_out)
+    fo = max(wl.fo, hw.block_out)
+    fi = -(-fi // hw.block_in) * hw.block_in if not wl.depthwise else \
+        -(-fi // hw.block_out) * hw.block_out
+    fo = -(-fo // hw.block_out) * hw.block_out
+    if wl.depthwise:
+        fi = fo = max(fi, fo)
+    b = -(-wl.b // hw.batch) * hw.batch
+    return replace(wl, fi=fi, fo=fo, b=b)
+
+
+NETWORKS = {
+    "resnet18": lambda b=1: resnet(18, b),
+    "resnet34": lambda b=1: resnet(34, b),
+    "resnet50": lambda b=1: resnet(50, b),
+    "resnet101": lambda b=1: resnet(101, b),
+    "mobilenet1.0": mobilenet_v1,
+}

@@ -1,0 +1,111 @@
+"""HLO collective parsing + roofline math + VTA roofline/area models."""
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import parse_collectives, shape_bytes
+from repro.analysis.roofline import model_flops
+from repro.configs import ARCHS
+from repro.core.area_model import area_breakdown, scaled_area
+from repro.core.dse import make_config
+from repro.core.roofline import (HBM_BW, PEAK_FLOPS, RooflineTerms, tpu_terms,
+                                 vta_attainable, vta_bounds)
+
+HLO = """
+HloModule jit_step
+
+%add {
+}
+
+ENTRY %main {
+  %p0 = f32[16,1024]{1,0} parameter(0)
+  %p1 = bf16[8,128]{1,0} parameter(1)
+  %ag = f32[256,1024]{1,0} all-gather(%p0), dimensions={0}
+  %ar = f32[16,1024]{1,0} all-reduce(%p0), to_apply=%add
+  %ars = f32[16,1024]{1,0} all-reduce-start(%p0), to_apply=%add
+  %ard = f32[16,1024]{1,0} all-reduce-done(%ars)
+  %rs = f32[1,1024]{1,0} reduce-scatter(%p0), dimensions={0}
+  %a2a = bf16[8,128]{1,0} all-to-all(%p1), dimensions={0}
+  %cp = bf16[8,128]{1,0} collective-permute(%p1), source_target_pairs={{0,1}}
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[16,1024]{1,0}") == 16 * 1024 * 4
+    assert shape_bytes("bf16[8,128]") == 8 * 128 * 2
+    assert shape_bytes("(f32[4,4], s32[2])") == 64 + 8
+    assert shape_bytes("f32[]") == 4
+
+
+def test_parse_collectives():
+    stats = parse_collectives(HLO)
+    p0 = 16 * 1024 * 4
+    p1 = 8 * 128 * 2
+    assert stats.count_by_kind == {"all-gather": 1, "all-reduce": 2,
+                                   "reduce-scatter": 1, "all-to-all": 1,
+                                   "collective-permute": 1}
+    assert stats.bytes_by_kind["all-reduce"] == 2 * p0   # start counted once
+    assert stats.bytes_by_kind["all-gather"] == p0       # operand, not result
+    assert stats.bytes_by_kind["all-to-all"] == p1
+    assert stats.total_bytes == 3 * p0 + p0 + 2 * p1
+
+
+def test_tpu_terms_math():
+    t = tpu_terms(PEAK_FLOPS, HBM_BW, 0.0)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.dominant in ("compute", "memory")
+    t2 = tpu_terms(1e12, 1e9, 200e9 * 4)
+    assert t2.dominant == "collective"
+    assert 0 < t2.fraction_of_roofline() < 1
+
+
+def test_model_flops_scaling():
+    dense = model_flops(ARCHS["qwen3-0.6b"], "train_4k")
+    # 6 * N * D lower bound (attention adds more)
+    n = ARCHS["qwen3-0.6b"].active_param_count()
+    assert dense >= 6 * n * 256 * 4096
+    moe = ARCHS["mixtral-8x22b"]
+    assert model_flops(moe, "train_4k") < 6 * moe.param_count() * 256 * 4096
+    # decode flops are ~B/(B*S) of prefill flops
+    pf = model_flops(ARCHS["qwen3-0.6b"], "prefill_32k")
+    dc = model_flops(ARCHS["qwen3-0.6b"], "decode_32k")
+    assert dc < pf
+
+
+def test_param_counts_sane():
+    """Analytic parameter counts are in the right ballpark per arch name."""
+    approx = {
+        "qwen3-0.6b": (0.4e9, 1.3e9),
+        "qwen2.5-32b": (25e9, 40e9),
+        "deepseek-67b": (55e9, 80e9),
+        "gemma2-27b": (20e9, 36e9),
+        "mixtral-8x22b": (120e9, 160e9),
+    }
+    for name, (lo, hi) in approx.items():
+        n = ARCHS[name].param_count()
+        assert lo < n < hi, (name, n)
+    for name, cfg in ARCHS.items():
+        assert cfg.active_param_count() <= cfg.param_count()
+
+
+def test_vta_roofline_and_area():
+    hw = make_config(4, 8, 1)
+    peak, bw = vta_bounds(hw)
+    assert peak == 2 * 256
+    assert vta_attainable(hw, 1e9) == peak
+    assert vta_attainable(hw, 1.0) == bw
+    big = make_config(6, 64, 1)
+    ratio = scaled_area(big, hw)
+    assert 8 < ratio < 16        # the Fig-13 big end (~12x)
+    bd = area_breakdown(hw)
+    assert bd["sram"] > bd["mac"]        # paper: scratchpads dominate
+
+
+def test_long_context_skip_rule():
+    from repro.launch.dryrun import runnable_cells
+    cells = runnable_cells()
+    longs = {a for a, s in cells if s == "long_500k"}
+    assert longs == {"rwkv6-1.6b", "recurrentgemma-9b", "mixtral-8x22b",
+                     "gemma2-27b"}
+    assert len(cells) == 10 * 3 + 4

