@@ -1,31 +1,46 @@
 """Paper §IV.E: end-to-end networks on the accelerator — full ResNets
 (incl. previously-disabled pooling and FC layers) and MobileNet-1.0
-(depthwise on the ALU via the new element-wise multiply)."""
+(depthwise on the ALU via the new element-wise multiply).
+
+Each network is one `DSEJob` on the pipelined default config, evaluated
+through the DSE engine (shared per-layer tsim reuse; cacheable when a
+`cache_dir` is given).
+"""
 from __future__ import annotations
 
-from repro.vta.isa import VTAConfig
-from repro.vta.network import run_network
-from repro.vta.workloads import NETWORKS
+from typing import Optional
+
+from repro.core.dse import DSEJob, ResultCache, eval_job
 
 
 def run(nets=("resnet18", "resnet34", "resnet50", "mobilenet1.0"),
-        verbose: bool = True) -> dict:
-    hw = VTAConfig(gemm_ii=1, alu_ii=1)
+        verbose: bool = True, cache_dir: Optional[str] = None) -> dict:
+    cache = ResultCache(cache_dir) if cache_dir else None
     rows = []
     if verbose:
         print("== bench_end2end (paper §IV.E) ==")
     for name in nets:
-        layers = NETWORKS[name]()
-        rep = run_network(name, layers, hw)
-        kinds = {}
-        for l in rep.layers:
-            if not l.on_cpu:
-                kinds[l.kind] = kinds.get(l.kind, 0) + 1
-        row = {"net": name, **rep.summary(), "vta_layer_kinds": kinds}
+        job = DSEJob(network=name)
+        rec = cache.get(job.key()) if cache else None
+        if rec is None:
+            rec = eval_job(job)
+            if cache:
+                cache.put(job.key(), rec)
+        assert rec["feasible"], rec
+        kinds: dict = {}
+        for l in rec["layers"]:
+            if not l["on_cpu"]:
+                kinds[l["kind"]] = kinds.get(l["kind"], 0) + 1
+        row = {"net": name, "cycles": rec["cycles"],
+               "dram_bytes": rec["dram_bytes"], "macs": rec["macs"],
+               "macs_per_cycle": rec["macs"] / max(1, rec["cycles"]),
+               "vta_layers": sum(kinds.values()),
+               "cpu_layers": sum(1 for l in rec["layers"] if l["on_cpu"]),
+               "vta_layer_kinds": kinds}
         rows.append(row)
         if verbose:
-            print(f"  {name:14s}: {rep.total_cycles/1e6:8.2f}M cycles, "
-                  f"{rep.total_dram_bytes/1e6:7.1f}MB DRAM, "
+            print(f"  {name:14s}: {row['cycles']/1e6:8.2f}M cycles, "
+                  f"{row['dram_bytes']/1e6:7.1f}MB DRAM, "
                   f"{row['macs_per_cycle']:6.1f} MACs/cy, layers on VTA: {kinds}"
                   f" (+{row['cpu_layers']} on CPU)")
     return {"rows": rows}

@@ -1,43 +1,49 @@
 """Paper §IV.F / Fig 13: area-cycle design space for ResNet-18.
 
 Sweeps GEMM shape (4x4 / 5x5 / 6x6 in log2, the paper's three ovals), memory
-interface width (8..64B) and scratchpad scale; reports the pareto frontier
-and the big-end point (paper: ~11.5x fewer cycles at ~12x area vs the
-pipelined default)."""
+interface width (8..64B) and scratchpad scale via the parallel DSE engine
+(`repro.core.dse.run_sweep`); reports the pareto frontier and the big-end
+point (paper: ~11.5x fewer cycles at ~12x area vs the pipelined default).
+
+Pass `cache_dir` to make repeat runs incremental (the engine's
+content-addressed cache); the default is a fresh in-memory sweep.
+"""
 from __future__ import annotations
 
-from repro.core.dse import DSEPoint, make_config, pareto, sweep
-from repro.vta.workloads import resnet
+from typing import Optional
+
+from repro.core.dse import run_sweep
+from repro.vta.workloads import resolve_network
 
 
-def run(verbose: bool = True, spad_scales=(1, 2, 4), batch_logs=(0,)) -> dict:
-    layers = resnet(18)
-    ref = make_config()     # pipelined 1x16x16, 8B bus
-    points = sweep(layers, reference=ref, spad_scales=spad_scales,
-                   batch_logs=batch_logs)
-    front = pareto(points)
-    ref_pt = min((p for p in points if p.hw.log_block_in == 4
-                  and p.hw.mem_width_bytes == 8), key=lambda p: p.area)
-    best = min(points, key=lambda p: p.cycles)
+def run(verbose: bool = True, spad_scales=(1, 2, 4), batch_logs=(0,),
+        networks=("resnet18",), cache_dir: Optional[str] = None) -> dict:
+    res = run_sweep(networks, out_dir=cache_dir, spad_scales=spad_scales,
+                    batch_logs=batch_logs, per_layer=False)
+    full = res.report()
+    rep = full["per_network"][resolve_network(networks[0])]
     out = {
-        "n_points": len(points),
-        "pareto": [(p.label, p.area, p.cycles) for p in front],
-        "ref": (ref_pt.label, ref_pt.area, ref_pt.cycles),
-        "best": (best.label, best.area, best.cycles),
-        "cycle_gain_best": ref_pt.cycles / best.cycles,
-        "area_cost_best": best.area / ref_pt.area,
-        "area_span": max(p.area for p in points) / min(p.area for p in points),
+        "n_points": rep["n_points"],
+        "pareto": rep["pareto"],
+        "ref": rep["ref"],
+        "best": rep["best"],
+        "cycle_gain_best": rep["cycle_gain_best"],
+        "area_cost_best": rep["area_cost_best"],
+        "area_span": rep["area_span"],
     }
+    if len(res.networks) > 1:
+        out["joint"] = full["joint"]
     if verbose:
         print("== bench_pareto (paper Fig 13) ==")
-        print(f"  {len(points)} feasible configurations "
+        print(f"  {out['n_points']} feasible configurations "
               f"(area span {out['area_span']:.1f}x)")
         print("  pareto frontier (area_scaled, cycles):")
         for label, a, c in out["pareto"]:
             print(f"    {label:22s} area {a:6.2f}x  cycles {c/1e6:7.2f}M")
-        print(f"  reference {ref_pt.label}: area 1.0x, "
-              f"{ref_pt.cycles/1e6:.2f}M cycles")
-        print(f"  big end   {best.label}: {out['cycle_gain_best']:.1f}x fewer "
+        ref_label, ref_area, ref_cycles = out["ref"]
+        print(f"  reference {ref_label}: area 1.0x, "
+              f"{ref_cycles/1e6:.2f}M cycles")
+        print(f"  big end   {out['best'][0]}: {out['cycle_gain_best']:.1f}x fewer "
               f"cycles at {out['area_cost_best']:.1f}x area  "
               f"[paper: ~11.5x at ~12x]")
     return out

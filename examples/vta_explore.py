@@ -5,13 +5,12 @@ view the process-utilization strip chart, then sweep the design space.
 """
 import numpy as np
 
-from repro.core.dse import make_config, pareto, sweep
+from repro.core.dse import run_sweep
 from repro.core.tps import ConvWorkload, fallback_tiling, tps_search
 from repro.vta.fsim import FSim, conv2d_ref, post_op_ref
 from repro.vta.isa import PIPELINED_VTA
 from repro.vta.scheduler import schedule_conv
 from repro.vta.tsim import run_tsim, utilization_ascii
-from repro.vta.workloads import resnet
 
 
 def main():
@@ -42,10 +41,10 @@ def main():
           f"{wl.macs/ts.total_cycles:.0f} MACs/cycle")
     print(utilization_ascii(ts, width=84))
 
-    print("\ndesign-space sweep (resnet-18, quick)...")
-    pts = sweep(resnet(18), reference=make_config(), spad_scales=(1,),
-                mem_widths=(8, 64))
-    for p in pareto(pts):
+    print("\ndesign-space sweep (resnet-18, quick, via the DSE engine)...")
+    res = run_sweep(["resnet18"], spad_scales=(1,), mem_widths=(8, 64),
+                    per_layer=False)
+    for p in res.frontier("resnet18"):
         print(f"  {p.label:22s} area {p.area:6.2f}x  cycles {p.cycles/1e6:.2f}M")
 
 

@@ -1,21 +1,56 @@
-"""Design-space exploration -> area/cycle pareto (paper §IV.F, Fig 13).
+"""Parallel, cached, multi-network design-space exploration (paper §IV.F).
 
-Sweeps GEMM shape (the paper's 4x4 / 5x5 / 6x6 log2 "MAC shape" ovals),
-memory interface width (8..64 B/cycle) and scratchpad sizing, runs the
-workload through TPS + scheduler + tsim for each feasible configuration, and
-returns all points plus the pareto frontier.
+The paper's headline artifact is the area–performance Pareto curve (Fig 13)
+over VTA configurations spanning GEMM shape (4x4/5x5/6x6 log2 "MAC shape"),
+memory-interface width (8..64 B/cycle) and scratchpad sizing. This module
+turns the original serial single-network sweep into a job-based engine:
+
+  * ``DSEJob`` = one (hardware config, network) pair; the full sweep is the
+    cross product of the config grid and the requested networks;
+  * jobs execute across a process pool (the subprocess-cell pattern of
+    ``analysis/sweep.py``, with warm workers instead of cold interpreters);
+  * every result — feasible or not — lands in a content-addressed on-disk
+    cache (sha256 of config + network fingerprint -> ``DSEPoint`` JSON), so
+    sweeps are resumable and incremental: re-running is ~100% cache hits,
+    and editing a workload table invalidates exactly the points that used it;
+  * within a worker, repeated layer shapes share one schedule + tsim run via
+    the ``run_network`` layer cache (deep ResNets are mostly repeat blocks);
+  * the report gives per-network frontiers plus a *joint* frontier over
+    configs feasible on every network (joint cycles = sum across networks).
+
+CLI:
+
+  PYTHONPATH=src python -m repro.core.dse --networks resnet18,mobilenet \
+      --out results/dse
 """
 from __future__ import annotations
 
-import dataclasses
+import argparse
+import hashlib
+import json
+import math
+import os
+import sys
+import time
+from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, Optional
 
 from repro.core.area_model import scaled_area
 from repro.vta.isa import VTAConfig
 from repro.vta.network import run_network
+from repro.vta.workloads import NETWORKS, network_fingerprint, resolve_network
+
+ENGINE_VERSION = 1      # bump to invalidate every cached point
+
+DEFAULT_LOG_BLOCKS = (4, 5, 6)
+DEFAULT_MEM_WIDTHS = (8, 16, 32, 64)
+DEFAULT_SPAD_SCALES = (1, 2, 4)
 
 
+# ---------------------------------------------------------------------------
+# Points and configs
+# ---------------------------------------------------------------------------
 @dataclass
 class DSEPoint:
     hw: VTAConfig
@@ -23,16 +58,34 @@ class DSEPoint:
     area: float                 # scaled to reference
     dram_bytes: int
     label: str = ""
+    network: str = ""
+    macs: int = 0
+    layers: list = field(default_factory=list)   # per-layer dicts (optional)
 
     @property
     def mac_shape(self) -> str:
         return f"{self.hw.log_block_in}x{self.hw.log_block_out}"
 
+    def to_dict(self) -> dict:
+        return {"feasible": True, "network": self.network, "label": self.label,
+                "cycles": self.cycles, "area": self.area,
+                "dram_bytes": self.dram_bytes, "macs": self.macs,
+                "mac_shape": self.mac_shape,
+                "config": json.loads(self.hw.to_json()),
+                "layers": self.layers}
+
+    @staticmethod
+    def from_dict(d: dict) -> "DSEPoint":
+        return DSEPoint(hw=VTAConfig.from_json(json.dumps(d["config"])),
+                        cycles=d["cycles"], area=d["area"],
+                        dram_bytes=d["dram_bytes"], label=d["label"],
+                        network=d.get("network", ""), macs=d.get("macs", 0),
+                        layers=d.get("layers", []))
+
 
 def make_config(log_block: int = 4, mem_width: int = 8, spad_scale: int = 1,
                 batch_log: int = 0, pipelined: bool = True) -> VTAConfig:
     """One DSE candidate. spad_scale multiplies every scratchpad (pow2)."""
-    import math
     s = int(math.log2(spad_scale))
     # scale wgt/acc with block area so depth (tiles held) stays comparable
     blk = log_block - 4
@@ -50,11 +103,324 @@ def make_config(log_block: int = 4, mem_width: int = 8, spad_scale: int = 1,
     )
 
 
+# ---------------------------------------------------------------------------
+# Jobs
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class DSEJob:
+    """One unit of sweep work: a hardware candidate evaluated on one network."""
+    network: str
+    log_block: int = 4
+    mem_width: int = 8
+    spad_scale: int = 1
+    batch_log: int = 0
+    pipelined: bool = True
+    per_layer: bool = True      # include per-layer breakdowns in the record
+
+    def __post_init__(self):
+        # canonicalize aliases so key() and evaluation always agree
+        object.__setattr__(self, "network", resolve_network(self.network))
+
+    def config(self) -> VTAConfig:
+        return make_config(self.log_block, self.mem_width, self.spad_scale,
+                           self.batch_log, self.pipelined)
+
+    @property
+    def config_label(self) -> str:
+        return (f"b{1 << self.batch_log}x{1 << self.log_block}"
+                f"x{1 << self.log_block}/mw{self.mem_width}/sp{self.spad_scale}")
+
+    @property
+    def label(self) -> str:
+        return f"{self.network}:{self.config_label}"
+
+    def key(self) -> str:
+        """Content address: engine version + config + workload fingerprint."""
+        ident = {"v": ENGINE_VERSION,
+                 "config": json.loads(self.config().to_json()),
+                 "network": self.network,
+                 "workload": network_fingerprint(self.network,
+                                                batch=1 << self.batch_log),
+                 "pipelined": self.pipelined,
+                 "per_layer": self.per_layer}
+        blob = json.dumps(ident, sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()
+
+
+def make_jobs(networks, *, log_blocks=DEFAULT_LOG_BLOCKS,
+              mem_widths=DEFAULT_MEM_WIDTHS, spad_scales=DEFAULT_SPAD_SCALES,
+              batch_logs=(0,), pipelined: bool = True,
+              per_layer: bool = True) -> list[DSEJob]:
+    return [DSEJob(network=n, log_block=lb, mem_width=mw, spad_scale=ss,
+                   batch_log=bl, pipelined=pipelined, per_layer=per_layer)
+            for n in networks for lb in log_blocks for mw in mem_widths
+            for ss in spad_scales for bl in batch_logs]
+
+
+# ---------------------------------------------------------------------------
+# Content-addressed result cache
+# ---------------------------------------------------------------------------
+class ResultCache:
+    """One JSON file per point under ``<dir>/<sha256>.json``."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+
+    def path(self, key: str) -> str:
+        return os.path.join(self.root, key + ".json")
+
+    def get(self, key: str) -> Optional[dict]:
+        p = self.path(key)
+        try:
+            with open(p) as f:
+                rec = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            self.misses += 1
+            return None
+        self.hits += 1
+        return rec
+
+    def put(self, key: str, record: dict) -> None:
+        tmp = self.path(key) + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(record, f, indent=1)
+        os.replace(tmp, self.path(key))
+
+    def __len__(self) -> int:
+        return sum(1 for n in os.listdir(self.root) if n.endswith(".json"))
+
+
+# ---------------------------------------------------------------------------
+# Job evaluation (runs inside pool workers)
+# ---------------------------------------------------------------------------
+_LAYER_CACHE: dict = {}     # per-process: repeated shapes share tsim runs
+
+
+def eval_job(job: DSEJob) -> dict:
+    """Evaluate one job to its cache record (feasible point or reason)."""
+    hw = job.config()
+    base = {"network": job.network, "label": job.config_label,
+            "config": json.loads(hw.to_json())}
+    errs = hw.validate()
+    if errs:
+        return {**base, "feasible": False, "reason": "; ".join(errs)}
+    layers = NETWORKS[job.network](1 << job.batch_log)
+    try:
+        rep = run_network(job.network, layers, hw, layer_cache=_LAYER_CACHE)
+    except (AssertionError, RuntimeError, ValueError) as e:
+        # infeasible point (sparse design space, §V)
+        return {**base, "feasible": False,
+                "reason": f"{type(e).__name__}: {e}"}
+    pt = DSEPoint(hw=hw, cycles=rep.total_cycles,
+                  area=scaled_area(hw, make_config()),
+                  dram_bytes=rep.total_dram_bytes, label=job.config_label,
+                  network=job.network, macs=rep.total_macs,
+                  layers=rep.per_layer() if job.per_layer else [])
+    return pt.to_dict()
+
+
+def _pool_eval(job: DSEJob) -> dict:
+    return eval_job(job)
+
+
+# ---------------------------------------------------------------------------
+# Sweep engine
+# ---------------------------------------------------------------------------
+@dataclass
+class SweepResult:
+    points: dict                # network -> list[DSEPoint]
+    infeasible: dict            # network -> list[record]
+    cache_hits: int = 0
+    cache_misses: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def networks(self) -> list[str]:
+        return sorted(self.points)
+
+    def frontier(self, network: str) -> list[DSEPoint]:
+        return pareto(self.points[network])
+
+    def joint_points(self) -> list[dict]:
+        """Configs feasible on *every* network: joint cycles = sum."""
+        by_label: dict = {}
+        for net, pts in self.points.items():
+            for p in pts:
+                by_label.setdefault(p.label, {})[net] = p
+        nets = set(self.points)
+        out = []
+        for label, per_net in sorted(by_label.items()):
+            if set(per_net) != nets:
+                continue
+            any_pt = next(iter(per_net.values()))
+            out.append({"label": label, "area": any_pt.area,
+                        "cycles": sum(p.cycles for p in per_net.values()),
+                        "per_network": {n: p.cycles
+                                        for n, p in per_net.items()}})
+        return out
+
+    def joint_frontier(self) -> list[dict]:
+        return pareto_front(self.joint_points(),
+                            area=lambda d: d["area"],
+                            cycles=lambda d: d["cycles"])
+
+    def report(self) -> dict:
+        rep = {"engine_version": ENGINE_VERSION,
+               "networks": self.networks,
+               "cache": {"hits": self.cache_hits, "misses": self.cache_misses},
+               "wall_s": round(self.wall_s, 2),
+               "per_network": {}, "joint": {}}
+        for net in self.networks:
+            pts = self.points[net]
+            entry = {"n_points": len(pts),
+                     "n_infeasible": len(self.infeasible.get(net, [])),
+                     "pareto": [(p.label, p.area, p.cycles)
+                                for p in self.frontier(net)]}
+            if pts:
+                ref = _reference_point(pts)
+                best = min(pts, key=lambda p: p.cycles)
+                entry.update(
+                    ref=(ref.label, ref.area, ref.cycles),
+                    best=(best.label, best.area, best.cycles),
+                    cycle_gain_best=ref.cycles / best.cycles,
+                    area_cost_best=best.area / ref.area,
+                    area_span=max(p.area for p in pts) / min(p.area for p in pts),
+                )
+            rep["per_network"][net] = entry
+        joint = self.joint_points()
+        if joint:
+            ref = min((d for d in joint if d["area"] <= 1.0 + 1e-9),
+                      key=lambda d: d["area"], default=min(joint, key=lambda d: d["area"]))
+            best = min(joint, key=lambda d: d["cycles"])
+            rep["joint"] = {"n_points": len(joint),
+                            "pareto": [(d["label"], d["area"], d["cycles"])
+                                       for d in self.joint_frontier()],
+                            "ref": (ref["label"], ref["area"], ref["cycles"]),
+                            "best": (best["label"], best["area"], best["cycles"]),
+                            "cycle_gain_best": ref["cycles"] / best["cycles"],
+                            "area_cost_best": best["area"] / ref["area"]}
+        return rep
+
+
+def _reference_point(pts: list[DSEPoint]) -> DSEPoint:
+    """The pipelined default: smallest MAC array, narrowest bus (area 1.0x)."""
+    cands = [p for p in pts if p.hw.log_block_in == 4
+             and p.hw.mem_width_bytes == 8]
+    return min(cands or pts, key=lambda p: p.area)
+
+
+def run_sweep(networks, *, out_dir: Optional[str] = None,
+              log_blocks=DEFAULT_LOG_BLOCKS, mem_widths=DEFAULT_MEM_WIDTHS,
+              spad_scales=DEFAULT_SPAD_SCALES, batch_logs=(0,),
+              pipelined: bool = True, workers: Optional[int] = None,
+              per_layer: bool = True, use_cache: bool = True,
+              progress: Optional[Callable[[str], None]] = None) -> SweepResult:
+    """Run the full (config grid x networks) sweep across a process pool.
+
+    ``out_dir`` holds the content-addressed cache at ``<out_dir>/cache`` and
+    the combined ``report.json``; omit it for a purely in-memory sweep.
+    """
+    t0 = time.time()
+    jobs = make_jobs(networks, log_blocks=log_blocks, mem_widths=mem_widths,
+                     spad_scales=spad_scales, batch_logs=batch_logs,
+                     pipelined=pipelined, per_layer=per_layer)
+    keys = {job: job.key() for job in jobs}
+    cache = None
+    if out_dir is not None:
+        os.makedirs(out_dir, exist_ok=True)
+        if use_cache:
+            cache = ResultCache(os.path.join(out_dir, "cache"))
+
+    records: dict[str, dict] = {}
+    todo: list[DSEJob] = []
+    for job in jobs:
+        rec = cache.get(keys[job]) if cache is not None else None
+        if rec is not None:
+            records[keys[job]] = rec
+        else:
+            todo.append(job)
+
+    if todo:
+        workers = workers or max(1, os.cpu_count() or 1)
+
+        def note(key: str, rec: dict):
+            if cache is not None:
+                cache.put(key, rec)
+            if progress:
+                status = "ok" if rec.get("feasible") else "infeasible"
+                progress(f"[{len(records)}/{len(jobs)}] "
+                         f"{rec['network']}:{rec['label']} {status}")
+
+        if workers == 1 or len(todo) == 1:
+            for job in todo:
+                rec = _pool_eval(job)
+                records[keys[job]] = rec
+                note(keys[job], rec)
+        else:
+            with ProcessPoolExecutor(max_workers=workers) as pool:
+                futs = {pool.submit(_pool_eval, job): job for job in todo}
+                pending = set(futs)
+                while pending:
+                    done, pending = wait(pending, return_when=FIRST_COMPLETED)
+                    for fut in done:
+                        rec = fut.result()
+                        records[keys[futs[fut]]] = rec
+                        note(keys[futs[fut]], rec)
+
+    points: dict[str, list[DSEPoint]] = {}
+    infeasible: dict[str, list[dict]] = {}
+    for job in jobs:
+        rec = records[keys[job]]
+        if rec.get("feasible"):
+            points.setdefault(job.network, []).append(DSEPoint.from_dict(rec))
+        else:
+            infeasible.setdefault(job.network, []).append(rec)
+    for net in {j.network for j in jobs}:
+        points.setdefault(net, [])
+
+    res = SweepResult(points=points, infeasible=infeasible,
+                      cache_hits=cache.hits if cache else 0,
+                      cache_misses=cache.misses if cache else 0,
+                      wall_s=time.time() - t0)
+    if out_dir is not None:
+        with open(os.path.join(out_dir, "report.json"), "w") as f:
+            json.dump(res.report(), f, indent=2)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Pareto frontier
+# ---------------------------------------------------------------------------
+def pareto_front(items: list, *, area: Callable, cycles: Callable) -> list:
+    """Lower-left frontier: min cycles for given area (generic)."""
+    best = float("inf")
+    front = []
+    for it in sorted(items, key=lambda x: (area(x), cycles(x))):
+        if cycles(it) < best:
+            front.append(it)
+            best = cycles(it)
+    return front
+
+
+def pareto(points: list[DSEPoint]) -> list[DSEPoint]:
+    """Lower-left frontier: min cycles for given area."""
+    return pareto_front(points, area=lambda p: p.area,
+                        cycles=lambda p: p.cycles)
+
+
+# ---------------------------------------------------------------------------
+# Back-compat serial API (single network, explicit layer list)
+# ---------------------------------------------------------------------------
 def sweep(layers, *, reference: Optional[VTAConfig] = None,
-          log_blocks=(4, 5, 6), mem_widths=(8, 16, 32, 64),
-          spad_scales=(1, 2, 4), batch_logs=(0,), network: str = "resnet18",
-          progress=None) -> list[DSEPoint]:
+          log_blocks=DEFAULT_LOG_BLOCKS, mem_widths=DEFAULT_MEM_WIDTHS,
+          spad_scales=DEFAULT_SPAD_SCALES, batch_logs=(0,),
+          network: str = "resnet18", progress=None) -> list[DSEPoint]:
+    """Serial in-process sweep of one explicit layer list (legacy API)."""
     reference = reference or make_config()
+    layer_cache: dict = {}
     points: list[DSEPoint] = []
     for lb in log_blocks:
         for mw in mem_widths:
@@ -64,12 +430,14 @@ def sweep(layers, *, reference: Optional[VTAConfig] = None,
                     if hw.validate():
                         continue
                     try:
-                        rep = run_network(network, layers, hw)
+                        rep = run_network(network, layers, hw,
+                                          layer_cache=layer_cache)
                     except (AssertionError, RuntimeError, ValueError):
-                        continue      # infeasible point (sparse design space, §V)
+                        continue      # infeasible point (sparse space, §V)
                     pt = DSEPoint(hw=hw, cycles=rep.total_cycles,
                                   area=scaled_area(hw, reference),
                                   dram_bytes=rep.total_dram_bytes,
+                                  network=network, macs=rep.total_macs,
                                   label=f"b{1 << bl}x{1 << lb}x{1 << lb}"
                                         f"/mw{mw}/sp{ss}")
                     points.append(pt)
@@ -78,13 +446,77 @@ def sweep(layers, *, reference: Optional[VTAConfig] = None,
     return points
 
 
-def pareto(points: list[DSEPoint]) -> list[DSEPoint]:
-    """Lower-left frontier: min cycles for given area."""
-    pts = sorted(points, key=lambda p: (p.area, p.cycles))
-    front: list[DSEPoint] = []
-    best = float("inf")
-    for p in pts:
-        if p.cycles < best:
-            front.append(p)
-            best = p.cycles
-    return front
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def _print_report(rep: dict) -> None:
+    print(f"== DSE report ({', '.join(rep['networks'])}) ==")
+    c = rep["cache"]
+    print(f"  cache: {c['hits']} hits / {c['misses']} misses   "
+          f"wall {rep['wall_s']:.1f}s")
+    for net, e in rep["per_network"].items():
+        print(f"  -- {net}: {e['n_points']} feasible points "
+              f"(+{e['n_infeasible']} infeasible)")
+        for label, a, cyc in e["pareto"]:
+            print(f"     {label:22s} area {a:6.2f}x  cycles {cyc/1e6:8.2f}M")
+        if "cycle_gain_best" in e:
+            print(f"     big end {e['best'][0]}: {e['cycle_gain_best']:.1f}x "
+                  f"fewer cycles at {e['area_cost_best']:.1f}x area "
+                  f"[paper: ~11.5x at ~12x]")
+    j = rep.get("joint") or {}
+    if j:
+        print(f"  -- joint ({len(rep['networks'])} networks, "
+              f"{j['n_points']} common configs):")
+        for label, a, cyc in j["pareto"]:
+            print(f"     {label:22s} area {a:6.2f}x  cycles {cyc/1e6:8.2f}M")
+        print(f"     big end {j['best'][0]}: {j['cycle_gain_best']:.1f}x "
+              f"fewer cycles at {j['area_cost_best']:.1f}x area")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.dse",
+        description="Parallel cached multi-network VTA design-space sweep")
+    ap.add_argument("--networks", default="resnet18",
+                    help="comma-separated (resnet18,resnet34,resnet50,"
+                         "resnet101,mobilenet)")
+    ap.add_argument("--out", default="results/dse",
+                    help="output dir (cache + report.json)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="process-pool size (default: cpu count)")
+    ap.add_argument("--log-blocks", default="4,5,6")
+    ap.add_argument("--mem-widths", default="8,16,32,64")
+    ap.add_argument("--spad-scales", default="1,2,4")
+    ap.add_argument("--batch-logs", default="0")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="recompute everything, do not read/write the cache")
+    ap.add_argument("--no-per-layer", action="store_true",
+                    help="omit per-layer breakdowns from cached points")
+    args = ap.parse_args(argv)
+
+    ints = lambda s: tuple(int(x) for x in s.split(",") if x)
+    nets = [n for n in args.networks.split(",") if n]
+    try:
+        nets = [resolve_network(n) for n in nets]
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
+    if not nets:
+        print("error: --networks is empty", file=sys.stderr)
+        return 2
+    res = run_sweep(
+        nets,
+        out_dir=args.out,
+        log_blocks=ints(args.log_blocks), mem_widths=ints(args.mem_widths),
+        spad_scales=ints(args.spad_scales), batch_logs=ints(args.batch_logs),
+        workers=args.workers, per_layer=not args.no_per_layer,
+        use_cache=not args.no_cache,
+        progress=lambda line: print(line, flush=True))
+    _print_report(res.report())
+    if args.out:
+        print(f"  report: {os.path.join(args.out, 'report.json')}")
+    return 0 if any(res.points.values()) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

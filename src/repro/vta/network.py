@@ -25,6 +25,11 @@ class LayerReport:
     util: dict = field(default_factory=dict)
     bytes_by_buffer: dict = field(default_factory=dict)
 
+    def to_dict(self) -> dict:
+        return {"name": self.name, "kind": self.kind, "cycles": self.cycles,
+                "dram_bytes": self.dram_bytes, "macs": self.macs,
+                "on_cpu": self.on_cpu}
+
 
 @dataclass
 class NetworkReport:
@@ -51,6 +56,9 @@ class NetworkReport:
                 "vta_layers": sum(1 for l in self.layers if not l.on_cpu),
                 "cpu_layers": sum(1 for l in self.layers if l.on_cpu)}
 
+    def per_layer(self) -> list[dict]:
+        return [l.to_dict() for l in self.layers]
+
 
 def schedule_layer(layer: Layer, hw: VTAConfig, *, prefer_db: bool = True,
                    dedup_loads: bool = False,
@@ -74,26 +82,53 @@ def schedule_layer(layer: Layer, hw: VTAConfig, *, prefer_db: bool = True,
     raise ValueError(layer.kind)
 
 
+def layer_key(layer: Layer, hw: VTAConfig, *, prefer_db: bool = True,
+              dedup_loads: bool = False):
+    """Hashable identity of a (layer shape, schedule knobs, hw) evaluation.
+
+    The layer *name* is excluded: repeated shapes inside a network (and across
+    networks in one sweep) share one schedule + tsim run.
+    """
+    from dataclasses import replace
+    return (layer.kind, replace(layer.wl, name=""), layer.post_op, layer.bias,
+            hw, prefer_db, dedup_loads)
+
+
 def run_network(name: str, layers: list[Layer], hw: VTAConfig, *,
                 prefer_db: bool = True, dedup_loads: bool = False,
                 validate_encoding: bool = False,
-                tiling_fn=None) -> NetworkReport:
+                tiling_fn=None, layer_cache: Optional[dict] = None) -> NetworkReport:
+    """Schedule + tsim every layer. With `layer_cache` (any mutable mapping),
+    identical layer shapes reuse the prior tsim result — the per-layer reuse
+    hook the DSE engine leans on (repeat blocks dominate deep ResNets)."""
     report = NetworkReport(name=name, hw=hw)
     for layer in layers:
         lr = LayerReport(name=layer.wl.name, kind=layer.kind,
                          macs=layer.wl.macs, on_cpu=layer.on_cpu)
         if not layer.on_cpu:
-            sched = schedule_layer(layer, hw, prefer_db=prefer_db,
-                                   dedup_loads=dedup_loads,
-                                   tiling_fn=tiling_fn)
-            if validate_encoding:
-                sched.program.validate_encoding()
-            ts = run_tsim(sched.program, hw)
-            lr.cycles = ts.total_cycles
-            lr.dram_bytes = ts.dram_bytes
-            lr.tiling = sched.tiling
-            lr.counts = ts.counts
-            lr.util = ts.utilization()
-            lr.bytes_by_buffer = dict(sched.dram_bytes)
+            key = None
+            if layer_cache is not None and tiling_fn is None:
+                key = layer_key(layer, hw, prefer_db=prefer_db,
+                                dedup_loads=dedup_loads)
+            hit = layer_cache.get(key) if key is not None else None
+            if hit is not None:
+                (lr.cycles, lr.dram_bytes, lr.tiling, lr.counts, lr.util,
+                 lr.bytes_by_buffer) = hit
+            else:
+                sched = schedule_layer(layer, hw, prefer_db=prefer_db,
+                                       dedup_loads=dedup_loads,
+                                       tiling_fn=tiling_fn)
+                if validate_encoding:
+                    sched.program.validate_encoding()
+                ts = run_tsim(sched.program, hw)
+                lr.cycles = ts.total_cycles
+                lr.dram_bytes = ts.dram_bytes
+                lr.tiling = sched.tiling
+                lr.counts = ts.counts
+                lr.util = ts.utilization()
+                lr.bytes_by_buffer = dict(sched.dram_bytes)
+                if key is not None:
+                    layer_cache[key] = (lr.cycles, lr.dram_bytes, lr.tiling,
+                                        lr.counts, lr.util, lr.bytes_by_buffer)
         report.layers.append(lr)
     return report

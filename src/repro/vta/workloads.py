@@ -9,6 +9,7 @@ cost, as on the real machine.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -154,3 +155,36 @@ NETWORKS = {
     "resnet101": lambda b=1: resnet(101, b),
     "mobilenet1.0": mobilenet_v1,
 }
+
+_ALIASES = {
+    "mobilenet": "mobilenet1.0",
+    "mobilenetv1": "mobilenet1.0",
+    "mobilenet_v1": "mobilenet1.0",
+    "mobilenet-1.0": "mobilenet1.0",
+}
+
+
+def resolve_network(name: str) -> str:
+    """Canonical NETWORKS key for a user-supplied name (CLI aliases)."""
+    key = name.strip().lower().replace("resnet-", "resnet")
+    key = _ALIASES.get(key, key)
+    if key not in NETWORKS:
+        known = ", ".join(sorted(NETWORKS))
+        raise KeyError(f"unknown network {name!r}; known: {known}")
+    return key
+
+
+@functools.lru_cache(maxsize=None)
+def network_fingerprint(name: str, batch: int = 1) -> str:
+    """Content hash of a network's layer table.
+
+    Part of the DSE cache key: editing a workload definition invalidates
+    every cached point that depends on it, nothing else. Memoized — the
+    tables are module-level constants within a process.
+    """
+    import dataclasses
+    import hashlib
+    layers = NETWORKS[resolve_network(name)](batch)
+    desc = [(l.kind, l.post_op, l.bias, l.on_cpu, dataclasses.astuple(l.wl))
+            for l in layers]
+    return hashlib.sha256(repr(desc).encode()).hexdigest()[:16]

@@ -1,0 +1,145 @@
+"""DSE engine: cache behavior, pareto correctness, parallel smoke sweep."""
+import json
+import os
+
+import pytest
+
+from repro.core.dse import (DSEJob, DSEPoint, ResultCache, eval_job,
+                            make_config, make_jobs, pareto, pareto_front,
+                            run_sweep)
+from repro.vta.isa import VTAConfig
+from repro.vta.network import run_network
+from repro.vta.workloads import (NETWORKS, network_fingerprint,
+                                 resolve_network)
+
+GRID = dict(log_blocks=(4,), mem_widths=(8, 64), spad_scales=(1,))
+
+
+# ---------------------------------------------------------------------------
+# Pareto frontier on a synthetic point set
+# ---------------------------------------------------------------------------
+def _pt(area, cycles, label):
+    return DSEPoint(hw=make_config(), cycles=cycles, area=area, dram_bytes=0,
+                    label=label)
+
+
+def test_pareto_synthetic():
+    pts = [_pt(1.0, 100, "ref"),       # frontier (cheapest)
+           _pt(2.0, 50, "good"),       # frontier
+           _pt(2.5, 60, "dominated"),  # worse on both axes than `good`
+           _pt(3.0, 50, "tie"),        # same cycles as `good`, more area
+           _pt(4.0, 10, "big"),        # frontier (fastest)
+           _pt(4.0, 12, "big-slow")]   # same area as `big`, slower
+    front = [p.label for p in pareto(pts)]
+    assert front == ["ref", "good", "big"]
+
+
+def test_pareto_front_generic_keys():
+    items = [{"a": 1, "c": 9}, {"a": 2, "c": 5}, {"a": 3, "c": 7}]
+    front = pareto_front(items, area=lambda d: d["a"], cycles=lambda d: d["c"])
+    assert front == [{"a": 1, "c": 9}, {"a": 2, "c": 5}]
+
+
+# ---------------------------------------------------------------------------
+# Content-addressed job keys
+# ---------------------------------------------------------------------------
+def test_job_key_stable_and_config_sensitive():
+    j = DSEJob(network="resnet18", mem_width=8)
+    assert j.key() == DSEJob(network="resnet18", mem_width=8).key()
+    assert j.key() != DSEJob(network="resnet18", mem_width=16).key()
+    assert j.key() != DSEJob(network="mobilenet1.0", mem_width=8).key()
+    assert j.key() != DSEJob(network="resnet18", mem_width=8,
+                             per_layer=False).key()
+    # aliases canonicalize at construction: same key, same evaluation
+    assert DSEJob(network="mobilenet").network == "mobilenet1.0"
+    assert DSEJob(network="mobilenet").key() == \
+        DSEJob(network="mobilenet1.0").key()
+
+
+def test_network_aliases_and_fingerprint():
+    assert resolve_network("mobilenet") == "mobilenet1.0"
+    assert resolve_network("ResNet-18") == "resnet18"
+    with pytest.raises(KeyError):
+        resolve_network("vgg16")
+    assert network_fingerprint("resnet18") != network_fingerprint("resnet34")
+    assert network_fingerprint("mobilenet") == \
+        network_fingerprint("mobilenet1.0")
+
+
+# ---------------------------------------------------------------------------
+# Result cache
+# ---------------------------------------------------------------------------
+def test_result_cache_hit_miss_and_corruption(tmp_path):
+    cache = ResultCache(str(tmp_path / "c"))
+    assert cache.get("k" * 64) is None
+    cache.put("k" * 64, {"feasible": True, "cycles": 7})
+    assert cache.get("k" * 64) == {"feasible": True, "cycles": 7}
+    assert cache.hits == 1 and cache.misses == 1
+    # corrupt records read as misses, not crashes
+    with open(cache.path("k" * 64), "w") as f:
+        f.write("{not json")
+    assert cache.get("k" * 64) is None
+
+
+def test_sweep_cache_roundtrip(tmp_path):
+    out = str(tmp_path / "dse")
+    r1 = run_sweep(["resnet18"], out_dir=out, per_layer=False, workers=1,
+                   **GRID)
+    assert r1.cache_misses == 2 and r1.cache_hits == 0
+    assert len(os.listdir(os.path.join(out, "cache"))) == 2
+    r2 = run_sweep(["resnet18"], out_dir=out, per_layer=False, workers=1,
+                   **GRID)
+    assert r2.cache_hits == 2 and r2.cache_misses == 0
+    assert [p.cycles for p in r2.points["resnet18"]] == \
+        [p.cycles for p in r1.points["resnet18"]]
+    # cached point JSON round-trips through DSEPoint
+    rec = json.load(open(os.path.join(
+        out, "cache", os.listdir(os.path.join(out, "cache"))[0])))
+    pt = DSEPoint.from_dict(rec)
+    assert pt.cycles == rec["cycles"] and pt.hw.validate() == []
+
+
+# ---------------------------------------------------------------------------
+# End-to-end smoke sweep: 2 configs x 2 networks, process pool
+# ---------------------------------------------------------------------------
+def test_smoke_sweep_two_configs_two_networks(tmp_path):
+    out = str(tmp_path / "dse")
+    res = run_sweep(["resnet18", "mobilenet"], out_dir=out, per_layer=False,
+                    workers=2, **GRID)
+    assert set(res.points) == {"resnet18", "mobilenet1.0"}
+    for net, pts in res.points.items():
+        assert len(pts) == 2, net
+        assert all(p.cycles > 0 and p.area > 0 for p in pts)
+        # wider bus never slower at equal MAC shape / scratchpads
+        by_mw = {p.hw.mem_width_bytes: p.cycles for p in pts}
+        assert by_mw[64] <= by_mw[8]
+    rep = res.report()
+    assert rep["joint"]["n_points"] == 2
+    assert len(rep["joint"]["pareto"]) >= 1
+    assert os.path.exists(os.path.join(out, "report.json"))
+
+
+def test_eval_job_infeasible_config_is_recorded():
+    # scratchpads big enough to blow the 128-bit GEMM instruction budget
+    job = DSEJob(network="resnet18", log_block=6, spad_scale=4,
+                 per_layer=False)
+    rec = eval_job(job)
+    assert rec["feasible"] is False
+    assert "GEMM" in rec["reason"]
+
+
+# ---------------------------------------------------------------------------
+# Per-layer tsim reuse
+# ---------------------------------------------------------------------------
+def test_layer_cache_preserves_totals():
+    hw = VTAConfig(gemm_ii=1, alu_ii=1)
+    layers = NETWORKS["resnet18"]()
+    cold = run_network("resnet18", layers, hw)
+    cache: dict = {}
+    warm = run_network("resnet18", layers, hw, layer_cache=cache)
+    again = run_network("resnet18", layers, hw, layer_cache=cache)
+    assert warm.total_cycles == cold.total_cycles
+    assert again.total_cycles == cold.total_cycles
+    assert warm.total_dram_bytes == cold.total_dram_bytes
+    # repeat blocks mean strictly fewer unique evaluations than layers
+    assert 0 < len(cache) < sum(1 for l in layers if not l.on_cpu)

@@ -1,6 +1,7 @@
 """Property-based tests (hypothesis) for TPS and the tile searches."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st
 
 from repro.core.tile_search import (select_attention_tile,
                                     select_elementwise_block,
