@@ -31,18 +31,38 @@ def run(nets=("resnet18", "resnet34", "resnet50", "mobilenet1.0"),
         for l in rec["layers"]:
             if not l["on_cpu"]:
                 kinds[l["kind"]] = kinds.get(l["kind"], 0) + 1
+        segments = rec.get("segments", [])
+        fused_segs = [s for s in segments if len(s.get("layers", [])) > 1]
         row = {"net": name, "cycles": rec["cycles"],
                "dram_bytes": rec["dram_bytes"], "macs": rec["macs"],
                "macs_per_cycle": rec["macs"] / max(1, rec["cycles"]),
+               "dram_bytes_saved": rec.get("dram_bytes_saved", 0),
                "vta_layers": sum(kinds.values()),
                "cpu_layers": sum(1 for l in rec["layers"] if l["on_cpu"]),
-               "vta_layer_kinds": kinds}
+               "vta_layer_kinds": kinds,
+               "n_segments": len(segments),
+               "fused_segments": len(fused_segs)}
         rows.append(row)
         if verbose:
             print(f"  {name:14s}: {row['cycles']/1e6:8.2f}M cycles, "
                   f"{row['dram_bytes']/1e6:7.1f}MB DRAM, "
                   f"{row['macs_per_cycle']:6.1f} MACs/cy, layers on VTA: {kinds}"
                   f" (+{row['cpu_layers']} on CPU)")
+            if fused_segs:
+                print(f"  {'':14s}  graph compiler: "
+                      f"{row['dram_bytes_saved']/1e6:5.2f}MB DRAM avoided in "
+                      f"{len(fused_segs)} fused/resident segments "
+                      f"(of {len(segments)})")
+                for s in fused_segs:
+                    what = "+".join(s["layers"])
+                    tags = []
+                    if s.get("fused_adds"):
+                        tags.append("fused-add")
+                    if s.get("resident_edges"):
+                        tags.append("resident")
+                    print(f"  {'':16s}{what:44s} "
+                          f"[{','.join(tags)}] "
+                          f"saves {s['dram_bytes_saved']/1e3:7.1f}KB")
     return {"rows": rows}
 
 

@@ -63,6 +63,12 @@ def render(report: dict, *, chart: bool = True) -> str:
             out.append(f"  big end {e['best'][0]}: "
                        f"{e['cycle_gain_best']:.1f}x fewer cycles at "
                        f"{e['area_cost_best']:.1f}x area")
+        if e.get("total_dram_bytes_saved"):
+            ref_saved = e.get("ref_dram_bytes_saved", 0)
+            out.append(f"  graph compiler: "
+                       f"{e['total_dram_bytes_saved']/1e6:.1f}MB DRAM avoided "
+                       f"across points ({ref_saved/1e6:.2f}MB on the ref "
+                       f"config)")
     j = report.get("joint") or {}
     if j:
         out.append(f"\n[joint] {j['n_points']} configs feasible on all "

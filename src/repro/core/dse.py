@@ -39,9 +39,13 @@ from typing import Callable, Optional
 from repro.core.area_model import scaled_area
 from repro.vta.isa import VTAConfig
 from repro.vta.network import run_network
-from repro.vta.workloads import NETWORKS, network_fingerprint, resolve_network
+from repro.vta.workloads import (NETWORKS, network_fingerprint, network_graph,
+                                 resolve_network)
 
-ENGINE_VERSION = 1      # bump to invalidate every cached point
+ENGINE_VERSION = 2       # bump to invalidate every cached point
+                         # v2: graph compiler (residual adds modeled, fused
+                         # segments, scratchpad residency)
+CACHE_SCHEMA_VERSION = 2  # on-disk record layout; get() rejects other versions
 
 DEFAULT_LOG_BLOCKS = (4, 5, 6)
 DEFAULT_MEM_WIDTHS = (8, 16, 32, 64)
@@ -60,7 +64,9 @@ class DSEPoint:
     label: str = ""
     network: str = ""
     macs: int = 0
+    dram_bytes_saved: int = 0   # DRAM bytes the graph compiler avoided
     layers: list = field(default_factory=list)   # per-layer dicts (optional)
+    segments: list = field(default_factory=list)  # per-segment dicts (optional)
 
     @property
     def mac_shape(self) -> str:
@@ -70,9 +76,10 @@ class DSEPoint:
         return {"feasible": True, "network": self.network, "label": self.label,
                 "cycles": self.cycles, "area": self.area,
                 "dram_bytes": self.dram_bytes, "macs": self.macs,
+                "dram_bytes_saved": self.dram_bytes_saved,
                 "mac_shape": self.mac_shape,
                 "config": json.loads(self.hw.to_json()),
-                "layers": self.layers}
+                "layers": self.layers, "segments": self.segments}
 
     @staticmethod
     def from_dict(d: dict) -> "DSEPoint":
@@ -80,7 +87,9 @@ class DSEPoint:
                         cycles=d["cycles"], area=d["area"],
                         dram_bytes=d["dram_bytes"], label=d["label"],
                         network=d.get("network", ""), macs=d.get("macs", 0),
-                        layers=d.get("layers", []))
+                        dram_bytes_saved=d.get("dram_bytes_saved", 0),
+                        layers=d.get("layers", []),
+                        segments=d.get("segments", []))
 
 
 def make_config(log_block: int = 4, mem_width: int = 8, spad_scale: int = 1,
@@ -116,6 +125,7 @@ class DSEJob:
     batch_log: int = 0
     pipelined: bool = True
     per_layer: bool = True      # include per-layer breakdowns in the record
+    residency: bool = True      # graph compiler: fusion + on-chip residency
 
     def __post_init__(self):
         # canonicalize aliases so key() and evaluation always agree
@@ -142,7 +152,8 @@ class DSEJob:
                  "workload": network_fingerprint(self.network,
                                                 batch=1 << self.batch_log),
                  "pipelined": self.pipelined,
-                 "per_layer": self.per_layer}
+                 "per_layer": self.per_layer,
+                 "residency": self.residency}
         blob = json.dumps(ident, sort_keys=True).encode()
         return hashlib.sha256(blob).hexdigest()
 
@@ -150,9 +161,10 @@ class DSEJob:
 def make_jobs(networks, *, log_blocks=DEFAULT_LOG_BLOCKS,
               mem_widths=DEFAULT_MEM_WIDTHS, spad_scales=DEFAULT_SPAD_SCALES,
               batch_logs=(0,), pipelined: bool = True,
-              per_layer: bool = True) -> list[DSEJob]:
+              per_layer: bool = True, residency: bool = True) -> list[DSEJob]:
     return [DSEJob(network=n, log_block=lb, mem_width=mw, spad_scale=ss,
-                   batch_log=bl, pipelined=pipelined, per_layer=per_layer)
+                   batch_log=bl, pipelined=pipelined, per_layer=per_layer,
+                   residency=residency)
             for n in networks for lb in log_blocks for mw in mem_widths
             for ss in spad_scales for bl in batch_logs]
 
@@ -161,13 +173,21 @@ def make_jobs(networks, *, log_blocks=DEFAULT_LOG_BLOCKS,
 # Content-addressed result cache
 # ---------------------------------------------------------------------------
 class ResultCache:
-    """One JSON file per point under ``<dir>/<sha256>.json``."""
+    """One JSON file per point under ``<dir>/<sha256>.json``.
+
+    Every record is stamped with ``CACHE_SCHEMA_VERSION`` on put; ``get``
+    rejects records carrying any other version (counted as a miss) instead
+    of returning them — a schema bump can never surface stale-layout
+    records, even when the content key happens to collide across engine
+    generations.
+    """
 
     def __init__(self, root: str):
         self.root = root
         os.makedirs(root, exist_ok=True)
         self.hits = 0
         self.misses = 0
+        self.stale = 0
 
     def path(self, key: str) -> str:
         return os.path.join(self.root, key + ".json")
@@ -180,10 +200,15 @@ class ResultCache:
         except (FileNotFoundError, json.JSONDecodeError):
             self.misses += 1
             return None
+        if rec.get("schema") != CACHE_SCHEMA_VERSION:
+            self.stale += 1
+            self.misses += 1
+            return None
         self.hits += 1
         return rec
 
     def put(self, key: str, record: dict) -> None:
+        record = {**record, "schema": CACHE_SCHEMA_VERSION}
         tmp = self.path(key) + ".tmp"
         with open(tmp, "w") as f:
             json.dump(record, f, indent=1)
@@ -207,9 +232,10 @@ def eval_job(job: DSEJob) -> dict:
     errs = hw.validate()
     if errs:
         return {**base, "feasible": False, "reason": "; ".join(errs)}
-    layers = NETWORKS[job.network](1 << job.batch_log)
+    graph = network_graph(job.network, 1 << job.batch_log)
     try:
-        rep = run_network(job.network, layers, hw, layer_cache=_LAYER_CACHE)
+        rep = run_network(job.network, graph, hw, layer_cache=_LAYER_CACHE,
+                          fusion=job.residency, residency=job.residency)
     except (AssertionError, RuntimeError, ValueError) as e:
         # infeasible point (sparse design space, §V)
         return {**base, "feasible": False,
@@ -218,7 +244,9 @@ def eval_job(job: DSEJob) -> dict:
                   area=scaled_area(hw, make_config()),
                   dram_bytes=rep.total_dram_bytes, label=job.config_label,
                   network=job.network, macs=rep.total_macs,
-                  layers=rep.per_layer() if job.per_layer else [])
+                  dram_bytes_saved=rep.dram_bytes_saved,
+                  layers=rep.per_layer() if job.per_layer else [],
+                  segments=rep.per_segment() if job.per_layer else [])
     return pt.to_dict()
 
 
@@ -278,13 +306,18 @@ class SweepResult:
             entry = {"n_points": len(pts),
                      "n_infeasible": len(self.infeasible.get(net, [])),
                      "pareto": [(p.label, p.area, p.cycles)
-                                for p in self.frontier(net)]}
+                                for p in self.frontier(net)],
+                     "total_dram_bytes": sum(p.dram_bytes for p in pts),
+                     "total_dram_bytes_saved": sum(p.dram_bytes_saved
+                                                   for p in pts)}
             if pts:
                 ref = _reference_point(pts)
                 best = min(pts, key=lambda p: p.cycles)
                 entry.update(
                     ref=(ref.label, ref.area, ref.cycles),
                     best=(best.label, best.area, best.cycles),
+                    ref_dram_bytes=ref.dram_bytes,
+                    ref_dram_bytes_saved=ref.dram_bytes_saved,
                     cycle_gain_best=ref.cycles / best.cycles,
                     area_cost_best=best.area / ref.area,
                     area_span=max(p.area for p in pts) / min(p.area for p in pts),
@@ -317,16 +350,19 @@ def run_sweep(networks, *, out_dir: Optional[str] = None,
               spad_scales=DEFAULT_SPAD_SCALES, batch_logs=(0,),
               pipelined: bool = True, workers: Optional[int] = None,
               per_layer: bool = True, use_cache: bool = True,
+              residency: bool = True,
               progress: Optional[Callable[[str], None]] = None) -> SweepResult:
     """Run the full (config grid x networks) sweep across a process pool.
 
     ``out_dir`` holds the content-addressed cache at ``<out_dir>/cache`` and
     the combined ``report.json``; omit it for a purely in-memory sweep.
+    ``residency=False`` turns the graph compiler off (per-layer baseline).
     """
     t0 = time.time()
     jobs = make_jobs(networks, log_blocks=log_blocks, mem_widths=mem_widths,
                      spad_scales=spad_scales, batch_logs=batch_logs,
-                     pipelined=pipelined, per_layer=per_layer)
+                     pipelined=pipelined, per_layer=per_layer,
+                     residency=residency)
     keys = {job: job.key() for job in jobs}
     cache = None
     if out_dir is not None:
@@ -463,6 +499,10 @@ def _print_report(rep: dict) -> None:
             print(f"     big end {e['best'][0]}: {e['cycle_gain_best']:.1f}x "
                   f"fewer cycles at {e['area_cost_best']:.1f}x area "
                   f"[paper: ~11.5x at ~12x]")
+        if e.get("total_dram_bytes_saved"):
+            print(f"     graph compiler: {e['total_dram_bytes_saved']/1e6:.1f}MB "
+                  f"DRAM avoided across points "
+                  f"(ref config {e.get('ref_dram_bytes_saved', 0)/1e6:.2f}MB)")
     j = rep.get("joint") or {}
     if j:
         print(f"  -- joint ({len(rep['networks'])} networks, "
@@ -492,6 +532,9 @@ def main(argv=None) -> int:
                     help="recompute everything, do not read/write the cache")
     ap.add_argument("--no-per-layer", action="store_true",
                     help="omit per-layer breakdowns from cached points")
+    ap.add_argument("--no-residency", action="store_true",
+                    help="disable the graph compiler (fusion + on-chip "
+                         "residency): per-layer baseline numbers")
     args = ap.parse_args(argv)
 
     ints = lambda s: tuple(int(x) for x in s.split(",") if x)
@@ -510,7 +553,7 @@ def main(argv=None) -> int:
         log_blocks=ints(args.log_blocks), mem_widths=ints(args.mem_widths),
         spad_scales=ints(args.spad_scales), batch_logs=ints(args.batch_logs),
         workers=args.workers, per_layer=not args.no_per_layer,
-        use_cache=not args.no_cache,
+        use_cache=not args.no_cache, residency=not args.no_residency,
         progress=lambda line: print(line, flush=True))
     _print_report(res.report())
     if args.out:

@@ -9,6 +9,19 @@ Loads/stores carry a `meta` dict describing the DRAM-side tensor slice (the
 architectural fields are validated separately by `Program.validate_encoding`).
 A trace hook records per-instruction state digests for the paper's dynamic
 trace-based divergence debugging methodology (vta/trace.py).
+
+Multi-tensor DRAM (graph compiler): ``dram`` maps tensor names to arrays.
+Metas may carry ``tensor`` naming the array a load reads / a store writes;
+without it the classic single-layer defaults apply ("inp"/"wgt"/"bias"/
+"dw_wgt"/"out"), so per-layer programs run unchanged. Fused segment programs
+name every edge tensor explicitly, which is what lets a conv→add→clip
+segment (or a resident two-layer chain) be verified bit-exactly end to end.
+Two graph-compiler instructions are modeled here as well:
+
+  * ACC load kind ``resid`` — widen-load a skip-tensor tile next to the
+    producing conv's resident output tile (fused residual add);
+  * STORE with ``buffer == INP`` (meta kind ``spill``) — narrow the acc tile
+    and write it *into the input scratchpad* in the consumer's layout.
 """
 from __future__ import annotations
 
@@ -64,7 +77,7 @@ class FSim:
         kind = meta["kind"]
         if kind == "inp":
             BV, BI = hw.batch, hw.block_in
-            a = self.dram["inp"]
+            a = self.dram[meta.get("tensor", "inp")]
             tb, tci, ih, iw = meta["tb"], meta["tci"], meta["ih"], meta["iw"]
             patch = np.zeros((tb, tci, ih, iw, BV, BI), np.int8)
             y0, x0 = meta["y0"], meta["x0"]
@@ -82,7 +95,7 @@ class FSim:
             self.inp[insn.sram_base:insn.sram_base + n] = patch.reshape(n, BV, BI)
         elif kind == "wgt":
             BO, BI = hw.block_out, hw.block_in
-            a = self.dram["wgt"]
+            a = self.dram[meta.get("tensor", "wgt")]
             tco, tci, kh, kw = meta["tco"], meta["tci"], meta["kh"], meta["kw"]
             tile = np.zeros((tco, tci, kh, kw, BO, BI), np.int8)
             for co_i in range(tco):
@@ -94,7 +107,7 @@ class FSim:
             self.wgt[insn.sram_base:insn.sram_base + n] = tile.reshape(n, BO, BI)
         elif kind == "bias":
             BV, BO = hw.batch, hw.block_out
-            b = self.dram["bias"]
+            b = self.dram[meta.get("tensor", "bias")]
             tb, tco = meta["tb"], meta["tco"]
             tile = np.zeros((tb, tco, BV, BO), np.int32)
             for co_i in range(tco):
@@ -104,7 +117,7 @@ class FSim:
             self.acc[insn.sram_base:insn.sram_base + n] = tile.reshape(n, BV, BO)
         elif kind == "dw_patch":
             BV, BO = hw.batch, hw.block_out
-            a = self.dram["inp"]
+            a = self.dram[meta.get("tensor", "inp")]
             ih, iw = meta["ih"], meta["iw"]
             pad = meta.get("pad_value", 0)
             patch = np.full((ih, iw, BV, BO), pad, np.int32)
@@ -119,9 +132,28 @@ class FSim:
                 sub.transpose(2, 3, 0, 1).astype(np.int32)
             n = ih * iw
             self.acc[insn.sram_base:insn.sram_base + n] = patch.reshape(n, BV, BO)
+        elif kind == "resid":
+            # widen-load a skip-tensor tile in the conv-output tile layout
+            # (tb*tco rows of th*tw entries) for the fused residual add
+            BV, BO = hw.batch, hw.block_out
+            a = self.dram[meta["tensor"]]
+            tb, tco = meta["tb"], meta["tco"]
+            th, tw = meta["th"], meta["tw"]
+            tile = np.zeros((tb, tco, th, tw, BV, BO), np.int32)
+            for b_i in range(tb):
+                bb = (meta["b0"] + b_i) * BV
+                for co_i in range(tco):
+                    oo = (meta["co0"] + co_i) * BO
+                    sub = a[bb:bb + BV, oo:oo + BO,
+                            meta["y0"]:meta["y0"] + th,
+                            meta["x0"]:meta["x0"] + tw]
+                    tile[b_i, co_i] = sub.transpose(2, 3, 0, 1).astype(np.int32)
+            n = tb * tco * th * tw
+            self.acc[insn.sram_base:insn.sram_base + n] = \
+                tile.reshape(n, BV, BO)
         elif kind == "dw_wgt":
             BV, BO = hw.batch, hw.block_out
-            a = self.dram["dw_wgt"]
+            a = self.dram[meta.get("tensor", "dw_wgt")]
             kh, kw = meta["kh"], meta["kw"]
             cc = meta["c0"] * BO
             tile = a[cc:cc + BO].transpose(1, 2, 0).astype(np.int32)  # (kh,kw,BO)
@@ -183,8 +215,19 @@ class FSim:
         hw = self.hw
         meta = insn.meta
         BV, BO = hw.batch, hw.block_out
-        out = self.dram["out"]
         narrowed = np.clip(self.acc, -128, 127).astype(np.int8)
+        if meta["kind"] == "spill":
+            # on-chip spill: narrowed acc rows -> INP scratchpad at the
+            # consumer's layout (row r at dst + r*dst_stride). BI == BO is a
+            # compiler precondition, so (BV, BO) tiles are (BV, BI) tiles.
+            assert hw.block_in == hw.block_out, "spill needs BI == BO"
+            dst, stride = meta["dst"], meta["dst_stride"]
+            for r in range(insn.y_size):
+                row = narrowed[insn.sram_base + r * insn.x_size:
+                               insn.sram_base + (r + 1) * insn.x_size]
+                self.inp[dst + r * stride:dst + r * stride + insn.x_size] = row
+            return
+        out = self.dram[meta.get("tensor", "out")]
         if meta["kind"] == "out":
             tb, tco, th, tw = meta["tb"], meta["tco"], meta["th"], meta["tw"]
             n = tb * tco * th * tw

@@ -275,11 +275,24 @@ class LoadInsn(Insn):
 
 @dataclass
 class StoreInsn(Insn):
+    """Narrow acc -> int8 and write out.
+
+    ``buffer`` selects the destination (NEW, graph compiler): ``Buffer.OUT``
+    is the classic DRAM store; ``Buffer.INP`` spills the narrowed tile into
+    the *input scratchpad* instead — the on-chip bypass that lets the next
+    layer's GEMM consume this layer's output without a DRAM round trip.
+    For INP spills ``dram_base`` carries the destination INP sram address.
+    """
     sram_base: int = 0
     dram_base: int = 0
     y_size: int = 1
     x_size: int = 1
     x_stride: int = 1
+    buffer: Buffer = Buffer.OUT
+
+    @property
+    def on_chip(self) -> bool:
+        return self.buffer != Buffer.OUT
 
     def tiles(self) -> int:
         return self.y_size * self.x_size
@@ -376,7 +389,7 @@ def encode_insn(insn: Insn, hw: VTAConfig) -> int:
             put(getattr(insn, f), PAD_BITS, f)
         put(1 if insn.pad_value else 0, 1, "pad_value")
     elif isinstance(insn, StoreInsn):
-        put(int(Buffer.OUT), 3, "buffer")
+        put(int(insn.buffer), 3, "buffer")
         put(insn.sram_base, hw.acc_addr_bits, "sram_base")
         put(insn.dram_base, DRAM_ADDR_BITS, "dram_base")
         put(insn.y_size, SIZE_BITS, "y_size")

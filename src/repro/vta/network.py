@@ -1,13 +1,28 @@
-"""Network-level scheduling + cycle accounting (end-to-end workloads, §IV.E-F)."""
+"""Network-level compilation + cycle accounting (end-to-end workloads, §IV.E-F).
+
+``run_network`` accepts either a legacy ``list[Layer]`` (evaluated strictly
+per layer, as before) or a ``Graph`` (vta/graph.py). Graphs go through the
+graph compiler (vta/compiler.py): the network is partitioned into segments,
+residual adds are fused into their producing convs, and producer→consumer
+edges whose tensors fit on-chip never touch DRAM. Single-node segments take
+the exact per-layer path — including the ``layer_cache`` fast path that the
+DSE engine leans on — so the fallback is byte-for-byte the old pipeline.
+
+For every multi-node segment the report also evaluates the members'
+*unfused* baselines (through the same cache), which yields per-segment
+``dram_bytes_saved`` and baseline cycles — the numbers behind the paper-
+style "graph-level lowering earns its bandwidth back" comparison.
+"""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass, field, replace
+from typing import Optional, Union
 
 from repro.core.tps import ConvWorkload, Tiling, tps_search
+from repro.vta.graph import Graph, Node
 from repro.vta.isa import VTAConfig
-from repro.vta.scheduler import (Schedule, schedule_conv, schedule_depthwise,
-                                 schedule_pool)
+from repro.vta.scheduler import (Schedule, schedule_add, schedule_conv,
+                                 schedule_depthwise, schedule_pool)
 from repro.vta.tsim import TsimResult, run_tsim
 from repro.vta.workloads import Layer, pad_for_blocking
 
@@ -24,11 +39,42 @@ class LayerReport:
     counts: dict = field(default_factory=dict)
     util: dict = field(default_factory=dict)
     bytes_by_buffer: dict = field(default_factory=dict)
+    segment: int = -1            # index into NetworkReport.segments
+    fused: bool = False          # folded into the segment head's program
 
     def to_dict(self) -> dict:
         return {"name": self.name, "kind": self.kind, "cycles": self.cycles,
                 "dram_bytes": self.dram_bytes, "macs": self.macs,
-                "on_cpu": self.on_cpu}
+                "on_cpu": self.on_cpu, "segment": self.segment,
+                "fused": self.fused}
+
+
+@dataclass
+class SegmentReport:
+    index: int
+    layers: list                 # member node names
+    cycles: int = 0
+    dram_bytes: int = 0
+    baseline_cycles: int = 0     # sum of unfused member evaluations
+    baseline_dram_bytes: int = 0
+    dram_bytes_saved: int = 0    # baseline - actual (multi segments)
+    onchip_bytes: int = 0        # bytes that moved scratchpad-to-scratchpad
+    fused_adds: list = field(default_factory=list)
+    resident_edges: list = field(default_factory=list)
+
+    @property
+    def multi(self) -> bool:
+        return len(self.layers) > 1
+
+    def to_dict(self) -> dict:
+        return {"index": self.index, "layers": self.layers,
+                "cycles": self.cycles, "dram_bytes": self.dram_bytes,
+                "baseline_cycles": self.baseline_cycles,
+                "baseline_dram_bytes": self.baseline_dram_bytes,
+                "dram_bytes_saved": self.dram_bytes_saved,
+                "onchip_bytes": self.onchip_bytes,
+                "fused_adds": list(self.fused_adds),
+                "resident_edges": list(self.resident_edges)}
 
 
 @dataclass
@@ -36,6 +82,7 @@ class NetworkReport:
     name: str
     hw: VTAConfig
     layers: list = field(default_factory=list)
+    segments: list = field(default_factory=list)
 
     @property
     def total_cycles(self) -> int:
@@ -49,15 +96,25 @@ class NetworkReport:
     def total_macs(self) -> int:
         return sum(l.macs for l in self.layers if not l.on_cpu)
 
+    @property
+    def dram_bytes_saved(self) -> int:
+        return sum(s.dram_bytes_saved for s in self.segments)
+
     def summary(self) -> dict:
         return {"network": self.name, "cycles": self.total_cycles,
                 "dram_bytes": self.total_dram_bytes, "macs": self.total_macs,
                 "macs_per_cycle": self.total_macs / max(1, self.total_cycles),
                 "vta_layers": sum(1 for l in self.layers if not l.on_cpu),
-                "cpu_layers": sum(1 for l in self.layers if l.on_cpu)}
+                "cpu_layers": sum(1 for l in self.layers if l.on_cpu),
+                "dram_bytes_saved": self.dram_bytes_saved,
+                "n_segments": len(self.segments),
+                "fused_segments": sum(1 for s in self.segments if s.multi)}
 
     def per_layer(self) -> list[dict]:
         return [l.to_dict() for l in self.layers]
+
+    def per_segment(self) -> list[dict]:
+        return [s.to_dict() for s in self.segments]
 
 
 def schedule_layer(layer: Layer, hw: VTAConfig, *, prefer_db: bool = True,
@@ -79,6 +136,8 @@ def schedule_layer(layer: Layer, hw: VTAConfig, *, prefer_db: bool = True,
         return schedule_depthwise(wl, hw, post_op=layer.post_op)
     if layer.kind in ("maxpool", "avgpool"):
         return schedule_pool(wl, hw, mode=layer.kind[:3])
+    if layer.kind == "add":
+        return schedule_add(wl, hw)
     raise ValueError(layer.kind)
 
 
@@ -89,46 +148,147 @@ def layer_key(layer: Layer, hw: VTAConfig, *, prefer_db: bool = True,
     The layer *name* is excluded: repeated shapes inside a network (and across
     networks in one sweep) share one schedule + tsim run.
     """
-    from dataclasses import replace
     return (layer.kind, replace(layer.wl, name=""), layer.post_op, layer.bias,
             hw, prefer_db, dedup_loads)
 
 
-def run_network(name: str, layers: list[Layer], hw: VTAConfig, *,
+def _layer_macs(layer: Layer) -> int:
+    """Residual adds are ALU work, not MACs."""
+    return 0 if layer.kind == "add" else layer.wl.macs
+
+
+def _eval_single(layer: Layer, hw: VTAConfig, *, prefer_db, dedup_loads,
+                 validate_encoding, tiling_fn, layer_cache) -> tuple:
+    """(cycles, dram_bytes, tiling, counts, util, bytes_by_buffer), cached."""
+    key = None
+    if layer_cache is not None and tiling_fn is None:
+        key = layer_key(layer, hw, prefer_db=prefer_db,
+                        dedup_loads=dedup_loads)
+        hit = layer_cache.get(key)
+        if hit is not None:
+            return hit
+    sched = schedule_layer(layer, hw, prefer_db=prefer_db,
+                           dedup_loads=dedup_loads, tiling_fn=tiling_fn)
+    if validate_encoding:
+        sched.program.validate_encoding()
+    ts = run_tsim(sched.program, hw)
+    val = (ts.total_cycles, ts.dram_bytes, sched.tiling, ts.counts,
+           ts.utilization(), dict(sched.dram_bytes))
+    if key is not None:
+        layer_cache[key] = val
+    return val
+
+
+def _segment_key(seg, hw: VTAConfig, prefer_db: bool, dedup_loads: bool):
+    """Segment identity for the cache: the plan is a deterministic function
+    of member shapes + hw + knobs, so member identities suffice. Segments
+    with layer-less members (concat) are not cached."""
+    if any(n.layer is None for n in seg.nodes):
+        return None
+    members = tuple((n.kind, replace(n.layer.wl, name=""), n.layer.post_op,
+                     n.layer.bias) for n in seg.nodes)
+    return ("seg", members, hw, prefer_db, dedup_loads)
+
+
+def _as_segments(layers, hw: VTAConfig, *, prefer_db, dedup_loads, fusion,
+                 residency, tiling_fn):
+    """Normalize input (Graph or list[Layer]) to a list of Segments."""
+    from repro.vta.compiler import Segment, compile_graph
+    if isinstance(layers, Graph):
+        # graphs always go through the compiler: even with the optimizations
+        # off it must lower concat nodes, which have no per-layer fallback
+        opt = tiling_fn is None
+        return compile_graph(layers, hw, prefer_db=prefer_db,
+                             dedup_loads=dedup_loads,
+                             fusion=fusion and opt,
+                             residency=residency and opt)
+    nodes = [Node(name=l.wl.name, kind=l.kind,
+                  shape=(l.wl.b, l.wl.fo, l.wl.oh, l.wl.ow), layer=l)
+             for l in layers]
+    return [Segment(nodes=[n]) for n in nodes]
+
+
+def run_network(name: str, layers: Union[Graph, list], hw: VTAConfig, *,
                 prefer_db: bool = True, dedup_loads: bool = False,
                 validate_encoding: bool = False,
-                tiling_fn=None, layer_cache: Optional[dict] = None) -> NetworkReport:
-    """Schedule + tsim every layer. With `layer_cache` (any mutable mapping),
-    identical layer shapes reuse the prior tsim result — the per-layer reuse
-    hook the DSE engine leans on (repeat blocks dominate deep ResNets)."""
+                tiling_fn=None, layer_cache: Optional[dict] = None,
+                fusion: bool = True, residency: bool = True) -> NetworkReport:
+    """Compile + tsim a network. ``layers`` may be a Graph (graph compiler:
+    fused segments, scratchpad residency) or a list of Layers (strict
+    per-layer path). With ``layer_cache`` (any mutable mapping), identical
+    layer shapes — and identical fused segments — reuse prior tsim results;
+    repeat blocks dominate deep ResNets."""
     report = NetworkReport(name=name, hw=hw)
-    for layer in layers:
-        lr = LayerReport(name=layer.wl.name, kind=layer.kind,
-                         macs=layer.wl.macs, on_cpu=layer.on_cpu)
-        if not layer.on_cpu:
-            key = None
-            if layer_cache is not None and tiling_fn is None:
-                key = layer_key(layer, hw, prefer_db=prefer_db,
-                                dedup_loads=dedup_loads)
-            hit = layer_cache.get(key) if key is not None else None
-            if hit is not None:
-                (lr.cycles, lr.dram_bytes, lr.tiling, lr.counts, lr.util,
-                 lr.bytes_by_buffer) = hit
-            else:
-                sched = schedule_layer(layer, hw, prefer_db=prefer_db,
-                                       dedup_loads=dedup_loads,
-                                       tiling_fn=tiling_fn)
-                if validate_encoding:
-                    sched.program.validate_encoding()
-                ts = run_tsim(sched.program, hw)
-                lr.cycles = ts.total_cycles
-                lr.dram_bytes = ts.dram_bytes
-                lr.tiling = sched.tiling
-                lr.counts = ts.counts
-                lr.util = ts.utilization()
-                lr.bytes_by_buffer = dict(sched.dram_bytes)
-                if key is not None:
-                    layer_cache[key] = (lr.cycles, lr.dram_bytes, lr.tiling,
-                                        lr.counts, lr.util, lr.bytes_by_buffer)
+    segments = _as_segments(layers, hw, prefer_db=prefer_db,
+                            dedup_loads=dedup_loads, fusion=fusion,
+                            residency=residency, tiling_fn=tiling_fn)
+    eval_kw = dict(prefer_db=prefer_db, dedup_loads=dedup_loads,
+                   validate_encoding=validate_encoding, tiling_fn=tiling_fn,
+                   layer_cache=layer_cache)
+    def emit_single(node, si):
+        layer = node.layer
+        sr = SegmentReport(index=si, layers=[layer.wl.name])
+        lr = LayerReport(name=layer.wl.name, kind=node.kind,
+                         macs=_layer_macs(layer), on_cpu=node.on_cpu,
+                         segment=si)
+        if not node.on_cpu:
+            (lr.cycles, lr.dram_bytes, lr.tiling, lr.counts, lr.util,
+             lr.bytes_by_buffer) = _eval_single(layer, hw, **eval_kw)
+            sr.cycles = sr.baseline_cycles = lr.cycles
+            sr.dram_bytes = sr.baseline_dram_bytes = lr.dram_bytes
         report.layers.append(lr)
+        report.segments.append(sr)
+
+    for seg in segments:
+        si = len(report.segments)
+        if not seg.multi:
+            emit_single(seg.nodes[0], si)
+            continue
+
+        # compiled segment: one program, tsim'd as a whole (cached)
+        key = None
+        if layer_cache is not None and tiling_fn is None:
+            key = _segment_key(seg, hw, prefer_db, dedup_loads)
+        hit = layer_cache.get(key) if key is not None else None
+        if hit is not None:
+            seg_cycles, seg_dram, counts, util, onchip = hit
+        else:
+            if validate_encoding:
+                seg.program.validate_encoding()
+            ts = run_tsim(seg.program, hw)
+            seg_cycles, seg_dram = ts.total_cycles, ts.dram_bytes
+            counts, util = ts.counts, ts.utilization()
+            onchip = seg.dram_bytes.get("onchip", 0)
+            if key is not None:
+                layer_cache[key] = (seg_cycles, seg_dram, counts, util, onchip)
+        baselines = [(seg_cycles, seg_dram) if n.layer is None
+                     else _eval_single(n.layer, hw, **eval_kw)[:2]
+                     for n in seg.nodes]
+        base_cycles = sum(b[0] for b in baselines)
+        base_dram = sum(b[1] for b in baselines)
+        if seg_cycles > base_cycles or seg_dram > base_dram:
+            # profitability check: the fused plan lost to the per-layer
+            # baseline (e.g. the acc-halved tiling cost outweighs the fused
+            # add) — demote to plain per-layer evaluation
+            for node in seg.nodes:
+                emit_single(node, len(report.segments))
+            continue
+        sr = SegmentReport(index=si, layers=seg.names,
+                           fused_adds=list(seg.fused_adds),
+                           resident_edges=list(seg.resident_edges),
+                           cycles=seg_cycles, dram_bytes=seg_dram,
+                           onchip_bytes=onchip,
+                           baseline_cycles=base_cycles,
+                           baseline_dram_bytes=base_dram,
+                           dram_bytes_saved=base_dram - seg_dram)
+        for mi, node in enumerate(seg.nodes):
+            lr = LayerReport(name=node.name, kind=node.kind,
+                             macs=0 if node.layer is None
+                             else _layer_macs(node.layer), segment=si,
+                             fused=mi > 0)
+            if mi == 0:     # segment totals attributed to the head
+                lr.cycles, lr.dram_bytes = seg_cycles, seg_dram
+                lr.counts, lr.util = counts, util
+            report.layers.append(lr)
+        report.segments.append(sr)
     return report

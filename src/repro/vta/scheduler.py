@@ -17,6 +17,26 @@ elimination: the operand shared between the two contexts (input when oc_n=2,
 weights when h_n=2) is loaded once into ctx0's half and ctx1's uops read it
 there — turning the access pattern (I1,W1),(I2,W2),(I1,W1),(I2,W2) into
 (I1,W1),(I1,W2),(I2,W1),(I2,W2).
+
+Graph-compiler hooks (vta/compiler.py): every ``schedule_*`` is a thin
+wrapper over an ``emit_*_tasks`` function that appends Tasks to a caller-
+owned list against a caller-owned UopAllocator, so multiple layers can share
+one Program (fused segments). The extra knobs:
+
+  * ``fuse_add=<tensor>``   fold a residual-add consumer into the conv: the
+                            skip tensor tile is ACC-loaded next to the conv's
+                            resident output tile, ALU-ADDed and re-clipped —
+                            no separate DRAM pass over the activation;
+  * ``resident_out=<base>`` stores spill on-chip into the INP scratchpad at
+                            ``base`` (StoreInsn.buffer = INP) in the layout
+                            the consumer's GEMM expects;
+  * ``resident_in=<base>``  the whole input is already resident at ``base``:
+                            no INP loads are emitted, uops index the region;
+  * ``inp_reserve=<tiles>`` top slice of the INP scratchpad kept out of this
+                            layer's own load space (it holds a resident
+                            tensor for the segment);
+  * ``tensors={role: name}`` DRAM tensor names stamped into load/store metas
+                            so fsim can run multi-tensor segment programs.
 """
 from __future__ import annotations
 
@@ -45,16 +65,33 @@ def _ceil_div(a, b):
     return -(-a // b)
 
 
+def _finish_schedule(wl: ConvWorkload, t: Tiling, hw: VTAConfig,
+                     alloc: UopAllocator, tasks: list, n_ctx: int) -> Schedule:
+    """Shared wrapper epilogue: finalize tasks into a standalone Schedule."""
+    prog = finalize(tasks, hw, n_ctx=n_ctx)
+    prog.uop_mem = alloc.mem
+    sched = Schedule(program=prog, tiling=t, wl=wl, uop_flushes=alloc.flushes)
+    sched.dram_bytes = program_dram_bytes(prog, hw)
+    return sched
+
+
 # ---------------------------------------------------------------------------
 # Convolution (and dense = 1x1x1 conv)
 # ---------------------------------------------------------------------------
-def schedule_conv(wl: ConvWorkload, t: Tiling, hw: VTAConfig, *,
-                  post_op: str = "clip_shift", dedup_loads: bool = False,
-                  bias: bool = False) -> Schedule:
+def emit_conv_tasks(wl: ConvWorkload, t: Tiling, hw: VTAConfig,
+                    alloc: UopAllocator, tasks: list, *,
+                    post_op: str = "clip_shift", dedup_loads: bool = False,
+                    bias: bool = False, tensors: Optional[dict] = None,
+                    fuse_add: Optional[str] = None,
+                    inp_reserve: int = 0,
+                    resident_in: Optional[int] = None,
+                    resident_out: Optional[int] = None) -> int:
+    """Append this conv's Tasks to ``tasks``; returns its n_ctx."""
     BV, BI, BO = hw.batch, hw.block_in, hw.block_out
     assert wl.b % BV == 0 and wl.fo % BO == 0 and wl.fi % BI == 0, (wl, hw)
     di, do, bo_ct = wl.fi // BI, wl.fo // BO, wl.b // BV
     oh, ow = wl.oh, wl.ow
+    tname = (tensors or {}).get
     # inner extents
     tb_i = bo_ct // t.tb_o
     th_i = oh // t.th_o
@@ -65,19 +102,29 @@ def schedule_conv(wl: ConvWorkload, t: Tiling, hw: VTAConfig, *,
     iw_i = (tw_i - 1) * wl.sw + wl.kw
 
     n_ctx = 2 if t.double_buffered else 1
-    inp_half = hw.inp_depth // n_ctx
+    inp_half = (hw.inp_depth - inp_reserve) // n_ctx
     wgt_half = hw.wgt_depth // n_ctx
     acc_half = hw.acc_depth // n_ctx
     n_inp = tb_i * tci_i * ih_i * iw_i
     n_wgt = tco_i * tci_i * wl.kh * wl.kw
     n_acc = tb_i * tco_i * th_i * tw_i
-    assert n_inp <= inp_half, f"inp tiles {n_inp} > half depth {inp_half}"
+    # per-sub acc footprint: out tile + optional bias row + resident skip tile
+    acc_per_sub = n_acc + (tb_i * tco_i if bias else 0) \
+        + (n_acc if fuse_add is not None else 0)
+    if resident_in is not None:
+        # whole input resident: single untiled inp region, no halving games
+        assert t.tb_o == t.th_o == t.tw_o == t.tci_o == 1 and n_ctx == 1, \
+            "resident input requires an untiled, single-context consumer"
+        assert wl.kh == wl.kw == 1 and wl.sh == wl.sw == 1 \
+            and wl.ph == wl.pw == 0, "resident input consumer must be 1x1/s1"
+    else:
+        assert n_inp <= inp_half, f"inp tiles {n_inp} > half depth {inp_half}"
     assert n_wgt <= wgt_half, f"wgt tiles {n_wgt} > half depth {wgt_half}"
-    assert n_acc + (tb_i * tco_i if bias else 0) <= acc_half, \
-        f"acc tiles {n_acc} > half depth {acc_half}"
-
-    alloc = UopAllocator(hw)
-    tasks: list[Task] = []
+    assert acc_per_sub <= acc_half, \
+        f"acc tiles {acc_per_sub} > half depth {acc_half}"
+    if resident_out is not None:
+        assert t.tb_o == t.th_o == t.tw_o == 1 and tb_i == 1 and n_ctx == 1, \
+            "resident output requires untiled spatial, batch 1, 1 context"
 
     # gemm uop sequence for one (task, reduction step); offsets select halves
     def gemm_uops(inp_base: int, wgt_base: int, acc_base: int) -> tuple:
@@ -93,12 +140,14 @@ def schedule_conv(wl: ConvWorkload, t: Tiling, hw: VTAConfig, *,
                             seq.append(Uop(acc, inp, wgt))
         return tuple(seq)
 
-    def acc_uops(acc_base: int, src_base: Optional[int] = None) -> tuple:
+    def acc_uops(acc_base: int, src_base: Optional[int] = None,
+                 src_stride: int = 1) -> tuple:
         seq = []
         for b_i in range(tb_i):
             for co_i in range(tco_i):
                 a = acc_base + (b_i * tco_i + co_i) * th_i * tw_i
-                s = a if src_base is None else src_base + (b_i * tco_i + co_i)
+                s = a if src_base is None else \
+                    src_base + (b_i * tco_i + co_i) * src_stride
                 seq.append(Uop(a, s, 0))
         return tuple(seq)
 
@@ -166,38 +215,43 @@ def schedule_conv(wl: ConvWorkload, t: Tiling, hw: VTAConfig, *,
             if wk not in wgt_keys:
                 wgt_keys.append(wk)
             subs.append((bo, ho, wo, coo, inp_keys.index(ik), wgt_keys.index(wk)))
-        acc_per_sub = n_acc + (tb_i * tco_i if bias else 0)
         if merged:
-            assert len(inp_keys) * n_inp <= (inp_half if t.oc_n == 2 else hw.inp_depth)
+            if resident_in is None:
+                assert len(inp_keys) * n_inp <= \
+                    (inp_half if t.oc_n == 2 else hw.inp_depth - inp_reserve)
             assert len(wgt_keys) * n_wgt <= (hw.wgt_depth if t.oc_n == 2 else wgt_half)
             assert len(subs) * acc_per_sub <= hw.acc_depth
         else:
-            assert len(inp_keys) * n_inp <= inp_half, "inp tiles exceed half"
+            if resident_in is None:
+                assert len(inp_keys) * n_inp <= inp_half, "inp tiles exceed half"
             assert len(wgt_keys) * n_wgt <= wgt_half, "wgt tiles exceed half"
             assert len(subs) * acc_per_sub <= acc_half
 
         for r in range(t.tci_o):
             task = Task(ctx=ctx)
             # ---- loads ----
-            for ii, (bo, ho, wo) in enumerate(inp_keys):
-                y0 = ho * th_i * wl.sh - wl.ph
-                x0 = wo * tw_i * wl.sw - wl.pw
-                ypad0 = max(0, -y0)
-                ypad1 = max(0, y0 + ih_i - wl.h)
-                xpad0 = max(0, -x0)
-                xpad1 = max(0, x0 + iw_i - wl.w)
-                ld = LoadInsn(
-                    op=Op.LOAD, buffer=Buffer.INP,
-                    sram_base=inp_base0 + ii * n_inp,
-                    dram_base=ui % (1 << 20),
-                    y_size=ih_i - ypad0 - ypad1, x_size=iw_i - xpad0 - xpad1,
-                    x_stride=max(1, wl.w),
-                    y_pad0=min(15, ypad0), y_pad1=min(15, ypad1),
-                    x_pad0=min(15, xpad0), x_pad1=min(15, xpad1))
-                ld.meta = {"kind": "inp", "b0": bo * tb_i, "tb": tb_i,
-                           "ci0": r * tci_i, "tci": tci_i,
-                           "y0": y0, "x0": x0, "ih": ih_i, "iw": iw_i}
-                task.loads.append(ld)
+            if resident_in is None:
+                for ii, (bo, ho, wo) in enumerate(inp_keys):
+                    y0 = ho * th_i * wl.sh - wl.ph
+                    x0 = wo * tw_i * wl.sw - wl.pw
+                    ypad0 = max(0, -y0)
+                    ypad1 = max(0, y0 + ih_i - wl.h)
+                    xpad0 = max(0, -x0)
+                    xpad1 = max(0, x0 + iw_i - wl.w)
+                    ld = LoadInsn(
+                        op=Op.LOAD, buffer=Buffer.INP,
+                        sram_base=inp_base0 + ii * n_inp,
+                        dram_base=ui % (1 << 20),
+                        y_size=ih_i - ypad0 - ypad1, x_size=iw_i - xpad0 - xpad1,
+                        x_stride=max(1, wl.w),
+                        y_pad0=min(15, ypad0), y_pad1=min(15, ypad1),
+                        x_pad0=min(15, xpad0), x_pad1=min(15, xpad1))
+                    ld.meta = {"kind": "inp", "b0": bo * tb_i, "tb": tb_i,
+                               "ci0": r * tci_i, "tci": tci_i,
+                               "y0": y0, "x0": x0, "ih": ih_i, "iw": iw_i}
+                    if tname("inp"):
+                        ld.meta["tensor"] = tname("inp")
+                    task.loads.append(ld)
             for wi_, (coo,) in enumerate(wgt_keys):
                 ld = LoadInsn(
                     op=Op.LOAD, buffer=Buffer.WGT,
@@ -208,13 +262,17 @@ def schedule_conv(wl: ConvWorkload, t: Tiling, hw: VTAConfig, *,
                 ld.meta = {"kind": "wgt", "co0": coo * tco_i, "tco": tco_i,
                            "ci0": r * tci_i, "tci": tci_i,
                            "kh": wl.kh, "kw": wl.kw}
+                if tname("wgt"):
+                    ld.meta["tensor"] = tname("wgt")
                 task.loads.append(ld)
 
             # ---- computes (per sub-iteration) ----
             for si, (bo, ho, wo, coo, ik, wk) in enumerate(subs):
-                acc_base = acc_base0 + si * (n_acc + (tb_i * tco_i if bias else 0))
+                acc_base = acc_base0 + si * acc_per_sub
                 bias_base = acc_base + n_acc
-                inp_base = inp_base0 + ik * n_inp
+                skip_base = bias_base + (tb_i * tco_i if bias else 0)
+                inp_base = resident_in if resident_in is not None \
+                    else inp_base0 + ik * n_inp
                 wgt_base = wgt_base0 + wk * n_wgt
                 if r == 0:
                     if bias:
@@ -224,6 +282,8 @@ def schedule_conv(wl: ConvWorkload, t: Tiling, hw: VTAConfig, *,
                                       x_stride=tb_i * tco_i)
                         ld.meta = {"kind": "bias", "co0": coo * tco_i,
                                    "tco": tco_i, "tb": tb_i}
+                        if tname("bias"):
+                            ld.meta["tensor"] = tname("bias")
                         task.computes.append(ld)
                     emit_compute(task, acc_uops(acc_base),
                                  lambda b, e: GemmInsn(op=Op.GEMM, reset=True,
@@ -247,6 +307,38 @@ def schedule_conv(wl: ConvWorkload, t: Tiling, hw: VTAConfig, *,
                                          src_f0=0, src_f1=0))
                     _emit_post_ops(task, emit_compute, acc_uops(acc_base),
                                    th_i, tw_i, post_op)
+                    if fuse_add is not None:
+                        # residual add against the resident output tile:
+                        # ACC-load the skip tile, ALU ADD, re-clip (the add
+                        # node's clip) — replaces a whole DRAM pass.
+                        ld = LoadInsn(op=Op.LOAD, buffer=Buffer.ACC,
+                                      sram_base=skip_base,
+                                      dram_base=ui % (1 << 20),
+                                      y_size=tb_i * tco_i, x_size=th_i * tw_i,
+                                      x_stride=max(1, oh * ow))
+                        ld.meta = {"kind": "resid", "tensor": fuse_add,
+                                   "b0": bo * tb_i, "tb": tb_i,
+                                   "co0": coo * tco_i, "tco": tco_i,
+                                   "y0": ho * th_i, "th": th_i,
+                                   "x0": wo * tw_i, "tw": tw_i}
+                        task.computes.append(ld)
+                        emit_compute(
+                            task,
+                            acc_uops(acc_base, skip_base,
+                                     src_stride=th_i * tw_i),
+                            lambda b, e: AluInsn(op=Op.ALU, alu_op=AluOp.ADD,
+                                                 uop_bgn=b, uop_end=e,
+                                                 lp0=th_i, lp1=tw_i,
+                                                 dst_f0=tw_i, dst_f1=1,
+                                                 src_f0=tw_i, src_f1=1))
+                        emit_compute(
+                            task, acc_uops(acc_base),
+                            lambda b, e: AluInsn(op=Op.ALU, alu_op=AluOp.CLIP,
+                                                 uop_bgn=b, uop_end=e,
+                                                 lp0=th_i, lp1=tw_i,
+                                                 dst_f0=tw_i, dst_f1=1,
+                                                 src_f0=tw_i, src_f1=1,
+                                                 use_imm=True, imm=127))
                     st = StoreInsn(op=Op.STORE, sram_base=acc_base,
                                    dram_base=ui % (1 << 20),
                                    y_size=tb_i * tco_i, x_size=th_i * tw_i,
@@ -255,14 +347,38 @@ def schedule_conv(wl: ConvWorkload, t: Tiling, hw: VTAConfig, *,
                                "co0": coo * tco_i, "tco": tco_i,
                                "y0": ho * th_i, "th": th_i,
                                "x0": wo * tw_i, "tw": tw_i}
+                    if tname("out"):
+                        st.meta["tensor"] = tname("out")
+                    if resident_out is not None:
+                        _spill(st, resident_out + coo * tco_i * oh * ow,
+                               oh * ow)
                     task.stores.append(st)
             tasks.append(task)
+    return n_ctx
 
-    prog = finalize(tasks, hw, n_ctx=n_ctx)
-    prog.uop_mem = alloc.mem
-    sched = Schedule(program=prog, tiling=t, wl=wl, uop_flushes=alloc.flushes)
-    sched.dram_bytes = program_dram_bytes(prog, hw)
-    return sched
+
+def _spill(st: StoreInsn, dst: int, dst_stride: int) -> None:
+    """Turn a DRAM store into an on-chip INP-scratchpad spill at ``dst``.
+
+    Row r of the store (one (b,co) tile row of x_size entries) lands at
+    ``dst + r*dst_stride`` — the consumer's input-patch layout.
+    """
+    st.buffer = Buffer.INP
+    st.dram_base = dst
+    st.meta = {**st.meta, "kind": "spill", "dst": dst,
+               "dst_stride": dst_stride}
+
+
+def schedule_conv(wl: ConvWorkload, t: Tiling, hw: VTAConfig, *,
+                  post_op: str = "clip_shift", dedup_loads: bool = False,
+                  bias: bool = False, tensors: Optional[dict] = None,
+                  fuse_add: Optional[str] = None) -> Schedule:
+    alloc = UopAllocator(hw)
+    tasks: list[Task] = []
+    n_ctx = emit_conv_tasks(wl, t, hw, alloc, tasks, post_op=post_op,
+                            dedup_loads=dedup_loads, bias=bias,
+                            tensors=tensors, fuse_add=fuse_add)
+    return _finish_schedule(wl, t, hw, alloc, tasks, n_ctx)
 
 
 def _emit_post_ops(task, emit_compute, uops, lp0, lp1, post_op: str):
@@ -273,7 +389,10 @@ def _emit_post_ops(task, emit_compute, uops, lp0, lp1, post_op: str):
                                     imm=imm, imm2=imm2)
     if post_op == "none":
         return
-    if post_op == "relu":
+    if post_op == "clip":
+        # elementwise-add epilogue: clip only, no shift
+        emit_compute(task, uops, alu(AluOp.CLIP, 127))
+    elif post_op == "relu":
         emit_compute(task, uops, alu(AluOp.MAX, 0))
     elif post_op == "relu_shift":
         emit_compute(task, uops, alu(AluOp.SHR, 8))
@@ -293,8 +412,11 @@ def _emit_post_ops(task, emit_compute, uops, lp0, lp1, post_op: str):
 # ---------------------------------------------------------------------------
 # Depthwise conv (§IV.D.3): ALU MUL/ADD over taps, channel-blocked
 # ---------------------------------------------------------------------------
-def schedule_depthwise(wl: ConvWorkload, hw: VTAConfig, *,
-                       post_op: str = "relu_shift") -> Schedule:
+def emit_depthwise_tasks(wl: ConvWorkload, hw: VTAConfig,
+                         alloc: UopAllocator, tasks: list, *,
+                         post_op: str = "relu_shift",
+                         tensors: Optional[dict] = None,
+                         resident_out: Optional[int] = None) -> Tiling:
     """Depthwise conv on the ALU: per tap (copy, MUL weight-row, ADD into out).
 
     Channels are blocked by BO; activations for the patch live in the acc
@@ -304,6 +426,7 @@ def schedule_depthwise(wl: ConvWorkload, hw: VTAConfig, *,
     assert wl.fi == wl.fo and wl.b % BV == 0 and wl.fo % BO == 0
     dc = wl.fo // BO
     oh, ow = wl.oh, wl.ow
+    tname = (tensors or {}).get
     # choose a spatial tile that fits: patch + out + tmp + wgt in acc half
     th_i, tw_i = oh, ow
     def fits(th, tw):
@@ -319,9 +442,14 @@ def schedule_depthwise(wl: ConvWorkload, hw: VTAConfig, *,
     th_o, tw_o = _ceil_div(oh, th_i), _ceil_div(ow, tw_i)
     ih_i = (th_i - 1) * wl.sh + wl.kh
     iw_i = (tw_i - 1) * wl.sw + wl.kw
+    if resident_out is not None:
+        assert tw_o == 1 and wl.b // BV == 1, \
+            "resident output needs full-width rows and batch 1"
+        # a partial edge tile would spill rows past the tensor's extent into
+        # the next channel's resident region (the DRAM path clamps; the
+        # on-chip path must not need to)
+        assert oh % th_i == 0, "resident output needs divisor spatial tiles"
 
-    alloc = UopAllocator(hw)
-    tasks = []
     patch_base = 0
     out_base = ih_i * iw_i
     tmp_base = out_base + th_i * tw_i
@@ -342,12 +470,16 @@ def schedule_depthwise(wl: ConvWorkload, hw: VTAConfig, *,
                                   y_size=ih_i, x_size=iw_i, x_stride=wl.w)
                     ld.meta = {"kind": "dw_patch", "b0": b, "c0": c,
                                "y0": y0, "x0": x0, "ih": ih_i, "iw": iw_i}
+                    if tname("inp"):
+                        ld.meta["tensor"] = tname("inp")
                     task.computes.append(ld)
                     lw = LoadInsn(op=Op.LOAD, buffer=Buffer.ACC,
                                   sram_base=wgt_base, dram_base=0,
                                   y_size=1, x_size=wl.kh * wl.kw,
                                   x_stride=wl.kh * wl.kw)
                     lw.meta = {"kind": "dw_wgt", "c0": c, "kh": wl.kh, "kw": wl.kw}
+                    if tname("wgt"):
+                        lw.meta["tensor"] = tname("wgt")
                     task.computes.append(lw)
 
                     def emit(seq, make):
@@ -401,24 +533,38 @@ def schedule_depthwise(wl: ConvWorkload, hw: VTAConfig, *,
                     st.meta = {"kind": "dw_out", "b0": b, "c0": c,
                                "y0": ho * th_i, "th": th_i,
                                "x0": wo * tw_i, "tw": tw_i}
+                    if tname("out"):
+                        st.meta["tensor"] = tname("out")
+                    if resident_out is not None:
+                        _spill(st, resident_out + c * oh * ow
+                               + ho * th_i * ow, 1)
                     task.stores.append(st)
                     tasks.append(task)
-    prog = finalize(tasks, hw, n_ctx=1)
-    prog.uop_mem = alloc.mem
-    sched = Schedule(program=prog, tiling=Tiling(1, th_o, tw_o, dc, 1), wl=wl,
-                     uop_flushes=alloc.flushes)
-    sched.dram_bytes = program_dram_bytes(prog, hw)
-    return sched
+    return Tiling(1, th_o, tw_o, dc, 1)
+
+
+def schedule_depthwise(wl: ConvWorkload, hw: VTAConfig, *,
+                       post_op: str = "relu_shift",
+                       tensors: Optional[dict] = None) -> Schedule:
+    alloc = UopAllocator(hw)
+    tasks: list[Task] = []
+    t = emit_depthwise_tasks(wl, hw, alloc, tasks, post_op=post_op,
+                             tensors=tensors)
+    return _finish_schedule(wl, t, hw, alloc, tasks, 1)
 
 
 # ---------------------------------------------------------------------------
 # Pooling (§IV.E): max pool via pad-value load + ALU MAX; avg via ADD + SHR
 # ---------------------------------------------------------------------------
-def schedule_pool(wl: ConvWorkload, hw: VTAConfig, *, mode: str = "max") -> Schedule:
+def emit_pool_tasks(wl: ConvWorkload, hw: VTAConfig,
+                    alloc: UopAllocator, tasks: list, *, mode: str = "max",
+                    tensors: Optional[dict] = None,
+                    resident_out: Optional[int] = None) -> Tiling:
     BV, BO = hw.batch, hw.block_out
     assert wl.fi == wl.fo and wl.fo % BO == 0
     dc = wl.fo // BO
     oh, ow = wl.oh, wl.ow
+    tname = (tensors or {}).get
     th_i, tw_i = oh, ow
     def fits(th, tw):
         ih = (th - 1) * wl.sh + wl.kh
@@ -431,9 +577,14 @@ def schedule_pool(wl: ConvWorkload, hw: VTAConfig, *, mode: str = "max") -> Sche
     ih_i = (th_i - 1) * wl.sh + wl.kh
     iw_i = (tw_i - 1) * wl.sw + wl.kw
     pad_value = INT8_MIN if mode == "max" else 0
+    if resident_out is not None:
+        assert tw_o == 1 and wl.b // BV == 1, \
+            "resident output needs full-width rows and batch 1"
+        # a partial edge tile would spill rows past the tensor's extent into
+        # the next channel's resident region (the DRAM path clamps; the
+        # on-chip path must not need to)
+        assert oh % th_i == 0, "resident output needs divisor spatial tiles"
 
-    alloc = UopAllocator(hw)
-    tasks = []
     patch_base, out_base = 0, ih_i * iw_i
     for b in range(wl.b // BV):
         for c in range(dc):
@@ -449,6 +600,8 @@ def schedule_pool(wl: ConvWorkload, hw: VTAConfig, *, mode: str = "max") -> Sche
                     ld.meta = {"kind": "dw_patch", "b0": b, "c0": c,
                                "y0": y0, "x0": x0, "ih": ih_i, "iw": iw_i,
                                "pad_value": pad_value}
+                    if tname("inp"):
+                        ld.meta["tensor"] = tname("inp")
                     task.computes.append(ld)
 
                     def emit(seq, make):
@@ -491,14 +644,142 @@ def schedule_pool(wl: ConvWorkload, hw: VTAConfig, *, mode: str = "max") -> Sche
                     st.meta = {"kind": "dw_out", "b0": b, "c0": c,
                                "y0": ho * th_i, "th": th_i,
                                "x0": wo * tw_i, "tw": tw_i}
+                    if tname("out"):
+                        st.meta["tensor"] = tname("out")
+                    if resident_out is not None:
+                        _spill(st, resident_out + c * oh * ow
+                               + ho * th_i * ow, 1)
                     task.stores.append(st)
                     tasks.append(task)
-    prog = finalize(tasks, hw, n_ctx=1)
-    prog.uop_mem = alloc.mem
-    sched = Schedule(program=prog, tiling=Tiling(1, th_o, tw_o, dc, 1), wl=wl,
-                     uop_flushes=alloc.flushes)
-    sched.dram_bytes = program_dram_bytes(prog, hw)
-    return sched
+    return Tiling(1, th_o, tw_o, dc, 1)
+
+
+def schedule_pool(wl: ConvWorkload, hw: VTAConfig, *, mode: str = "max",
+                  tensors: Optional[dict] = None) -> Schedule:
+    alloc = UopAllocator(hw)
+    tasks: list[Task] = []
+    t = emit_pool_tasks(wl, hw, alloc, tasks, mode=mode, tensors=tensors)
+    return _finish_schedule(wl, t, hw, alloc, tasks, 1)
+
+
+# ---------------------------------------------------------------------------
+# Elementwise residual add (graph `add` nodes, unfused fallback path):
+# out = clip(a + b). Both operands are widened int8 ACC loads; the whole
+# layer is ALU work with one DRAM pass per operand plus the output store.
+# When a producer conv absorbs the add (fuse_add), this schedule disappears
+# entirely — that is the graph compiler's DRAM win.
+# ---------------------------------------------------------------------------
+def emit_add_tasks(wl: ConvWorkload, hw: VTAConfig,
+                   alloc: UopAllocator, tasks: list, *,
+                   tensors: Optional[dict] = None) -> Tiling:
+    BV, BO = hw.batch, hw.block_out
+    assert wl.fi == wl.fo and wl.fo % BO == 0
+    dc = wl.fo // BO
+    oh, ow = wl.oh, wl.ow
+    tname = (tensors or {}).get
+    th_i, tw_i = oh, ow
+    while th_i * tw_i * 2 > hw.acc_depth and th_i > 1:
+        th_i = _ceil_div(th_i, 2)
+    while th_i * tw_i * 2 > hw.acc_depth and tw_i > 1:
+        tw_i = _ceil_div(tw_i, 2)
+    assert th_i * tw_i * 2 <= hw.acc_depth, "acc too small for add tile"
+    th_o, tw_o = _ceil_div(oh, th_i), _ceil_div(ow, tw_i)
+    a_base, b_base = 0, th_i * tw_i
+
+    for b in range(wl.b // BV):
+        for c in range(dc):
+            for ho in range(th_o):
+                for wo in range(tw_o):
+                    task = Task(ctx=0)
+                    for base, role in ((a_base, "add_a"), (b_base, "add_b")):
+                        ld = LoadInsn(op=Op.LOAD, buffer=Buffer.ACC,
+                                      sram_base=base, dram_base=0,
+                                      y_size=th_i, x_size=tw_i, x_stride=ow)
+                        ld.meta = {"kind": "dw_patch", "b0": b, "c0": c,
+                                   "y0": ho * th_i, "x0": wo * tw_i,
+                                   "ih": th_i, "iw": tw_i}
+                        if tname(role):
+                            ld.meta["tensor"] = tname(role)
+                        task.computes.append(ld)
+
+                    def emit(seq, make):
+                        bgn, uld = alloc.place(seq)
+                        if uld is not None:
+                            task.computes.append(uld)
+                        task.computes.append(make(bgn, bgn + len(seq)))
+
+                    emit((Uop(a_base, b_base, 0),),
+                         lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.ADD,
+                                               uop_bgn=b_, uop_end=e,
+                                               lp0=th_i, lp1=tw_i,
+                                               dst_f0=tw_i, dst_f1=1,
+                                               src_f0=tw_i, src_f1=1))
+                    emit((Uop(a_base, a_base, 0),),
+                         lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.CLIP,
+                                               uop_bgn=b_, uop_end=e,
+                                               lp0=th_i, lp1=tw_i,
+                                               dst_f0=tw_i, dst_f1=1,
+                                               src_f0=tw_i, src_f1=1,
+                                               use_imm=True, imm=127))
+                    st = StoreInsn(op=Op.STORE, sram_base=a_base, dram_base=0,
+                                   y_size=1, x_size=th_i * tw_i, x_stride=oh * ow)
+                    st.meta = {"kind": "dw_out", "b0": b, "c0": c,
+                               "y0": ho * th_i, "th": th_i,
+                               "x0": wo * tw_i, "tw": tw_i}
+                    if tname("out"):
+                        st.meta["tensor"] = tname("out")
+                    task.stores.append(st)
+                    tasks.append(task)
+    return Tiling(1, th_o, tw_o, dc, 1)
+
+
+def schedule_add(wl: ConvWorkload, hw: VTAConfig, *,
+                 tensors: Optional[dict] = None) -> Schedule:
+    alloc = UopAllocator(hw)
+    tasks: list[Task] = []
+    t = emit_add_tasks(wl, hw, alloc, tasks, tensors=tensors)
+    return _finish_schedule(wl, t, hw, alloc, tasks, 1)
+
+
+# ---------------------------------------------------------------------------
+# Channel concat (graph `concat` nodes): pure DMA — widen-load each source
+# tile into acc and store it narrowed at its channel offset in the output.
+# ---------------------------------------------------------------------------
+def emit_concat_tasks(shapes: list, hw: VTAConfig,
+                      alloc: UopAllocator, tasks: list, *,
+                      tensors: Optional[list] = None,
+                      out_tensor: Optional[str] = None) -> None:
+    """shapes: per-source (B, C, H, W); sources stack along channels."""
+    BV, BO = hw.batch, hw.block_out
+    c_off = 0
+    for si, (b, c, h, w) in enumerate(shapes):
+        assert c % BO == 0 and b % BV == 0
+        th_i = h
+        while th_i * w > hw.acc_depth and th_i > 1:
+            th_i = _ceil_div(th_i, 2)
+        th_o = _ceil_div(h, th_i)
+        for bb in range(b // BV):
+            for cc in range(c // BO):
+                for ho in range(th_o):
+                    task = Task(ctx=0)
+                    ld = LoadInsn(op=Op.LOAD, buffer=Buffer.ACC,
+                                  sram_base=0, dram_base=0,
+                                  y_size=th_i, x_size=w, x_stride=w)
+                    ld.meta = {"kind": "dw_patch", "b0": bb, "c0": cc,
+                               "y0": ho * th_i, "x0": 0, "ih": th_i, "iw": w}
+                    if tensors:
+                        ld.meta["tensor"] = tensors[si]
+                    task.computes.append(ld)
+                    st = StoreInsn(op=Op.STORE, sram_base=0, dram_base=0,
+                                   y_size=1, x_size=th_i * w, x_stride=h * w)
+                    st.meta = {"kind": "dw_out", "b0": bb,
+                               "c0": c_off // BO + cc,
+                               "y0": ho * th_i, "th": th_i, "x0": 0, "tw": w}
+                    if out_tensor:
+                        st.meta["tensor"] = out_tensor
+                    task.stores.append(st)
+                    tasks.append(task)
+        c_off += c
 
 
 # ---------------------------------------------------------------------------
@@ -510,16 +791,19 @@ def insn_dram_bytes(insn, hw: VTAConfig) -> int:
                     Buffer.ACC: hw.acc_tile_bytes, Buffer.UOP: hw.uop_bytes,
                     Buffer.OUT: hw.out_tile_bytes}[insn.buffer]
         if insn.buffer == Buffer.ACC and getattr(insn, "meta", {}).get("kind") in \
-                ("dw_patch",):
+                ("dw_patch", "resid"):
             per_tile = hw.batch * hw.block_out * hw.inp_bytes  # widening load
         return insn.dram_tiles() * per_tile
     if isinstance(insn, StoreInsn):
+        if insn.on_chip:
+            return 0        # scratchpad spill: no DRAM traffic at all
         return insn.tiles() * hw.out_tile_bytes
     return 0
 
 
 def program_dram_bytes(prog: Program, hw: VTAConfig) -> dict:
-    out = {"inp": 0, "wgt": 0, "acc": 0, "uop": 0, "out": 0, "total": 0}
+    out = {"inp": 0, "wgt": 0, "acc": 0, "uop": 0, "out": 0, "total": 0,
+           "onchip": 0}
     for i in prog.order:
         b = insn_dram_bytes(i, hw)
         if isinstance(i, LoadInsn):
@@ -527,6 +811,8 @@ def program_dram_bytes(prog: Program, hw: VTAConfig) -> dict:
                    Buffer.UOP: "uop", Buffer.OUT: "out"}[i.buffer]
             out[key] += b
         elif isinstance(i, StoreInsn):
+            if i.on_chip:
+                out["onchip"] += i.tiles() * hw.out_tile_bytes
             out["out"] += b
         out["total"] += b
     return out

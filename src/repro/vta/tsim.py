@@ -123,7 +123,15 @@ def run_tsim(prog: Program, hw: VTAConfig, *, check_hazards: bool = False) -> Ts
                 for p in pops:
                     ready = max(ready, tokens[p].popleft())
                 start = ready
-                if isinstance(insn, (LoadInsn, StoreInsn)):
+                if isinstance(insn, StoreInsn) and insn.on_chip:
+                    # scratchpad spill: narrowed tiles move on-chip at the
+                    # memory-interface width, but never touch the DRAM
+                    # engine (no first-beat latency, no bus occupancy)
+                    onchip = insn.tiles() * hw.out_tile_bytes
+                    end = start + math.ceil(onchip / hw.mem_width_bytes) \
+                        + CMD_OVERHEAD
+                    kind = "spill"
+                elif isinstance(insn, (LoadInsn, StoreInsn)):
                     nonloc_bytes = insn_dram_bytes(insn, hw)
                     occ = math.ceil(nonloc_bytes / hw.mem_width_bytes)
                     issue = max(start, engine_free)
@@ -161,7 +169,7 @@ def utilization_ascii(res: TsimResult, width: int = 100) -> str:
     total = max(1, res.total_cycles)
     lines = []
     symbols = {"gemm": "G", "alu": "A", "load": "L", "store": "S",
-               "uop_load": "u", "acc_load": "a", "ctrl": "."}
+               "uop_load": "u", "acc_load": "a", "ctrl": ".", "spill": "s"}
     for q in ("load", "compute", "store"):
         row = [" "] * width
         for s, e, kind in res.busy[q]:

@@ -18,7 +18,7 @@ from repro.core.tps import ConvWorkload
 
 @dataclass(frozen=True)
 class Layer:
-    kind: str                  # conv | depthwise | maxpool | avgpool | dense
+    kind: str                  # conv | depthwise | maxpool | avgpool | dense | add
     wl: ConvWorkload
     post_op: str = "clip_shift"
     bias: bool = False
@@ -28,6 +28,13 @@ class Layer:
 def _conv(name, b, hw_, fi, fo, k, p, s, post="clip_shift") -> Layer:
     return Layer("conv", ConvWorkload(name, b, hw_, hw_, k, k, fi, fo, p, p, s, s),
                  post_op=post)
+
+
+def _add(name, b, size, c) -> Layer:
+    """Residual elementwise add: out = clip(a + b). Modeled as a 1x1 'conv'
+    workload for shape bookkeeping; MACs are 0 (it is ALU work)."""
+    return Layer("add", ConvWorkload(name, b, size, size, 1, 1, c, c, 0, 0, 1, 1),
+                 post_op="clip")
 
 
 # ---------------------------------------------------------------------------
@@ -50,30 +57,43 @@ def resnet18_convs(batch: int = 1) -> list[ConvWorkload]:
             for (n, s, fi, fo, k, p, st) in t]
 
 
-def _basic_block(name, b, size, fi, fo, stride) -> list[Layer]:
-    layers = [_conv(f"{name}.a", b, size, fi, fo, 3, 1, stride)]
-    layers.append(_conv(f"{name}.b", b, size // stride, fo, fo, 3, 1, 1))
+def _basic_block(g, name, prev, b, size, fi, fo, stride) -> str:
+    """Two 3x3 convs + identity/downsample skip, joined by a residual add."""
+    a = g.layer(_conv(f"{name}.a", b, size, fi, fo, 3, 1, stride), prev).name
+    bb = g.layer(_conv(f"{name}.b", b, size // stride, fo, fo, 3, 1, 1), a).name
+    skip = prev
     if stride != 1 or fi != fo:
-        layers.append(_conv(f"{name}.ds", b, size, fi, fo, 1, 0, stride))
-    return layers
+        skip = g.layer(_conv(f"{name}.ds", b, size, fi, fo, 1, 0, stride),
+                       prev).name
+    g.residual_add(f"{name}.add", bb, skip,
+                   layer=_add(f"{name}.add", b, size // stride, fo))
+    return f"{name}.add"
 
 
-def _bottleneck(name, b, size, fi, mid, fo, stride) -> list[Layer]:
-    layers = [_conv(f"{name}.1", b, size, fi, mid, 1, 0, 1),
-              _conv(f"{name}.2", b, size, mid, mid, 3, 1, stride),
-              _conv(f"{name}.3", b, size // stride, mid, fo, 1, 0, 1)]
+def _bottleneck(g, name, prev, b, size, fi, mid, fo, stride) -> str:
+    c1 = g.layer(_conv(f"{name}.1", b, size, fi, mid, 1, 0, 1), prev).name
+    c2 = g.layer(_conv(f"{name}.2", b, size, mid, mid, 3, 1, stride), c1).name
+    c3 = g.layer(_conv(f"{name}.3", b, size // stride, mid, fo, 1, 0, 1),
+                 c2).name
+    skip = prev
     if stride != 1 or fi != fo:
-        layers.append(_conv(f"{name}.ds", b, size, fi, fo, 1, 0, stride))
-    return layers
+        skip = g.layer(_conv(f"{name}.ds", b, size, fi, fo, 1, 0, stride),
+                       prev).name
+    g.residual_add(f"{name}.add", c3, skip,
+                   layer=_add(f"{name}.add", b, size // stride, fo))
+    return f"{name}.add"
 
 
-def _resnet(name: str, blocks: list[int], bottleneck: bool, batch: int) -> list[Layer]:
-    layers: list[Layer] = [
-        Layer("conv", ConvWorkload(f"{name}.conv1", batch, 224, 224, 7, 7, 3, 64,
-                                   3, 3, 2, 2), on_cpu=True),
-        Layer("maxpool", ConvWorkload(f"{name}.pool1", batch, 112, 112, 3, 3,
-                                      64, 64, 1, 1, 2, 2)),
-    ]
+def _resnet_graph(name: str, blocks: list[int], bottleneck: bool, batch: int):
+    from repro.vta.graph import Graph
+    g = Graph(name=name)
+    prev = g.input("image", (batch, 3, 224, 224)).name
+    prev = g.layer(Layer("conv", ConvWorkload(f"{name}.conv1", batch, 224, 224,
+                                              7, 7, 3, 64, 3, 3, 2, 2),
+                         on_cpu=True), prev).name
+    prev = g.layer(Layer("maxpool", ConvWorkload(f"{name}.pool1", batch, 112,
+                                                 112, 3, 3, 64, 64, 1, 1, 2, 2)),
+                   prev).name
     size = 56
     fi = 64
     for stage, n in enumerate(blocks):
@@ -82,36 +102,46 @@ def _resnet(name: str, blocks: list[int], bottleneck: bool, batch: int) -> list[
             if bottleneck:
                 mid = 64 * (2 ** stage)
                 fo = mid * 4
-                layers += _bottleneck(f"{name}.s{stage}b{i}", batch, size, fi,
-                                      mid, fo, stride)
+                prev = _bottleneck(g, f"{name}.s{stage}b{i}", prev, batch,
+                                   size, fi, mid, fo, stride)
             else:
                 fo = 64 * (2 ** stage)
-                layers += _basic_block(f"{name}.s{stage}b{i}", batch, size, fi,
-                                       fo, stride)
+                prev = _basic_block(g, f"{name}.s{stage}b{i}", prev, batch,
+                                    size, fi, fo, stride)
             size //= stride
             fi = fo
-    layers.append(Layer("avgpool", ConvWorkload(f"{name}.gap", batch, 7, 7, 7, 7,
-                                                fi, fi, 0, 0, 7, 7)))
-    layers.append(Layer("dense", ConvWorkload(f"{name}.fc", batch, 1, 1, 1, 1,
-                                              fi, 1008, 0, 0, 1, 1),
-                        post_op="none", bias=True))
-    return layers
+    prev = g.layer(Layer("avgpool", ConvWorkload(f"{name}.gap", batch, 7, 7,
+                                                 7, 7, fi, fi, 0, 0, 7, 7)),
+                   prev).name
+    g.layer(Layer("dense", ConvWorkload(f"{name}.fc", batch, 1, 1, 1, 1,
+                                        fi, 1008, 0, 0, 1, 1),
+                  post_op="none", bias=True), prev)
+    g.validate()
+    return g
+
+
+def resnet_graph(depth: int, batch: int = 1):
+    cfg = {18: ([2, 2, 2, 2], False), 34: ([3, 4, 6, 3], False),
+           50: ([3, 4, 6, 3], True), 101: ([3, 4, 23, 3], True)}[depth]
+    return _resnet_graph(f"resnet{depth}", cfg[0], cfg[1], batch)
 
 
 def resnet(depth: int, batch: int = 1) -> list[Layer]:
-    cfg = {18: ([2, 2, 2, 2], False), 34: ([3, 4, 6, 3], False),
-           50: ([3, 4, 6, 3], True), 101: ([3, 4, 23, 3], True)}[depth]
-    return _resnet(f"resnet{depth}", cfg[0], cfg[1], batch)
+    """Legacy per-layer table — now derived from the graph, so the residual
+    adds that used to be missing are counted even on the unfused path."""
+    return resnet_graph(depth, batch).layers()
 
 
 # ---------------------------------------------------------------------------
-# MobileNet 1.0 (depthwise-separable; §IV.D.3 / IV.E)
+# MobileNet 1.0 (depthwise-separable; §IV.D.3 / IV.E) — a pure chain
 # ---------------------------------------------------------------------------
-def mobilenet_v1(batch: int = 1) -> list[Layer]:
-    layers: list[Layer] = [
-        Layer("conv", ConvWorkload("mbn.conv1", batch, 224, 224, 3, 3, 3, 32,
-                                   1, 1, 2, 2), on_cpu=True),
-    ]
+def mobilenet_graph(batch: int = 1):
+    from repro.vta.graph import Graph
+    g = Graph(name="mobilenet1.0")
+    prev = g.input("image", (batch, 3, 224, 224)).name
+    prev = g.layer(Layer("conv", ConvWorkload("mbn.conv1", batch, 224, 224, 3,
+                                              3, 3, 32, 1, 1, 2, 2),
+                         on_cpu=True), prev).name
     spec = [  # (size_in, cin, cout, stride)
         (112, 32, 64, 1), (112, 64, 128, 2), (56, 128, 128, 1),
         (56, 128, 256, 2), (28, 256, 256, 1), (28, 256, 512, 2),
@@ -120,18 +150,24 @@ def mobilenet_v1(batch: int = 1) -> list[Layer]:
         (7, 1024, 1024, 1),
     ]
     for i, (size, ci, co, s) in enumerate(spec):
-        layers.append(Layer("depthwise",
-                            ConvWorkload(f"mbn.dw{i}", batch, size, size, 3, 3,
-                                         ci, ci, 1, 1, s, s),
-                            post_op="relu_shift"))
-        layers.append(_conv(f"mbn.pw{i}", batch, size // s, ci, co, 1, 0, 1,
-                            post="relu_shift"))
-    layers.append(Layer("avgpool", ConvWorkload("mbn.gap", batch, 7, 7, 7, 7,
-                                                1024, 1024, 0, 0, 7, 7)))
-    layers.append(Layer("dense", ConvWorkload("mbn.fc", batch, 1, 1, 1, 1,
-                                              1024, 1008, 0, 0, 1, 1),
-                        post_op="none", bias=True))
-    return layers
+        prev = g.layer(Layer("depthwise",
+                             ConvWorkload(f"mbn.dw{i}", batch, size, size, 3,
+                                          3, ci, ci, 1, 1, s, s),
+                             post_op="relu_shift"), prev).name
+        prev = g.layer(_conv(f"mbn.pw{i}", batch, size // s, ci, co, 1, 0, 1,
+                             post="relu_shift"), prev).name
+    prev = g.layer(Layer("avgpool", ConvWorkload("mbn.gap", batch, 7, 7, 7, 7,
+                                                 1024, 1024, 0, 0, 7, 7)),
+                   prev).name
+    g.layer(Layer("dense", ConvWorkload("mbn.fc", batch, 1, 1, 1, 1,
+                                        1024, 1008, 0, 0, 1, 1),
+                  post_op="none", bias=True), prev)
+    g.validate()
+    return g
+
+
+def mobilenet_v1(batch: int = 1) -> list[Layer]:
+    return mobilenet_graph(batch).layers()
 
 
 def pad_for_blocking(wl: ConvWorkload, hw) -> ConvWorkload:
@@ -156,6 +192,19 @@ NETWORKS = {
     "mobilenet1.0": mobilenet_v1,
 }
 
+GRAPHS = {
+    "resnet18": lambda b=1: resnet_graph(18, b),
+    "resnet34": lambda b=1: resnet_graph(34, b),
+    "resnet50": lambda b=1: resnet_graph(50, b),
+    "resnet101": lambda b=1: resnet_graph(101, b),
+    "mobilenet1.0": mobilenet_graph,
+}
+
+
+def network_graph(name: str, batch: int = 1):
+    """The graph IR for a network (compiler entry point)."""
+    return GRAPHS[resolve_network(name)](batch)
+
 _ALIASES = {
     "mobilenet": "mobilenet1.0",
     "mobilenetv1": "mobilenet1.0",
@@ -176,15 +225,13 @@ def resolve_network(name: str) -> str:
 
 @functools.lru_cache(maxsize=None)
 def network_fingerprint(name: str, batch: int = 1) -> str:
-    """Content hash of a network's layer table.
+    """Content hash of a network's graph (nodes, shapes AND edges).
 
-    Part of the DSE cache key: editing a workload definition invalidates
-    every cached point that depends on it, nothing else. Memoized — the
-    tables are module-level constants within a process.
+    Part of the DSE cache key: editing a workload definition — or rewiring a
+    skip connection — invalidates every cached point that depends on it,
+    nothing else. Memoized — the tables are module-level constants within a
+    process.
     """
-    import dataclasses
     import hashlib
-    layers = NETWORKS[resolve_network(name)](batch)
-    desc = [(l.kind, l.post_op, l.bias, l.on_cpu, dataclasses.astuple(l.wl))
-            for l in layers]
+    desc = network_graph(name, batch).describe()
     return hashlib.sha256(repr(desc).encode()).hexdigest()[:16]

@@ -70,10 +70,12 @@ def test_network_aliases_and_fingerprint():
 # Result cache
 # ---------------------------------------------------------------------------
 def test_result_cache_hit_miss_and_corruption(tmp_path):
+    from repro.core.dse import CACHE_SCHEMA_VERSION
     cache = ResultCache(str(tmp_path / "c"))
     assert cache.get("k" * 64) is None
     cache.put("k" * 64, {"feasible": True, "cycles": 7})
-    assert cache.get("k" * 64) == {"feasible": True, "cycles": 7}
+    assert cache.get("k" * 64) == {"feasible": True, "cycles": 7,
+                                   "schema": CACHE_SCHEMA_VERSION}
     assert cache.hits == 1 and cache.misses == 1
     # corrupt records read as misses, not crashes
     with open(cache.path("k" * 64), "w") as f:
