@@ -1,16 +1,34 @@
 """Paper §IV.E: end-to-end networks on the accelerator — full ResNets
 (incl. previously-disabled pooling and FC layers) and MobileNet-1.0
-(depthwise on the ALU via the new element-wise multiply).
+(depthwise on the ALU via the vectorized MAC macro-ops).
 
 Each network is one `DSEJob` on the pipelined default config, evaluated
 through the DSE engine (shared per-layer tsim reuse; cacheable when a
 `cache_dir` is given).
+
+CLI (the CI perf-trajectory job):
+
+  PYTHONPATH=src python -m benchmarks.bench_end2end \
+      --nets resnet18,mobilenet --json-out results/bench \
+      --check-baseline benchmarks/baselines
+
+``--json-out`` writes one ``BENCH_<net>.json`` per network (total cycles,
+DRAM bytes, MACs); ``--check-baseline`` compares against the checked-in
+baselines and fails on cycle/DRAM regressions beyond ``--tolerance``.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
 from typing import Optional
 
 from repro.core.dse import DSEJob, ResultCache, eval_job
+from repro.vta.workloads import resolve_network
+
+# file-name stems for BENCH_<stem>.json artifacts
+_STEMS = {"mobilenet1.0": "mobilenet"}
 
 
 def run(nets=("resnet18", "resnet34", "resnet50", "mobilenet1.0"),
@@ -66,5 +84,75 @@ def run(nets=("resnet18", "resnet34", "resnet50", "mobilenet1.0"),
     return {"rows": rows}
 
 
+def bench_stem(net: str) -> str:
+    net = resolve_network(net)
+    return _STEMS.get(net, net)
+
+
+def write_json(rows: list, out_dir: str) -> list:
+    """One BENCH_<net>.json per network; returns the paths written."""
+    os.makedirs(out_dir, exist_ok=True)
+    paths = []
+    for row in rows:
+        path = os.path.join(out_dir, f"BENCH_{bench_stem(row['net'])}.json")
+        with open(path, "w") as f:
+            json.dump(row, f, indent=2, sort_keys=True)
+        paths.append(path)
+    return paths
+
+
+def check_baselines(rows: list, baseline_dir: str,
+                    tolerance: float = 0.02) -> list:
+    """Cycle/DRAM regression guard vs the checked-in BENCH_*.json files.
+
+    Returns a list of violation strings (empty = pass). Networks without a
+    checked-in baseline are skipped — the guard only ratchets what a prior
+    PR has recorded.
+    """
+    errs = []
+    for row in rows:
+        path = os.path.join(baseline_dir,
+                            f"BENCH_{bench_stem(row['net'])}.json")
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            base = json.load(f)
+        for metric in ("cycles", "dram_bytes"):
+            limit = base[metric] * (1 + tolerance)
+            if row[metric] > limit:
+                errs.append(
+                    f"{row['net']}: {metric} regressed "
+                    f"{base[metric]} -> {row[metric]} "
+                    f"(+{row[metric] / base[metric] - 1:.1%}, "
+                    f"tolerance {tolerance:.0%})")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.bench_end2end")
+    ap.add_argument("--nets", default="resnet18,mobilenet")
+    ap.add_argument("--json-out", default=None,
+                    help="directory for BENCH_<net>.json artifacts")
+    ap.add_argument("--check-baseline", default=None,
+                    help="directory of checked-in BENCH_<net>.json baselines")
+    ap.add_argument("--tolerance", type=float, default=0.02,
+                    help="allowed relative regression (default 2%%)")
+    ap.add_argument("--cache-dir", default=None)
+    args = ap.parse_args(argv)
+    nets = tuple(resolve_network(n) for n in args.nets.split(",") if n)
+    rows = run(nets=nets, cache_dir=args.cache_dir)["rows"]
+    if args.json_out:
+        for p in write_json(rows, args.json_out):
+            print(f"wrote {p}")
+    if args.check_baseline:
+        errs = check_baselines(rows, args.check_baseline, args.tolerance)
+        for e in errs:
+            print(f"REGRESSION: {e}", file=sys.stderr)
+        if errs:
+            return 1
+        print("cycle-regression guard: OK")
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    sys.exit(main())

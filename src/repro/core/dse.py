@@ -42,9 +42,12 @@ from repro.vta.network import run_network
 from repro.vta.workloads import (NETWORKS, network_fingerprint, network_graph,
                                  resolve_network)
 
-ENGINE_VERSION = 2       # bump to invalidate every cached point
+ENGINE_VERSION = 3       # bump to invalidate every cached point
                          # v2: graph compiler (residual adds modeled, fused
                          # segments, scratchpad residency)
+                         # v3: vectorized ALU macro-ops (MAC/overwrite),
+                         # double-buffered ALU-layer pipelines, pad-aware
+                         # patch loads, dedup_loads on by default
 CACHE_SCHEMA_VERSION = 2  # on-disk record layout; get() rejects other versions
 
 DEFAULT_LOG_BLOCKS = (4, 5, 6)
@@ -234,7 +237,10 @@ def eval_job(job: DSEJob) -> dict:
         return {**base, "feasible": False, "reason": "; ".join(errs)}
     graph = network_graph(job.network, 1 << job.batch_log)
     try:
+        # dedup_loads: the paper's §IV.D.2 redundant-load elimination is on
+        # for every sweep point (it needs a double-buffered tiling to bite)
         rep = run_network(job.network, graph, hw, layer_cache=_LAYER_CACHE,
+                          dedup_loads=True,
                           fusion=job.residency, residency=job.residency)
     except (AssertionError, RuntimeError, ValueError) as e:
         # infeasible point (sparse design space, §V)

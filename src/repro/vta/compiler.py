@@ -280,8 +280,9 @@ def _build_concat(node: Node, graph: Graph, hw: VTAConfig) -> Segment:
     tasks: list = []
     shapes = [graph.nodes[s].shape for s in node.inputs]
     emit_concat_tasks(shapes, hw, alloc, tasks, tensors=list(node.inputs),
-                      out_tensor=node.name)
-    prog = finalize(tasks, hw, n_ctx=1)
+                      out_tensor=node.name, n_ctx=2)
+    n_ctx = max((t.ctx for t in tasks), default=0) + 1
+    prog = finalize(tasks, hw, n_ctx=n_ctx)
     prog.uop_mem = alloc.mem
     return Segment(nodes=[node], program=prog,
                    dram_bytes=program_dram_bytes(prog, hw))

@@ -187,28 +187,47 @@ class FSim:
         np.add.at(self.acc, acc_i, prod)
 
     def _alu(self, insn: AluInsn):
+        """Multi-uop macro-op sweep: uops execute *in sequence* (vectorized
+        over the lp0 x lp1 grid), because batched uop vectors may chain
+        through a shared destination — e.g. the depthwise MAC accumulation,
+        where every tap's uop reads and updates the same output tile."""
         uops = self.uop[insn.uop_bgn:insn.uop_end]
-        dst_i, src_i = self._indices(
-            insn, (uops[:, 0], uops[:, 1]),
-            (insn.dst_f0, insn.src_f0), (insn.dst_f1, insn.src_f1))
-        dst = self.acc[dst_i]
-        src = np.int32(insn.imm) if insn.use_imm else self.acc[src_i]
-        if insn.alu_op == AluOp.ADD:
-            r = dst + src
-        elif insn.alu_op == AluOp.MAX:
-            r = np.maximum(dst, src)
-        elif insn.alu_op == AluOp.MIN:
-            r = np.minimum(dst, src)
-        elif insn.alu_op == AluOp.SHR:
-            r = dst >> src
-        elif insn.alu_op == AluOp.MUL:
-            r = dst * src
-        elif insn.alu_op == AluOp.CLIP:
-            bound = abs(int(insn.imm))
-            r = np.clip(dst, -bound, bound)
-        else:
-            raise ValueError(insn.alu_op)
-        self.acc[dst_i] = r
+        l0 = np.arange(insn.lp0)[:, None]
+        l1 = np.arange(insn.lp1)[None, :]
+        dst_g = (l0 * insn.dst_f0 + l1 * insn.dst_f1).reshape(-1)
+        src_g = (l0 * insn.src_f0 + l1 * insn.src_f1).reshape(-1)
+        for (a, i, w) in uops:
+            dst_i = int(a) + dst_g
+            if insn.alu_op == AluOp.MAC:
+                # src2 (uop 3rd field): loop-invariant latched acc entry
+                prod = self.acc[int(i) + src_g] * self.acc[int(w)][None]
+                r = prod if insn.overwrite else self.acc[dst_i] + prod
+                self.acc[dst_i] = r
+                continue
+            src = np.int32(insn.imm) if insn.use_imm \
+                else self.acc[int(i) + src_g]
+            if insn.overwrite:
+                # write-through: dst <- src/imm (op applied to its identity)
+                self.acc[dst_i] = np.broadcast_to(
+                    src, self.acc[dst_i].shape)
+                continue
+            dst = self.acc[dst_i]
+            if insn.alu_op == AluOp.ADD:
+                r = dst + src
+            elif insn.alu_op == AluOp.MAX:
+                r = np.maximum(dst, src)
+            elif insn.alu_op == AluOp.MIN:
+                r = np.minimum(dst, src)
+            elif insn.alu_op == AluOp.SHR:
+                r = dst >> src
+            elif insn.alu_op == AluOp.MUL:
+                r = dst * src
+            elif insn.alu_op == AluOp.CLIP:
+                bound = abs(int(insn.imm))
+                r = np.clip(dst, -bound, bound)
+            else:
+                raise ValueError(insn.alu_op)
+            self.acc[dst_i] = r
 
     # ------------------------------------------------------------------
     def _store(self, insn: StoreInsn):

@@ -12,6 +12,23 @@ New instructions/variants from the paper (§IV.D-E, abstract):
   * ALU opcode MUL — element-wise 8-bit multiply (depthwise conv);
   * LOAD pad_value choice — 0 or INT8_MIN (max-pool support);
   * ALU opcode CLIP — min+max in one op (the ResNet clip pattern).
+
+Vectorized ALU macro-ops (this stack's micro-architecture enhancement, in the
+paper's feature-by-feature methodology):
+  * every ALU instruction iterates a *uop vector* [uop_bgn, uop_end), exactly
+    like GEMM — one instruction sweeps many taps/operand pairs instead of one
+    single-uop sweep per tap, paying fetch/decode/flush once;
+  * ``overwrite`` bit — the symmetric counterpart of the GEMM ``reset`` bit:
+    the destination's prior value is ignored and the source (or immediate, or
+    MAC product) is written through. Collapses the tmp=0/copy idiom into one
+    single-read micro-op;
+  * ALU opcode MAC — ``dst += src1 * src2``: the uop's third field (idle in
+    classic two-operand ALU ops, already decoded for GEMM) addresses a second
+    acc operand that is loop-invariant across the lp0 x lp1 sweep and latched
+    once per uop. Depthwise conv becomes one overwrite-MAC + one MAC sweep
+    per tile. Because the field is the uop's WGT slot, latched operands must
+    sit in the low 2^wgt_addr_bits entries of the acc scratchpad — checked at
+    encode time like every other field constraint.
 """
 from __future__ import annotations
 
@@ -37,6 +54,7 @@ class AluOp(IntEnum):
     SHR = 3
     MUL = 4      # NEW (paper): element-wise multiply for depthwise conv
     CLIP = 5     # NEW (paper): fused min/max clip (ResNet pattern)
+    MAC = 6      # NEW (macro-op): dst += src1 * src2 (uop 3rd field = src2)
 
 
 class Buffer(IntEnum):
@@ -264,6 +282,10 @@ class LoadInsn(Insn):
     x_pad0: int = 0
     x_pad1: int = 0
     pad_value: int = 0       # NEW: 0 or INT8_MIN (max-pool)
+    stream: bool = False     # NEW: ACC data load issued via the LD engine
+                             # (load queue) so it double-buffers against the
+                             # ALU; UOP and mid-stream ACC loads stay on the
+                             # compute queue as on classic VTA
 
     def tiles(self) -> int:
         return (self.y_size + self.y_pad0 + self.y_pad1) * \
@@ -330,6 +352,7 @@ class AluInsn(Insn):
     use_imm: bool = False
     imm: int = 0
     imm2: int = 0            # CLIP: [imm, imm2] bounds
+    overwrite: bool = False  # NEW (macro-op): write-through, dst not read
 
     def iterations(self) -> int:
         return self.lp0 * self.lp1 * (self.uop_end - self.uop_bgn)
@@ -337,6 +360,20 @@ class AluInsn(Insn):
     @property
     def two_operand(self) -> bool:
         return not self.use_imm
+
+    def acc_reads(self, latched: bool = True) -> int:
+        """Accumulator-RF reads per iteration (drives the tsim II model).
+
+        ``latched``: a MAC's src2 is loop-invariant across the lp0 x lp1
+        sweep, so the pipelined unit reads it once per uop and holds it in an
+        operand latch; the unpipelined unit re-reads it every iteration.
+        """
+        n = 0 if self.overwrite else 1              # dst read-modify-write
+        if self.alu_op == AluOp.MAC:
+            n += 1 + (0 if latched else 1)          # src1 + (latched) src2
+        elif not self.use_imm:
+            n += 1                                  # src
+        return n
 
 
 @dataclass
@@ -417,6 +454,7 @@ def encode_insn(insn: Insn, hw: VTAConfig) -> int:
             put(getattr(insn, f), hw.acc_addr_bits, f)
         put(1 if insn.use_imm else 0, 1, "use_imm")
         put(insn.imm & 0xFFFF, 16, "imm")
+        put(1 if insn.overwrite else 0, 1, "overwrite")
     elif isinstance(insn, FinishInsn):
         pass
     assert bit <= INSN_BITS, f"{type(insn).__name__} needs {bit} bits > {INSN_BITS}"

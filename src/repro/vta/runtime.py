@@ -77,6 +77,8 @@ class Program:
 
 def queue_of(insn: Insn) -> str:
     if isinstance(insn, LoadInsn):
+        if insn.buffer == Buffer.ACC and insn.stream:
+            return "load"       # streamed ALU-layer tile (double buffering)
         return "compute" if insn.buffer in (Buffer.UOP, Buffer.ACC) else "load"
     if isinstance(insn, StoreInsn):
         return "store"
@@ -92,7 +94,8 @@ class UopAllocator:
         self.hw = hw
         self.capacity = hw.uop_depth
         self.cursor = 0
-        self.cache: dict = {}
+        self.cache: dict = {}        # seq -> sram bgn (valid until flush)
+        self.dram_cache: dict = {}   # seq -> dram base (survives flushes)
         self.mem: list = []          # DRAM image of all unique sequences
         self.flushes = 0
 
@@ -110,8 +113,14 @@ class UopAllocator:
                     f"uop sequence ({len(seq)}) exceeds uop buffer "
                     f"({self.capacity}); enlarge LOG_UOP_BUFF")
         bgn = self.cursor
-        dram_base = len(self.mem)
-        self.mem.extend(seq)
+        # content-dedup the DRAM image too: a sequence re-placed after a
+        # buffer flush reloads the *same* DRAM chunk instead of appending a
+        # fresh copy (repeated tiles stop paying uop DRAM traffic)
+        dram_base = self.dram_cache.get(key)
+        if dram_base is None:
+            dram_base = len(self.mem)
+            self.mem.extend(seq)
+            self.dram_cache[key] = dram_base
         self.cursor += len(seq)
         self.cache[key] = bgn
         ld = LoadInsn(op=Op.LOAD, buffer=Buffer.UOP, sram_base=bgn,

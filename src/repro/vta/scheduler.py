@@ -18,6 +18,16 @@ weights when h_n=2) is loaded once into ctx0's half and ctx1's uops read it
 there — turning the access pattern (I1,W1),(I2,W2),(I1,W1),(I2,W2) into
 (I1,W1),(I1,W2),(I2,W1),(I2,W2).
 
+ALU-lowered layers (depthwise / pool / add) use *vectorized macro-ops*: the
+whole per-tile tap sequence is batched into one or two multi-uop AluInsns
+(overwrite-seeded MAC sweeps for depthwise; an overwrite copy + one MAX/ADD
+sweep for pool), the per-tile uop chunks dedup through the UopAllocator so
+repeated tiles re-load nothing, and the same virtual-thread treatment conv
+has (n_ctx=2, alternating acc halves, patch loads streamed through the LD
+engine) lets the memory engine fill tile i+1 while the ALU chews tile i.
+Each emitter keeps its pre-macro-op lowering behind ``vectorize=False`` as
+the single-uop comparison baseline.
+
 Graph-compiler hooks (vta/compiler.py): every ``schedule_*`` is a thin
 wrapper over an ``emit_*_tasks`` function that appends Tasks to a caller-
 owned list against a caller-owned UopAllocator, so multiple layers can share
@@ -45,8 +55,8 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from repro.core.tps import ConvWorkload, Tiling
-from repro.vta.isa import (AluInsn, AluOp, Buffer, GemmInsn, LoadInsn, Op,
-                           StoreInsn, Uop, VTAConfig)
+from repro.vta.isa import (PAD_BITS, AluInsn, AluOp, Buffer, GemmInsn,
+                           LoadInsn, Op, StoreInsn, Uop, VTAConfig)
 from repro.vta.runtime import Program, Task, UopAllocator, finalize
 
 INT8_MIN = -128
@@ -63,6 +73,24 @@ class Schedule:
 
 def _ceil_div(a, b):
     return -(-a // b)
+
+
+def _n_ctx_of(tasks: list) -> int:
+    """Effective context count of an emitted task list (emitters downgrade
+    a requested n_ctx=2 when even a minimal tile cannot split)."""
+    return max((t.ctx for t in tasks), default=0) + 1
+
+
+def _shrink_tile(oh: int, ow: int, need, budget: int):
+    """Halve a (th, tw) spatial tile (rows first, then width — the
+    emit_depthwise fallback, shared by every ALU-lowered emitter) until
+    ``need(th, tw) <= budget``; None when even 1x1 does not fit."""
+    th, tw = oh, ow
+    while need(th, tw) > budget and th > 1:
+        th = _ceil_div(th, 2)
+    while need(th, tw) > budget and tw > 1:
+        tw = _ceil_div(tw, 2)
+    return (th, tw) if need(th, tw) <= budget else None
 
 
 def _finish_schedule(wl: ConvWorkload, t: Tiling, hw: VTAConfig,
@@ -357,6 +385,31 @@ def emit_conv_tasks(wl: ConvWorkload, t: Tiling, hw: VTAConfig,
     return n_ctx
 
 
+def _patch_load(wl: ConvWorkload, sram_base: int, y0: int, x0: int,
+                ih: int, iw: int, *, stream: bool,
+                pad_value: int = 0) -> LoadInsn:
+    """Widening ACC load of an (ih, iw) activation patch with explicit pad
+    fields: out-of-bounds rows/cols are hardware padding (like the conv INP
+    path), not DRAM traffic — y_size/x_size count only real DRAM entries.
+
+    A pad that outgrows its 4-bit field (exotic stride/pad combinations)
+    falls back to the padless form — the whole patch extent is fetched and
+    billed as DRAM traffic — so the encoded word always describes exactly
+    the transfer the simulators perform."""
+    ypad0 = max(0, -y0)
+    ypad1 = max(0, y0 + ih - wl.h)
+    xpad0 = max(0, -x0)
+    xpad1 = max(0, x0 + iw - wl.w)
+    if max(ypad0, ypad1, xpad0, xpad1) >= (1 << PAD_BITS):
+        ypad0 = ypad1 = xpad0 = xpad1 = 0
+    return LoadInsn(op=Op.LOAD, buffer=Buffer.ACC, sram_base=sram_base,
+                    dram_base=0,
+                    y_size=ih - ypad0 - ypad1, x_size=iw - xpad0 - xpad1,
+                    x_stride=max(1, wl.w),
+                    y_pad0=ypad0, y_pad1=ypad1, x_pad0=xpad0, x_pad1=xpad1,
+                    pad_value=pad_value, stream=stream)
+
+
 def _spill(st: StoreInsn, dst: int, dst_stride: int) -> None:
     """Turn a DRAM store into an on-chip INP-scratchpad spill at ``dst``.
 
@@ -410,35 +463,60 @@ def _emit_post_ops(task, emit_compute, uops, lp0, lp1, post_op: str):
 
 
 # ---------------------------------------------------------------------------
-# Depthwise conv (§IV.D.3): ALU MUL/ADD over taps, channel-blocked
+# Depthwise conv (§IV.D.3): vectorized ALU macro-ops over taps, channel-blocked
 # ---------------------------------------------------------------------------
+def _chunked(seq: tuple, cap: int):
+    for s0 in range(0, len(seq), cap):
+        yield seq[s0:s0 + cap]
+
+
 def emit_depthwise_tasks(wl: ConvWorkload, hw: VTAConfig,
                          alloc: UopAllocator, tasks: list, *,
                          post_op: str = "relu_shift",
                          tensors: Optional[dict] = None,
-                         resident_out: Optional[int] = None) -> Tiling:
-    """Depthwise conv on the ALU: per tap (copy, MUL weight-row, ADD into out).
+                         resident_out: Optional[int] = None,
+                         n_ctx: int = 1, vectorize: bool = True) -> Tiling:
+    """Depthwise conv on the ALU.
 
-    Channels are blocked by BO; activations for the patch live in the acc
-    scratchpad (widened on load); one weight row tile per tap.
+    Vectorized form (default): one overwrite-MAC sweep seeds the output tile
+    with tap 0's products, then a single multi-uop MAC macro-op accumulates
+    every remaining tap — ``2 + len(post)`` ALU instructions per tile where
+    the single-uop form needed ``4*kh*kw + 1``. Tap weights live in the low
+    acc slots (``n_ctx * kh * kw`` entries) so the MAC's latched src2 fits
+    the uop's third field; patch/weight loads stream through the LD engine
+    and tasks alternate scratchpad halves when ``n_ctx == 2``, so the memory
+    engine fills tile i+1 while the ALU chews tile i.
+
+    Legacy form (``vectorize=False``, the pre-macro-op lowering kept as the
+    tsim comparison baseline): per tap (tmp=0, copy, MUL weight, ADD into
+    out), each a single-uop instruction, single-context, compute-queue loads.
     """
     BV, BO = hw.batch, hw.block_out
     assert wl.fi == wl.fo and wl.b % BV == 0 and wl.fo % BO == 0
+    if not vectorize:
+        n_ctx = 1               # the legacy forms are single-context
     dc = wl.fo // BO
     oh, ow = wl.oh, wl.ow
+    kk = wl.kh * wl.kw
     tname = (tensors or {}).get
-    # choose a spatial tile that fits: patch + out + tmp + wgt in acc half
-    th_i, tw_i = oh, ow
-    def fits(th, tw):
+    # Tile against the per-context acc budget (the vectorized form drops the
+    # tmp tile and hoists tap weights into a low reserve; the legacy form
+    # keeps the old [patch | out | tmp | wgt] layout in a single context).
+    # Double buffering halves the spatial tile when it must — the overlap
+    # re-reads cost a little DRAM, the load/compute overlap buys more cycles
+    # — but n_ctx falls back to 1 if even a 1x1 tile cannot split.
+    def need(th, tw):
         ih = (th - 1) * wl.sh + wl.kh
         iw = (tw - 1) * wl.sw + wl.kw
-        need = ih * iw + th * tw * 2 + wl.kh * wl.kw
-        return need <= hw.acc_depth
-    while not fits(th_i, tw_i) and th_i > 1:
-        th_i = _ceil_div(th_i, 2)
-    while not fits(th_i, tw_i) and tw_i > 1:
-        tw_i = _ceil_div(tw_i, 2)
-    assert fits(th_i, tw_i), "acc scratchpad too small for depthwise tile"
+        return ih * iw + th * tw + (0 if vectorize else th * tw + kk)
+    if n_ctx > 1 and _shrink_tile(
+            oh, ow, need, (hw.acc_depth - n_ctx * kk) // n_ctx) is None:
+        n_ctx = 1
+    wgt_reserve = n_ctx * kk if vectorize else 0
+    half = (hw.acc_depth - wgt_reserve) // n_ctx
+    tile = _shrink_tile(oh, ow, need, half)
+    assert tile is not None, "acc scratchpad too small for depthwise tile"
+    th_i, tw_i = tile
     th_o, tw_o = _ceil_div(oh, th_i), _ceil_div(ow, tw_i)
     ih_i = (th_i - 1) * wl.sh + wl.kh
     iw_i = (tw_i - 1) * wl.sw + wl.kw
@@ -450,107 +528,138 @@ def emit_depthwise_tasks(wl: ConvWorkload, hw: VTAConfig,
         # on-chip path must not need to)
         assert oh % th_i == 0, "resident output needs divisor spatial tiles"
 
-    patch_base = 0
-    out_base = ih_i * iw_i
-    tmp_base = out_base + th_i * tw_i
-    wgt_base = tmp_base + th_i * tw_i
+    cap = max(1, hw.uop_depth)
+    taps = [(dy, dx) for dy in range(wl.kh) for dx in range(wl.kw)]
+    last_wc: dict = {}          # ctx -> channel block whose weights are loaded
+    for ti, (b, c, ho, wo) in enumerate(
+            (b, c, ho, wo) for b in range(wl.b // BV) for c in range(dc)
+            for ho in range(th_o) for wo in range(tw_o)):
+        ctx = ti % n_ctx
+        if vectorize:
+            wgt_base = ctx * kk
+            patch_base = wgt_reserve + ctx * half
+            out_base = patch_base + ih_i * iw_i
+            tmp_base = None
+        else:
+            patch_base = 0
+            out_base = ih_i * iw_i
+            tmp_base = out_base + th_i * tw_i
+            wgt_base = tmp_base + th_i * tw_i
+        task = Task(ctx=ctx)
+        y0 = ho * th_i * wl.sh - wl.ph
+        x0 = wo * tw_i * wl.sw - wl.pw
+        ld = _patch_load(wl, patch_base, y0, x0, ih_i, iw_i,
+                         stream=vectorize)
+        ld.meta = {"kind": "dw_patch", "b0": b, "c0": c,
+                   "y0": y0, "x0": x0, "ih": ih_i, "iw": iw_i}
+        if tname("inp"):
+            ld.meta["tensor"] = tname("inp")
+        # hoist the tap-weight load out of the spatial tile loop: within one
+        # channel block every (ho, wo) tile reuses the same kh*kw weights,
+        # so only the first tile of a (ctx, c) run reloads the slot
+        loads = [ld]
+        if not vectorize or last_wc.get(ctx) != c:
+            last_wc[ctx] = c
+            lw = LoadInsn(op=Op.LOAD, buffer=Buffer.ACC,
+                          sram_base=wgt_base, dram_base=0,
+                          y_size=1, x_size=kk, x_stride=kk,
+                          stream=vectorize)
+            lw.meta = {"kind": "dw_wgt", "c0": c, "kh": wl.kh, "kw": wl.kw}
+            if tname("wgt"):
+                lw.meta["tensor"] = tname("wgt")
+            loads.append(lw)
+        if vectorize:
+            task.loads.extend(loads)
+        else:
+            task.computes.extend(loads)
 
-    def tile_uops(dst, src, n):
-        return tuple(Uop(dst + i, src + i, 0) for i in range(0, 1)), n
+        def emit(seq, make):
+            for chunk in _chunked(seq, cap):
+                bgn, uld = alloc.place(chunk)
+                if uld is not None:
+                    task.computes.append(uld)
+                task.computes.append(make(bgn, bgn + len(chunk)))
 
-    for b in range(wl.b // BV):
-        for c in range(dc):
-            for ho in range(th_o):
-                for wo in range(tw_o):
-                    task = Task(ctx=0)
-                    y0 = ho * th_i * wl.sh - wl.ph
-                    x0 = wo * tw_i * wl.sw - wl.pw
-                    ld = LoadInsn(op=Op.LOAD, buffer=Buffer.ACC,
-                                  sram_base=patch_base, dram_base=0,
-                                  y_size=ih_i, x_size=iw_i, x_stride=wl.w)
-                    ld.meta = {"kind": "dw_patch", "b0": b, "c0": c,
-                               "y0": y0, "x0": x0, "ih": ih_i, "iw": iw_i}
-                    if tname("inp"):
-                        ld.meta["tensor"] = tname("inp")
-                    task.computes.append(ld)
-                    lw = LoadInsn(op=Op.LOAD, buffer=Buffer.ACC,
-                                  sram_base=wgt_base, dram_base=0,
-                                  y_size=1, x_size=wl.kh * wl.kw,
-                                  x_stride=wl.kh * wl.kw)
-                    lw.meta = {"kind": "dw_wgt", "c0": c, "kh": wl.kh, "kw": wl.kw}
-                    if tname("wgt"):
-                        lw.meta["tensor"] = tname("wgt")
-                    task.computes.append(lw)
+        def mac(seq, overwrite):
+            emit(seq, lambda b_, e, o=overwrite: AluInsn(
+                op=Op.ALU, alu_op=AluOp.MAC, uop_bgn=b_, uop_end=e,
+                lp0=th_i, lp1=tw_i, dst_f0=tw_i, dst_f1=1,
+                src_f0=wl.sh * iw_i, src_f1=wl.sw, overwrite=o))
 
-                    def emit(seq, make):
-                        bgn, uld = alloc.place(seq)
-                        if uld is not None:
-                            task.computes.append(uld)
-                        task.computes.append(make(bgn, bgn + len(seq)))
-
-                    # zero the out region
-                    emit((Uop(out_base, out_base, 0),),
-                         lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.MUL,
-                                               uop_bgn=b_, uop_end=e,
-                                               lp0=th_i, lp1=tw_i,
-                                               dst_f0=tw_i, dst_f1=1,
-                                               src_f0=tw_i, src_f1=1,
-                                               use_imm=True, imm=0))
-                    for dy in range(wl.kh):
-                        for dx in range(wl.kw):
-                            src = patch_base + dy * iw_i + dx
-                            # tmp = 0; tmp += shifted patch; tmp *= w[dy,dx]; out += tmp
-                            emit((Uop(tmp_base, tmp_base, 0),),
-                                 lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.MUL,
-                                                       uop_bgn=b_, uop_end=e,
-                                                       lp0=th_i, lp1=tw_i,
-                                                       dst_f0=tw_i, dst_f1=1,
-                                                       src_f0=tw_i, src_f1=1,
-                                                       use_imm=True, imm=0))
-                            emit((Uop(tmp_base, src, 0),),
-                                 lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.ADD,
-                                                       uop_bgn=b_, uop_end=e,
-                                                       lp0=th_i, lp1=tw_i,
-                                                       dst_f0=tw_i, dst_f1=1,
-                                                       src_f0=wl.sh * iw_i,
-                                                       src_f1=wl.sw))
-                            emit((Uop(tmp_base, wgt_base + dy * wl.kw + dx, 0),),
-                                 lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.MUL,
-                                                       uop_bgn=b_, uop_end=e,
-                                                       lp0=th_i, lp1=tw_i,
-                                                       dst_f0=tw_i, dst_f1=1,
-                                                       src_f0=0, src_f1=0))
-                            emit((Uop(out_base, tmp_base, 0),),
-                                 lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.ADD,
-                                                       uop_bgn=b_, uop_end=e,
-                                                       lp0=th_i, lp1=tw_i,
-                                                       dst_f0=tw_i, dst_f1=1,
-                                                       src_f0=tw_i, src_f1=1))
-                    _emit_post_ops(task, lambda t_, s, m: emit(s, m),
-                                   (Uop(out_base, out_base, 0),), th_i, tw_i, post_op)
-                    st = StoreInsn(op=Op.STORE, sram_base=out_base, dram_base=0,
-                                   y_size=1, x_size=th_i * tw_i, x_stride=oh * ow)
-                    st.meta = {"kind": "dw_out", "b0": b, "c0": c,
-                               "y0": ho * th_i, "th": th_i,
-                               "x0": wo * tw_i, "tw": tw_i}
-                    if tname("out"):
-                        st.meta["tensor"] = tname("out")
-                    if resident_out is not None:
-                        _spill(st, resident_out + c * oh * ow
-                               + ho * th_i * ow, 1)
-                    task.stores.append(st)
-                    tasks.append(task)
+        if vectorize:
+            # tap 0 seeds out (write-through), taps 1.. accumulate — one
+            # multi-uop MAC sweep covers them all
+            def tap_uop(dy, dx):
+                return Uop(out_base, patch_base + dy * iw_i + dx,
+                           wgt_base + dy * wl.kw + dx)
+            mac((tap_uop(*taps[0]),), True)
+            if len(taps) > 1:
+                mac(tuple(tap_uop(dy, dx) for dy, dx in taps[1:]), False)
+        else:
+            # zero the out region
+            emit((Uop(out_base, out_base, 0),),
+                 lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.MUL,
+                                       uop_bgn=b_, uop_end=e,
+                                       lp0=th_i, lp1=tw_i,
+                                       dst_f0=tw_i, dst_f1=1,
+                                       src_f0=tw_i, src_f1=1,
+                                       use_imm=True, imm=0))
+            for dy, dx in taps:
+                src = patch_base + dy * iw_i + dx
+                # tmp = 0; tmp += shifted patch; tmp *= w[dy,dx]; out += tmp
+                emit((Uop(tmp_base, tmp_base, 0),),
+                     lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.MUL,
+                                           uop_bgn=b_, uop_end=e,
+                                           lp0=th_i, lp1=tw_i,
+                                           dst_f0=tw_i, dst_f1=1,
+                                           src_f0=tw_i, src_f1=1,
+                                           use_imm=True, imm=0))
+                emit((Uop(tmp_base, src, 0),),
+                     lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.ADD,
+                                           uop_bgn=b_, uop_end=e,
+                                           lp0=th_i, lp1=tw_i,
+                                           dst_f0=tw_i, dst_f1=1,
+                                           src_f0=wl.sh * iw_i,
+                                           src_f1=wl.sw))
+                emit((Uop(tmp_base, wgt_base + dy * wl.kw + dx, 0),),
+                     lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.MUL,
+                                           uop_bgn=b_, uop_end=e,
+                                           lp0=th_i, lp1=tw_i,
+                                           dst_f0=tw_i, dst_f1=1,
+                                           src_f0=0, src_f1=0))
+                emit((Uop(out_base, tmp_base, 0),),
+                     lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.ADD,
+                                           uop_bgn=b_, uop_end=e,
+                                           lp0=th_i, lp1=tw_i,
+                                           dst_f0=tw_i, dst_f1=1,
+                                           src_f0=tw_i, src_f1=1))
+        _emit_post_ops(task, lambda t_, s, m: emit(s, m),
+                       (Uop(out_base, out_base, 0),), th_i, tw_i, post_op)
+        st = StoreInsn(op=Op.STORE, sram_base=out_base, dram_base=0,
+                       y_size=1, x_size=th_i * tw_i, x_stride=oh * ow)
+        st.meta = {"kind": "dw_out", "b0": b, "c0": c,
+                   "y0": ho * th_i, "th": th_i,
+                   "x0": wo * tw_i, "tw": tw_i}
+        if tname("out"):
+            st.meta["tensor"] = tname("out")
+        if resident_out is not None:
+            _spill(st, resident_out + c * oh * ow
+                   + ho * th_i * ow, 1)
+        task.stores.append(st)
+        tasks.append(task)
     return Tiling(1, th_o, tw_o, dc, 1)
 
 
 def schedule_depthwise(wl: ConvWorkload, hw: VTAConfig, *,
                        post_op: str = "relu_shift",
-                       tensors: Optional[dict] = None) -> Schedule:
+                       tensors: Optional[dict] = None,
+                       vectorize: bool = True) -> Schedule:
     alloc = UopAllocator(hw)
     tasks: list[Task] = []
     t = emit_depthwise_tasks(wl, hw, alloc, tasks, post_op=post_op,
-                             tensors=tensors)
-    return _finish_schedule(wl, t, hw, alloc, tasks, 1)
+                             tensors=tensors, n_ctx=2 if vectorize else 1,
+                             vectorize=vectorize)
+    return _finish_schedule(wl, t, hw, alloc, tasks, _n_ctx_of(tasks))
 
 
 # ---------------------------------------------------------------------------
@@ -559,20 +668,32 @@ def schedule_depthwise(wl: ConvWorkload, hw: VTAConfig, *,
 def emit_pool_tasks(wl: ConvWorkload, hw: VTAConfig,
                     alloc: UopAllocator, tasks: list, *, mode: str = "max",
                     tensors: Optional[dict] = None,
-                    resident_out: Optional[int] = None) -> Tiling:
+                    resident_out: Optional[int] = None,
+                    n_ctx: int = 1, vectorize: bool = True) -> Tiling:
+    """Pool on the ALU. Vectorized form: tap 0 is an overwrite (write-through)
+    copy and every remaining tap rides one multi-uop MAX/ADD macro sweep —
+    2-3 ALU instructions per tile vs ``kh*kw + 2``; patch loads stream via
+    the LD engine and tasks alternate scratchpad halves (``n_ctx == 2``).
+    ``vectorize=False`` keeps the single-uop, single-context legacy forms."""
     BV, BO = hw.batch, hw.block_out
     assert wl.fi == wl.fo and wl.fo % BO == 0
+    if not vectorize:
+        n_ctx = 1
     dc = wl.fo // BO
     oh, ow = wl.oh, wl.ow
     tname = (tensors or {}).get
-    th_i, tw_i = oh, ow
-    def fits(th, tw):
+    # same policy as depthwise: halve the spatial tile until it fits a
+    # per-context half; n_ctx falls back to 1 only when no tile splits
+    def need(th, tw):
         ih = (th - 1) * wl.sh + wl.kh
         iw = (tw - 1) * wl.sw + wl.kw
-        return ih * iw + th * tw <= hw.acc_depth
-    while not fits(th_i, tw_i) and th_i > 1:
-        th_i = _ceil_div(th_i, 2)
-    assert fits(th_i, tw_i)
+        return ih * iw + th * tw
+    if n_ctx > 1 and _shrink_tile(oh, ow, need, hw.acc_depth // n_ctx) is None:
+        n_ctx = 1
+    half = hw.acc_depth // n_ctx
+    tile = _shrink_tile(oh, ow, need, half)
+    assert tile is not None, "acc scratchpad too small for pool tile"
+    th_i, tw_i = tile
     th_o, tw_o = _ceil_div(oh, th_i), _ceil_div(ow, tw_i)
     ih_i = (th_i - 1) * wl.sh + wl.kh
     iw_i = (tw_i - 1) * wl.sw + wl.kw
@@ -585,81 +706,96 @@ def emit_pool_tasks(wl: ConvWorkload, hw: VTAConfig,
         # on-chip path must not need to)
         assert oh % th_i == 0, "resident output needs divisor spatial tiles"
 
-    patch_base, out_base = 0, ih_i * iw_i
-    for b in range(wl.b // BV):
-        for c in range(dc):
-            for ho in range(th_o):
-                for wo in range(tw_o):
-                    task = Task(ctx=0)
-                    y0 = ho * th_i * wl.sh - wl.ph
-                    x0 = wo * tw_i * wl.sw - wl.pw
-                    ld = LoadInsn(op=Op.LOAD, buffer=Buffer.ACC,
-                                  sram_base=patch_base, dram_base=0,
-                                  y_size=ih_i, x_size=iw_i, x_stride=wl.w,
-                                  pad_value=pad_value)
-                    ld.meta = {"kind": "dw_patch", "b0": b, "c0": c,
-                               "y0": y0, "x0": x0, "ih": ih_i, "iw": iw_i,
-                               "pad_value": pad_value}
-                    if tname("inp"):
-                        ld.meta["tensor"] = tname("inp")
-                    task.computes.append(ld)
+    cap = max(1, hw.uop_depth)
+    taps = [(dy, dx) for dy in range(wl.kh) for dx in range(wl.kw)]
+    op = AluOp.MAX if mode == "max" else AluOp.ADD
+    for ti, (b, c, ho, wo) in enumerate(
+            (b, c, ho, wo) for b in range(wl.b // BV) for c in range(dc)
+            for ho in range(th_o) for wo in range(tw_o)):
+        ctx = ti % n_ctx
+        patch_base = ctx * half
+        out_base = patch_base + ih_i * iw_i
+        task = Task(ctx=ctx)
+        y0 = ho * th_i * wl.sh - wl.ph
+        x0 = wo * tw_i * wl.sw - wl.pw
+        ld = _patch_load(wl, patch_base, y0, x0, ih_i, iw_i,
+                         stream=vectorize, pad_value=pad_value)
+        ld.meta = {"kind": "dw_patch", "b0": b, "c0": c,
+                   "y0": y0, "x0": x0, "ih": ih_i, "iw": iw_i,
+                   "pad_value": pad_value}
+        if tname("inp"):
+            ld.meta["tensor"] = tname("inp")
+        if vectorize:
+            task.loads.append(ld)
+        else:
+            task.computes.append(ld)
 
-                    def emit(seq, make):
-                        bgn, uld = alloc.place(seq)
-                        if uld is not None:
-                            task.computes.append(uld)
-                        task.computes.append(make(bgn, bgn + len(seq)))
+        def emit(seq, make):
+            for chunk in _chunked(seq, cap):
+                bgn, uld = alloc.place(chunk)
+                if uld is not None:
+                    task.computes.append(uld)
+                task.computes.append(make(bgn, bgn + len(chunk)))
 
-                    # out = 0 (MUL imm 0); out += tap0 (copy); then MAX/ADD rest
-                    emit((Uop(out_base, out_base, 0),),
-                         lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.MUL,
-                                               uop_bgn=b_, uop_end=e,
-                                               lp0=th_i, lp1=tw_i,
-                                               dst_f0=tw_i, dst_f1=1,
-                                               src_f0=tw_i, src_f1=1,
-                                               use_imm=True, imm=0))
-                    op = AluOp.MAX if mode == "max" else AluOp.ADD
-                    for ti, (dy, dx) in enumerate(
-                            (dy, dx) for dy in range(wl.kh) for dx in range(wl.kw)):
-                        src = patch_base + dy * iw_i + dx
-                        tap_op = AluOp.ADD if ti == 0 else op
-                        emit((Uop(out_base, src, 0),),
-                             lambda b_, e, o=tap_op: AluInsn(
-                                 op=Op.ALU, alu_op=o,
-                                 uop_bgn=b_, uop_end=e,
-                                 lp0=th_i, lp1=tw_i,
-                                 dst_f0=tw_i, dst_f1=1,
-                                 src_f0=wl.sh * iw_i, src_f1=wl.sw))
-                    if mode == "avg":
-                        shift = max(0, int(round(math.log2(wl.kh * wl.kw))))
-                        emit((Uop(out_base, out_base, 0),),
-                             lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.SHR,
-                                                   uop_bgn=b_, uop_end=e,
-                                                   lp0=th_i, lp1=tw_i,
-                                                   dst_f0=tw_i, dst_f1=1,
-                                                   src_f0=tw_i, src_f1=1,
-                                                   use_imm=True, imm=shift))
-                    st = StoreInsn(op=Op.STORE, sram_base=out_base, dram_base=0,
-                                   y_size=1, x_size=th_i * tw_i, x_stride=oh * ow)
-                    st.meta = {"kind": "dw_out", "b0": b, "c0": c,
-                               "y0": ho * th_i, "th": th_i,
-                               "x0": wo * tw_i, "tw": tw_i}
-                    if tname("out"):
-                        st.meta["tensor"] = tname("out")
-                    if resident_out is not None:
-                        _spill(st, resident_out + c * oh * ow
-                               + ho * th_i * ow, 1)
-                    task.stores.append(st)
-                    tasks.append(task)
+        def tap_sweep(seq, o, overwrite):
+            emit(seq, lambda b_, e, o=o, ov=overwrite: AluInsn(
+                op=Op.ALU, alu_op=o, uop_bgn=b_, uop_end=e,
+                lp0=th_i, lp1=tw_i, dst_f0=tw_i, dst_f1=1,
+                src_f0=wl.sh * iw_i, src_f1=wl.sw, overwrite=ov))
+
+        def tap_uop(dy, dx):
+            return Uop(out_base, patch_base + dy * iw_i + dx, 0)
+
+        if vectorize:
+            # out <- tap0 (write-through copy), then one MAX/ADD macro sweep
+            tap_sweep((tap_uop(*taps[0]),), AluOp.ADD, True)
+            if len(taps) > 1:
+                tap_sweep(tuple(tap_uop(dy, dx) for dy, dx in taps[1:]),
+                          op, False)
+        else:
+            # out = 0 (MUL imm 0); out += tap0 (copy); then MAX/ADD rest
+            emit((Uop(out_base, out_base, 0),),
+                 lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.MUL,
+                                       uop_bgn=b_, uop_end=e,
+                                       lp0=th_i, lp1=tw_i,
+                                       dst_f0=tw_i, dst_f1=1,
+                                       src_f0=tw_i, src_f1=1,
+                                       use_imm=True, imm=0))
+            for ti_, (dy, dx) in enumerate(taps):
+                tap_sweep((tap_uop(dy, dx),),
+                          AluOp.ADD if ti_ == 0 else op, False)
+        if mode == "avg":
+            shift = max(0, int(round(math.log2(wl.kh * wl.kw))))
+            emit((Uop(out_base, out_base, 0),),
+                 lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.SHR,
+                                       uop_bgn=b_, uop_end=e,
+                                       lp0=th_i, lp1=tw_i,
+                                       dst_f0=tw_i, dst_f1=1,
+                                       src_f0=tw_i, src_f1=1,
+                                       use_imm=True, imm=shift))
+        st = StoreInsn(op=Op.STORE, sram_base=out_base, dram_base=0,
+                       y_size=1, x_size=th_i * tw_i, x_stride=oh * ow)
+        st.meta = {"kind": "dw_out", "b0": b, "c0": c,
+                   "y0": ho * th_i, "th": th_i,
+                   "x0": wo * tw_i, "tw": tw_i}
+        if tname("out"):
+            st.meta["tensor"] = tname("out")
+        if resident_out is not None:
+            _spill(st, resident_out + c * oh * ow
+                   + ho * th_i * ow, 1)
+        task.stores.append(st)
+        tasks.append(task)
     return Tiling(1, th_o, tw_o, dc, 1)
 
 
 def schedule_pool(wl: ConvWorkload, hw: VTAConfig, *, mode: str = "max",
-                  tensors: Optional[dict] = None) -> Schedule:
+                  tensors: Optional[dict] = None,
+                  vectorize: bool = True) -> Schedule:
     alloc = UopAllocator(hw)
     tasks: list[Task] = []
-    t = emit_pool_tasks(wl, hw, alloc, tasks, mode=mode, tensors=tensors)
-    return _finish_schedule(wl, t, hw, alloc, tasks, 1)
+    t = emit_pool_tasks(wl, hw, alloc, tasks, mode=mode, tensors=tensors,
+                        n_ctx=2 if vectorize else 1, vectorize=vectorize)
+    return _finish_schedule(wl, t, hw, alloc, tasks, _n_ctx_of(tasks))
 
 
 # ---------------------------------------------------------------------------
@@ -671,74 +807,85 @@ def schedule_pool(wl: ConvWorkload, hw: VTAConfig, *, mode: str = "max",
 # ---------------------------------------------------------------------------
 def emit_add_tasks(wl: ConvWorkload, hw: VTAConfig,
                    alloc: UopAllocator, tasks: list, *,
-                   tensors: Optional[dict] = None) -> Tiling:
+                   tensors: Optional[dict] = None,
+                   n_ctx: int = 1, vectorize: bool = True) -> Tiling:
     BV, BO = hw.batch, hw.block_out
     assert wl.fi == wl.fo and wl.fo % BO == 0
+    if not vectorize:
+        n_ctx = 1
     dc = wl.fo // BO
     oh, ow = wl.oh, wl.ow
     tname = (tensors or {}).get
-    th_i, tw_i = oh, ow
-    while th_i * tw_i * 2 > hw.acc_depth and th_i > 1:
-        th_i = _ceil_div(th_i, 2)
-    while th_i * tw_i * 2 > hw.acc_depth and tw_i > 1:
-        tw_i = _ceil_div(tw_i, 2)
-    assert th_i * tw_i * 2 <= hw.acc_depth, "acc too small for add tile"
+    need = lambda th, tw: th * tw * 2      # the a/b operand pair
+    if n_ctx > 1 and _shrink_tile(oh, ow, need, hw.acc_depth // n_ctx) is None:
+        n_ctx = 1
+    half = hw.acc_depth // n_ctx
+    tile = _shrink_tile(oh, ow, need, half)
+    assert tile is not None, "acc too small for add tile"
+    th_i, tw_i = tile
     th_o, tw_o = _ceil_div(oh, th_i), _ceil_div(ow, tw_i)
-    a_base, b_base = 0, th_i * tw_i
 
-    for b in range(wl.b // BV):
-        for c in range(dc):
-            for ho in range(th_o):
-                for wo in range(tw_o):
-                    task = Task(ctx=0)
-                    for base, role in ((a_base, "add_a"), (b_base, "add_b")):
-                        ld = LoadInsn(op=Op.LOAD, buffer=Buffer.ACC,
-                                      sram_base=base, dram_base=0,
-                                      y_size=th_i, x_size=tw_i, x_stride=ow)
-                        ld.meta = {"kind": "dw_patch", "b0": b, "c0": c,
-                                   "y0": ho * th_i, "x0": wo * tw_i,
-                                   "ih": th_i, "iw": tw_i}
-                        if tname(role):
-                            ld.meta["tensor"] = tname(role)
-                        task.computes.append(ld)
+    for ti, (b, c, ho, wo) in enumerate(
+            (b, c, ho, wo) for b in range(wl.b // BV) for c in range(dc)
+            for ho in range(th_o) for wo in range(tw_o)):
+        ctx = ti % n_ctx
+        a_base = ctx * half
+        b_base = a_base + th_i * tw_i
+        task = Task(ctx=ctx)
+        for base, role in ((a_base, "add_a"), (b_base, "add_b")):
+            ld = LoadInsn(op=Op.LOAD, buffer=Buffer.ACC,
+                          sram_base=base, dram_base=0,
+                          y_size=th_i, x_size=tw_i, x_stride=ow,
+                          stream=vectorize)
+            ld.meta = {"kind": "dw_patch", "b0": b, "c0": c,
+                       "y0": ho * th_i, "x0": wo * tw_i,
+                       "ih": th_i, "iw": tw_i}
+            if tname(role):
+                ld.meta["tensor"] = tname(role)
+            if vectorize:
+                task.loads.append(ld)
+            else:
+                task.computes.append(ld)
 
-                    def emit(seq, make):
-                        bgn, uld = alloc.place(seq)
-                        if uld is not None:
-                            task.computes.append(uld)
-                        task.computes.append(make(bgn, bgn + len(seq)))
+        def emit(seq, make):
+            bgn, uld = alloc.place(seq)
+            if uld is not None:
+                task.computes.append(uld)
+            task.computes.append(make(bgn, bgn + len(seq)))
 
-                    emit((Uop(a_base, b_base, 0),),
-                         lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.ADD,
-                                               uop_bgn=b_, uop_end=e,
-                                               lp0=th_i, lp1=tw_i,
-                                               dst_f0=tw_i, dst_f1=1,
-                                               src_f0=tw_i, src_f1=1))
-                    emit((Uop(a_base, a_base, 0),),
-                         lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.CLIP,
-                                               uop_bgn=b_, uop_end=e,
-                                               lp0=th_i, lp1=tw_i,
-                                               dst_f0=tw_i, dst_f1=1,
-                                               src_f0=tw_i, src_f1=1,
-                                               use_imm=True, imm=127))
-                    st = StoreInsn(op=Op.STORE, sram_base=a_base, dram_base=0,
-                                   y_size=1, x_size=th_i * tw_i, x_stride=oh * ow)
-                    st.meta = {"kind": "dw_out", "b0": b, "c0": c,
-                               "y0": ho * th_i, "th": th_i,
-                               "x0": wo * tw_i, "tw": tw_i}
-                    if tname("out"):
-                        st.meta["tensor"] = tname("out")
-                    task.stores.append(st)
-                    tasks.append(task)
+        emit((Uop(a_base, b_base, 0),),
+             lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.ADD,
+                                   uop_bgn=b_, uop_end=e,
+                                   lp0=th_i, lp1=tw_i,
+                                   dst_f0=tw_i, dst_f1=1,
+                                   src_f0=tw_i, src_f1=1))
+        emit((Uop(a_base, a_base, 0),),
+             lambda b_, e: AluInsn(op=Op.ALU, alu_op=AluOp.CLIP,
+                                   uop_bgn=b_, uop_end=e,
+                                   lp0=th_i, lp1=tw_i,
+                                   dst_f0=tw_i, dst_f1=1,
+                                   src_f0=tw_i, src_f1=1,
+                                   use_imm=True, imm=127))
+        st = StoreInsn(op=Op.STORE, sram_base=a_base, dram_base=0,
+                       y_size=1, x_size=th_i * tw_i, x_stride=oh * ow)
+        st.meta = {"kind": "dw_out", "b0": b, "c0": c,
+                   "y0": ho * th_i, "th": th_i,
+                   "x0": wo * tw_i, "tw": tw_i}
+        if tname("out"):
+            st.meta["tensor"] = tname("out")
+        task.stores.append(st)
+        tasks.append(task)
     return Tiling(1, th_o, tw_o, dc, 1)
 
 
 def schedule_add(wl: ConvWorkload, hw: VTAConfig, *,
-                 tensors: Optional[dict] = None) -> Schedule:
+                 tensors: Optional[dict] = None,
+                 vectorize: bool = True) -> Schedule:
     alloc = UopAllocator(hw)
     tasks: list[Task] = []
-    t = emit_add_tasks(wl, hw, alloc, tasks, tensors=tensors)
-    return _finish_schedule(wl, t, hw, alloc, tasks, 1)
+    t = emit_add_tasks(wl, hw, alloc, tasks, tensors=tensors,
+                       n_ctx=2 if vectorize else 1, vectorize=vectorize)
+    return _finish_schedule(wl, t, hw, alloc, tasks, _n_ctx_of(tasks))
 
 
 # ---------------------------------------------------------------------------
@@ -748,29 +895,42 @@ def schedule_add(wl: ConvWorkload, hw: VTAConfig, *,
 def emit_concat_tasks(shapes: list, hw: VTAConfig,
                       alloc: UopAllocator, tasks: list, *,
                       tensors: Optional[list] = None,
-                      out_tensor: Optional[str] = None) -> None:
-    """shapes: per-source (B, C, H, W); sources stack along channels."""
+                      out_tensor: Optional[str] = None,
+                      n_ctx: int = 1) -> None:
+    """shapes: per-source (B, C, H, W); sources stack along channels.
+
+    Pure DMA: with ``n_ctx == 2`` the loads fill alternating acc halves, so
+    tile i+1 loads (compute queue) while tile i stores (store queue); a
+    source whose single row outgrows a half downgrades to one context."""
     BV, BO = hw.batch, hw.block_out
+    if n_ctx > 1 and any(w > hw.acc_depth // n_ctx for (_, _, _, w) in shapes):
+        n_ctx = 1
+    half = hw.acc_depth // n_ctx
     c_off = 0
+    ti = 0
     for si, (b, c, h, w) in enumerate(shapes):
         assert c % BO == 0 and b % BV == 0
         th_i = h
-        while th_i * w > hw.acc_depth and th_i > 1:
+        while th_i * w > half and th_i > 1:
             th_i = _ceil_div(th_i, 2)
+        assert th_i * w <= half, "acc scratchpad too small for concat row"
         th_o = _ceil_div(h, th_i)
         for bb in range(b // BV):
             for cc in range(c // BO):
                 for ho in range(th_o):
-                    task = Task(ctx=0)
+                    ctx = ti % n_ctx
+                    ti += 1
+                    base = ctx * half
+                    task = Task(ctx=ctx)
                     ld = LoadInsn(op=Op.LOAD, buffer=Buffer.ACC,
-                                  sram_base=0, dram_base=0,
+                                  sram_base=base, dram_base=0,
                                   y_size=th_i, x_size=w, x_stride=w)
                     ld.meta = {"kind": "dw_patch", "b0": bb, "c0": cc,
                                "y0": ho * th_i, "x0": 0, "ih": th_i, "iw": w}
                     if tensors:
                         ld.meta["tensor"] = tensors[si]
                     task.computes.append(ld)
-                    st = StoreInsn(op=Op.STORE, sram_base=0, dram_base=0,
+                    st = StoreInsn(op=Op.STORE, sram_base=base, dram_base=0,
                                    y_size=1, x_size=th_i * w, x_stride=h * w)
                     st.meta = {"kind": "dw_out", "b0": bb,
                                "c0": c_off // BO + cc,

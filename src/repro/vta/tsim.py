@@ -36,7 +36,9 @@ class TsimResult:
     busy: dict                      # queue -> [(start, end, kind)]
     counts: dict
     dram_bytes: int
-    stalls: dict = field(default_factory=dict)
+    stalls: dict = field(default_factory=dict)      # token-wait cycles/queue
+    mem_wait: dict = field(default_factory=dict)    # memory-engine backpressure
+                                                    # (issue - ready) per queue
 
     def utilization(self) -> dict:
         out = {}
@@ -53,11 +55,22 @@ class TsimResult:
         return out
 
 
-def _alu_ii(hw: VTAConfig, two_operand: bool) -> int:
+def _alu_ii(hw: VTAConfig, insn: AluInsn) -> int:
+    """Initiation interval of one ALU iteration.
+
+    The acc register file has one read port, so the II is bounded by the
+    reads each iteration needs (``AluInsn.acc_reads``): dst (unless the
+    ``overwrite`` bit write-throughs), src, and a MAC's second source.
+
+      * unpipelined (as published, alu_ii >= 4): every read serializes —
+        alu_ii for one read, +1 per extra read (the old 4/5 split);
+      * pipelined: II = max(alu_ii, reads). Multi-uop macro sweeps latch a
+        MAC's loop-invariant src2 once per uop, so it costs no per-iteration
+        read; write-through ops (overwrite) reach the alu_ii floor.
+    """
     if hw.alu_ii >= 4:                       # unpipelined (as published)
-        return hw.alu_ii + 1 if two_operand else hw.alu_ii
-    # pipelined: II=2 for two operands (one acc read port), II=1 immediate
-    return max(hw.alu_ii, 2) if two_operand else hw.alu_ii
+        return hw.alu_ii + max(0, insn.acc_reads(latched=False) - 1)
+    return max(hw.alu_ii, 1, insn.acc_reads(latched=True))
 
 
 def insn_cycles(insn, hw: VTAConfig) -> int:
@@ -65,7 +78,7 @@ def insn_cycles(insn, hw: VTAConfig) -> int:
     if isinstance(insn, GemmInsn):
         return insn.iterations() * hw.gemm_ii + hw.gemm_depth + DECODE_OVERHEAD
     if isinstance(insn, AluInsn):
-        return insn.iterations() * _alu_ii(hw, insn.two_operand) \
+        return insn.iterations() * _alu_ii(hw, insn) \
             + hw.gemm_depth + DECODE_OVERHEAD
     if isinstance(insn, (LoadInsn, StoreInsn)):
         return CMD_OVERHEAD
@@ -82,6 +95,7 @@ def run_tsim(prog: Program, hw: VTAConfig, *, check_hazards: bool = False) -> Ts
                     ("compute", "store"): deque(), ("store", "compute"): deque()}
     engine_free = 0
     stall_cycles = {q: 0 for q in names}
+    mem_wait = {q: 0 for q in names}
     total_dram = 0
 
     def pops_of(insn, q):
@@ -135,6 +149,7 @@ def run_tsim(prog: Program, hw: VTAConfig, *, check_hazards: bool = False) -> Ts
                     nonloc_bytes = insn_dram_bytes(insn, hw)
                     occ = math.ceil(nonloc_bytes / hw.mem_width_bytes)
                     issue = max(start, engine_free)
+                    mem_wait[q] += issue - start    # engine backpressure only
                     engine_free = issue + occ
                     end = issue + hw.dram_latency + occ + CMD_OVERHEAD
                     total_dram += nonloc_bytes
@@ -161,7 +176,8 @@ def run_tsim(prog: Program, hw: VTAConfig, *, check_hazards: bool = False) -> Ts
                 f"({type(queues[q][idx[q]]).__name__})")
     total = max(qtime.values())
     return TsimResult(total_cycles=total, busy=busy, counts=prog.counts(),
-                      dram_bytes=total_dram, stalls=stall_cycles)
+                      dram_bytes=total_dram, stalls=stall_cycles,
+                      mem_wait=mem_wait)
 
 
 def utilization_ascii(res: TsimResult, width: int = 100) -> str:

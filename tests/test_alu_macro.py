@@ -1,0 +1,246 @@
+"""Vectorized ALU macro-ops: batched multi-uop sweeps, MAC/overwrite forms,
+double-buffered ALU-layer pipelines, uop DRAM dedup, tsim invariants."""
+import numpy as np
+import pytest
+
+from repro.core.dse import make_config
+from repro.core.tps import ConvWorkload
+from repro.vta.compiler import compile_graph
+from repro.vta.fsim import FSim, conv2d_ref, depthwise_ref, pool_ref, post_op_ref
+from repro.vta.graph import Graph
+from repro.vta.isa import (DEFAULT_VTA, AluInsn, AluOp, Op, Uop, VTAConfig,
+                           encode_insn)
+from repro.vta.runtime import UopAllocator, queue_of
+from repro.vta.scheduler import (schedule_add, schedule_depthwise,
+                                 schedule_pool)
+from repro.vta.tsim import run_tsim
+from repro.vta.workloads import Layer, _conv
+
+RNG = np.random.default_rng(11)
+PIPE = make_config()        # the DSE reference config: fully pipelined units
+
+
+# ---------------------------------------------------------------------------
+# fsim bit-exactness of the batched forms
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("hw", [DEFAULT_VTA, PIPE], ids=["default", "pipe"])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_batched_depthwise_bitexact(hw, stride):
+    """MAC macro-op schedule vs numpy, including padded edge tiles."""
+    wl = ConvWorkload("dw", 1, 14, 14, 3, 3, 32, 32, 1, 1, stride, stride,
+                      depthwise=True)
+    sched = schedule_depthwise(wl, hw, post_op="relu_shift")
+    sched.program.validate_encoding()
+    assert sched.program.n_ctx == 2     # double-buffered ALU pipeline
+    macs = [i for i in sched.program.order
+            if isinstance(i, AluInsn) and i.alu_op == AluOp.MAC]
+    assert macs and any(i.uop_end - i.uop_bgn > 1 for i in macs), \
+        "taps must batch into multi-uop MAC sweeps"
+    inp = RNG.integers(-64, 64, (1, 32, 14, 14), dtype=np.int8)
+    w = RNG.integers(-8, 8, (32, 3, 3), dtype=np.int8)
+    out = np.zeros((1, 32, wl.oh, wl.ow), np.int8)
+    FSim(hw, {"inp": inp, "dw_wgt": w, "out": out}).run(sched.program)
+    ref = post_op_ref(depthwise_ref(inp, w, (stride, stride), (1, 1)),
+                      "relu_shift")
+    np.testing.assert_array_equal(out, ref)
+
+
+@pytest.mark.parametrize("mode", ["max", "avg"])
+def test_batched_pool_bitexact(mode):
+    wl = ConvWorkload("p", 1, 14, 14, 3, 3, 16, 16, 1, 1, 2, 2)
+    sched = schedule_pool(wl, PIPE, mode=mode)
+    sched.program.validate_encoding()
+    inp = RNG.integers(-128, 127, (1, 16, 14, 14), dtype=np.int8)
+    out = np.zeros((1, 16, wl.oh, wl.ow), np.int8)
+    FSim(PIPE, {"inp": inp, "out": out}).run(sched.program)
+    ref = np.clip(pool_ref(inp, (3, 3), (2, 2), (1, 1), mode),
+                  -128, 127).astype(np.int8)
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_double_buffered_add_bitexact():
+    wl = ConvWorkload("add", 1, 28, 28, 1, 1, 32, 32, 0, 0, 1, 1)
+    sched = schedule_add(wl, PIPE, tensors={"add_a": "a", "add_b": "b"})
+    sched.program.validate_encoding()
+    assert sched.program.n_ctx == 2
+    a = RNG.integers(-120, 120, (1, 32, 28, 28), dtype=np.int8)
+    b = RNG.integers(-120, 120, (1, 32, 28, 28), dtype=np.int8)
+    out = np.zeros_like(a)
+    FSim(PIPE, {"a": a, "b": b, "out": out}).run(sched.program)
+    ref = np.clip(a.astype(np.int32) + b.astype(np.int32),
+                  -127, 127).astype(np.int8)
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_batched_depthwise_resident_spill_bitexact():
+    """A dw -> pointwise resident chain: the batched depthwise spills
+    on-chip and the consumer conv reads it, end-to-end bit-exact."""
+    hw = DEFAULT_VTA
+    g = Graph(name="chain")
+    g.input("image", (1, 16, 8, 8))
+    g.layer(Layer("depthwise",
+                  ConvWorkload("dw", 1, 8, 8, 3, 3, 16, 16, 1, 1, 1, 1,
+                               depthwise=True), post_op="relu_shift"),
+            "image")
+    g.layer(_conv("pw", 1, 8, 16, 32, 1, 0, 1), "dw")
+    segs = compile_graph(g, hw)
+    assert len(segs) == 1 and segs[0].resident_edges == ("dw->pw",)
+    seg = segs[0]
+    seg.program.validate_encoding()
+    assert any(getattr(i, "on_chip", False) for i in seg.program.order)
+    x = RNG.integers(-32, 32, (1, 16, 8, 8), dtype=np.int8)
+    wdw = RNG.integers(-8, 8, (16, 3, 3), dtype=np.int8)
+    wpw = RNG.integers(-8, 8, (32, 16, 1, 1), dtype=np.int8)
+    out = np.zeros((1, 32, 8, 8), np.int8)
+    FSim(hw, {"image": x, "dw.wgt": wdw, "pw.wgt": wpw, "pw": out}) \
+        .run(seg.program)
+    dw_ref = post_op_ref(depthwise_ref(x, wdw, (1, 1), (1, 1)), "relu_shift")
+    pw_ref = post_op_ref(conv2d_ref(dw_ref, wpw), "clip_shift")
+    np.testing.assert_array_equal(out, pw_ref)
+
+
+# ---------------------------------------------------------------------------
+# tsim invariants: batching never loses to the single-uop legacy forms
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("hw", [DEFAULT_VTA, PIPE], ids=["default", "pipe"])
+def test_batching_never_increases_cycles(hw):
+    cases = [
+        ("dw", lambda v: schedule_depthwise(
+            ConvWorkload("dw", 1, 28, 28, 3, 3, 32, 32, 1, 1, 1, 1,
+                         depthwise=True), hw, vectorize=v)),
+        ("dw_s2", lambda v: schedule_depthwise(
+            ConvWorkload("dw", 1, 28, 28, 3, 3, 64, 64, 1, 1, 2, 2,
+                         depthwise=True), hw, vectorize=v)),
+        ("maxpool", lambda v: schedule_pool(
+            ConvWorkload("p", 1, 56, 56, 3, 3, 64, 64, 1, 1, 2, 2),
+            hw, mode="max", vectorize=v)),
+        ("avgpool", lambda v: schedule_pool(
+            ConvWorkload("p", 1, 7, 7, 7, 7, 64, 64, 0, 0, 7, 7),
+            hw, mode="avg", vectorize=v)),
+        ("add", lambda v: schedule_add(
+            ConvWorkload("a", 1, 28, 28, 1, 1, 64, 64, 0, 0, 1, 1),
+            hw, vectorize=v)),
+    ]
+    for name, mk in cases:
+        batched = run_tsim(mk(True).program, hw)
+        legacy = run_tsim(mk(False).program, hw)
+        assert batched.total_cycles <= legacy.total_cycles, \
+            (name, batched.total_cycles, legacy.total_cycles)
+
+
+def test_alu_layer_loads_stream_through_ld_engine():
+    """Double-buffered ALU layers issue their patch loads on the load queue
+    (vs the compute queue for the legacy forms)."""
+    wl = ConvWorkload("dw", 1, 14, 14, 3, 3, 32, 32, 1, 1, 1, 1,
+                      depthwise=True)
+    for vec, queue in ((True, "load"), (False, "compute")):
+        sched = schedule_depthwise(wl, PIPE, vectorize=vec)
+        patches = [i for i in sched.program.order
+                   if getattr(i, "meta", {}).get("kind") == "dw_patch"]
+        assert patches and all(queue_of(i) == queue for i in patches)
+
+
+def test_mem_wait_split_from_token_stalls():
+    wl = ConvWorkload("dw", 1, 28, 28, 3, 3, 64, 64, 1, 1, 1, 1,
+                      depthwise=True)
+    res = run_tsim(schedule_depthwise(wl, PIPE).program, PIPE)
+    assert set(res.mem_wait) == {"load", "compute", "store"}
+    assert all(v >= 0 for v in res.mem_wait.values())
+    # token stalls and engine backpressure are tracked independently
+    assert res.stalls is not res.mem_wait
+
+
+# ---------------------------------------------------------------------------
+# ISA / runtime mechanics
+# ---------------------------------------------------------------------------
+def test_mac_and_overwrite_semantics():
+    hw = DEFAULT_VTA
+    from repro.vta.runtime import Program
+    prog = Program(hw=hw)
+    dram = {}
+    sim = FSim(hw, dram)
+    sim.uop_mem = np.zeros((0, 3), np.int64)
+    sim.acc[0] = 7          # dst with stale value
+    sim.acc[1] = 3          # src1
+    sim.acc[2] = 5          # src2 (latched)
+    sim.uop[0] = (0, 1, 2)
+    mac = AluInsn(op=Op.ALU, alu_op=AluOp.MAC, uop_bgn=0, uop_end=1,
+                  lp0=1, lp1=1, overwrite=True)
+    sim._alu(mac)
+    assert (sim.acc[0] == 15).all()     # overwrite: dst = src1*src2
+    mac.overwrite = False
+    sim._alu(mac)
+    assert (sim.acc[0] == 30).all()     # accumulate: dst += src1*src2
+    mov = AluInsn(op=Op.ALU, alu_op=AluOp.ADD, uop_bgn=0, uop_end=1,
+                  lp0=1, lp1=1, overwrite=True)
+    sim._alu(mov)
+    assert (sim.acc[0] == 3).all()      # write-through copy
+
+    # encode: overwrite bit packs; MAC src2 outside the uop field raises
+    encode_insn(mac, hw)
+    with pytest.raises(AssertionError):
+        Uop(0, 0, hw.wgt_depth * 4).encode(hw)
+
+
+def test_alu_ii_model():
+    from repro.vta.tsim import _alu_ii
+    unpiped, piped = DEFAULT_VTA, PIPE
+    imm = AluInsn(op=Op.ALU, alu_op=AluOp.SHR, use_imm=True)
+    two = AluInsn(op=Op.ALU, alu_op=AluOp.ADD)
+    mov = AluInsn(op=Op.ALU, alu_op=AluOp.ADD, overwrite=True)
+    mac = AluInsn(op=Op.ALU, alu_op=AluOp.MAC)
+    omac = AluInsn(op=Op.ALU, alu_op=AluOp.MAC, overwrite=True)
+    # unpipelined: serialized reads (published 4/5 behaviour + MAC)
+    assert [_alu_ii(unpiped, i) for i in (imm, two, mov, mac, omac)] == \
+        [4, 5, 4, 6, 5]
+    # pipelined: II = max(alu_ii, acc reads); latched src2 is free
+    assert [_alu_ii(piped, i) for i in (imm, two, mov, mac, omac)] == \
+        [1, 2, 1, 2, 1]
+    # a half-pipelined unit (alu_ii=2) keeps its floor
+    half = VTAConfig(alu_ii=2)
+    assert [_alu_ii(half, i) for i in (imm, two, mov)] == [2, 2, 2]
+
+
+def test_uop_allocator_dram_dedup_across_flushes():
+    hw = VTAConfig(log_uop_buff=5)      # 8-entry uop buffer: fast flushes
+    alloc = UopAllocator(hw)
+    seq_a = tuple(Uop(i, i, 0) for i in range(6))
+    seq_b = tuple(Uop(i + 8, i, 0) for i in range(6))
+    _, ld_a = alloc.place(seq_a)
+    assert ld_a is not None
+    base_a = ld_a.dram_base
+    _, ld_b = alloc.place(seq_b)        # evicts seq_a (flush)
+    assert alloc.flushes == 1
+    _, ld_a2 = alloc.place(seq_a)       # re-placed after the flush...
+    assert ld_a2 is not None and ld_a2.dram_base == base_a
+    assert len(alloc.mem) == 12         # ...but the DRAM image did not grow
+
+
+def test_pool_tile_shrinks_width_for_small_acc():
+    """Wide inputs on small ACC scratchpads shrink tw_i instead of tripping
+    the fits() assert (the emit_depthwise fallback, now on pools too)."""
+    hw = VTAConfig(log_acc_buff=12)     # 64 acc entries
+    wl = ConvWorkload("p", 1, 4, 256, 2, 2, 16, 16, 0, 0, 2, 2)
+    sched = schedule_pool(wl, hw, mode="max")
+    sched.program.validate_encoding()
+    inp = RNG.integers(-128, 127, (1, 16, 4, 256), dtype=np.int8)
+    out = np.zeros((1, 16, wl.oh, wl.ow), np.int8)
+    FSim(hw, {"inp": inp, "out": out}).run(sched.program)
+    ref = np.clip(pool_ref(inp, (2, 2), (2, 2), (0, 0), "max"),
+                  -128, 127).astype(np.int8)
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_patch_loads_do_not_count_padding_as_dram():
+    """Pad rows/cols of dw/pool patches are hardware padding (explicit pad
+    fields), not DRAM traffic — mirroring the conv INP path."""
+    wl = ConvWorkload("dw", 1, 14, 14, 3, 3, 16, 16, 1, 1, 1, 1,
+                      depthwise=True)
+    sched = schedule_depthwise(wl, PIPE)
+    from repro.vta.scheduler import insn_dram_bytes
+    patches = [i for i in sched.program.order
+               if getattr(i, "meta", {}).get("kind") == "dw_patch"]
+    BVBO = PIPE.batch * PIPE.block_out
+    for ld in patches:
+        assert ld.dram_tiles() < ld.meta["ih"] * ld.meta["iw"]
+        assert insn_dram_bytes(ld, PIPE) == ld.dram_tiles() * BVBO
