@@ -32,16 +32,17 @@ _STEMS = {"mobilenet1.0": "mobilenet"}
 
 
 def run(nets=("resnet18", "resnet34", "resnet50", "mobilenet1.0"),
-        verbose: bool = True, cache_dir: Optional[str] = None) -> dict:
+        verbose: bool = True, cache_dir: Optional[str] = None,
+        tune: str = "cached", tune_dir: Optional[str] = None) -> dict:
     cache = ResultCache(cache_dir) if cache_dir else None
     rows = []
     if verbose:
         print("== bench_end2end (paper §IV.E) ==")
     for name in nets:
-        job = DSEJob(network=name)
+        job = DSEJob(network=name, tune=tune)
         rec = cache.get(job.key()) if cache else None
         if rec is None:
-            rec = eval_job(job)
+            rec = eval_job(job, tune_dir)
             if cache:
                 cache.put(job.key(), rec)
         assert rec["feasible"], rec
@@ -55,6 +56,8 @@ def run(nets=("resnet18", "resnet34", "resnet50", "mobilenet1.0"),
                "dram_bytes": rec["dram_bytes"], "macs": rec["macs"],
                "macs_per_cycle": rec["macs"] / max(1, rec["cycles"]),
                "dram_bytes_saved": rec.get("dram_bytes_saved", 0),
+               "tuned_layers": rec.get("tuned_layers", 0),
+               "tuning_cycles_saved": rec.get("tuning_cycles_saved", 0),
                "vta_layers": sum(kinds.values()),
                "cpu_layers": sum(1 for l in rec["layers"] if l["on_cpu"]),
                "vta_layer_kinds": kinds,
@@ -66,6 +69,9 @@ def run(nets=("resnet18", "resnet34", "resnet50", "mobilenet1.0"),
                   f"{row['dram_bytes']/1e6:7.1f}MB DRAM, "
                   f"{row['macs_per_cycle']:6.1f} MACs/cy, layers on VTA: {kinds}"
                   f" (+{row['cpu_layers']} on CPU)")
+            if row["tuned_layers"]:
+                print(f"  {'':14s}  autotuner: {row['tuning_cycles_saved']/1e3:7.1f}k "
+                      f"cycles saved over {row['tuned_layers']} tuned layers")
             if fused_segs:
                 print(f"  {'':14s}  graph compiler: "
                       f"{row['dram_bytes_saved']/1e6:5.2f}MB DRAM avoided in "
@@ -138,9 +144,17 @@ def main(argv=None) -> int:
     ap.add_argument("--tolerance", type=float, default=0.02,
                     help="allowed relative regression (default 2%%)")
     ap.add_argument("--cache-dir", default=None)
+    ap.add_argument("--tune", choices=("off", "cached", "full"),
+                    default="cached", help="autotuner policy")
+    ap.add_argument("--no-autotune", action="store_true",
+                    help="shorthand for --tune off")
+    ap.add_argument("--tune-dir", default="results/autotune",
+                    help="persistent autotune tile cache directory")
     args = ap.parse_args(argv)
     nets = tuple(resolve_network(n) for n in args.nets.split(",") if n)
-    rows = run(nets=nets, cache_dir=args.cache_dir)["rows"]
+    tune = "off" if args.no_autotune else args.tune
+    rows = run(nets=nets, cache_dir=args.cache_dir, tune=tune,
+               tune_dir=args.tune_dir if tune != "off" else None)["rows"]
     if args.json_out:
         for p in write_json(rows, args.json_out):
             print(f"wrote {p}")

@@ -69,6 +69,13 @@ def render(report: dict, *, chart: bool = True) -> str:
                        f"{e['total_dram_bytes_saved']/1e6:.1f}MB DRAM avoided "
                        f"across points ({ref_saved/1e6:.2f}MB on the ref "
                        f"config)")
+        if e.get("total_tuning_cycles_saved"):
+            out.append(f"  autotuner: "
+                       f"{e['total_tuning_cycles_saved']/1e6:.2f}M cycles "
+                       f"saved across points "
+                       f"({e.get('ref_tuning_cycles_saved', 0)/1e3:.0f}k on "
+                       f"the ref config, "
+                       f"{e.get('ref_tuned_layers', 0)} tuned layers)")
     j = report.get("joint") or {}
     if j:
         out.append(f"\n[joint] {j['n_points']} configs feasible on all "

@@ -39,16 +39,23 @@ from typing import Callable, Optional
 from repro.core.area_model import scaled_area
 from repro.vta.isa import VTAConfig
 from repro.vta.network import run_network
-from repro.vta.workloads import (NETWORKS, network_fingerprint, network_graph,
+from repro.vta.workloads import (network_fingerprint, network_graph,
                                  resolve_network)
 
-ENGINE_VERSION = 3       # bump to invalidate every cached point
+ENGINE_VERSION = 4       # bump to invalidate every cached point
                          # v2: graph compiler (residual adds modeled, fused
                          # segments, scratchpad residency)
                          # v3: vectorized ALU macro-ops (MAC/overwrite),
                          # double-buffered ALU-layer pipelines, pad-aware
                          # patch loads, dedup_loads on by default
-CACHE_SCHEMA_VERSION = 2  # on-disk record layout; get() rejects other versions
+                         # v4: tsim-in-the-loop per-layer tile autotuner is
+                         # the default lowering policy (tune=off|cached|full)
+CACHE_SCHEMA_VERSION = 3  # on-disk record layout; get() rejects other versions
+                          # (v3: points carry tuned_layers /
+                          # tuning_cycles_saved; autotune tile records share
+                          # this stamp)
+
+TUNE_MODES = ("off", "cached", "full")
 
 DEFAULT_LOG_BLOCKS = (4, 5, 6)
 DEFAULT_MEM_WIDTHS = (8, 16, 32, 64)
@@ -68,6 +75,8 @@ class DSEPoint:
     network: str = ""
     macs: int = 0
     dram_bytes_saved: int = 0   # DRAM bytes the graph compiler avoided
+    tuned_layers: int = 0       # layers whose tile the autotuner committed
+    tuning_cycles_saved: int = 0  # cycles the autotuner saved vs heuristics
     layers: list = field(default_factory=list)   # per-layer dicts (optional)
     segments: list = field(default_factory=list)  # per-segment dicts (optional)
 
@@ -80,6 +89,8 @@ class DSEPoint:
                 "cycles": self.cycles, "area": self.area,
                 "dram_bytes": self.dram_bytes, "macs": self.macs,
                 "dram_bytes_saved": self.dram_bytes_saved,
+                "tuned_layers": self.tuned_layers,
+                "tuning_cycles_saved": self.tuning_cycles_saved,
                 "mac_shape": self.mac_shape,
                 "config": json.loads(self.hw.to_json()),
                 "layers": self.layers, "segments": self.segments}
@@ -91,6 +102,8 @@ class DSEPoint:
                         dram_bytes=d["dram_bytes"], label=d["label"],
                         network=d.get("network", ""), macs=d.get("macs", 0),
                         dram_bytes_saved=d.get("dram_bytes_saved", 0),
+                        tuned_layers=d.get("tuned_layers", 0),
+                        tuning_cycles_saved=d.get("tuning_cycles_saved", 0),
                         layers=d.get("layers", []),
                         segments=d.get("segments", []))
 
@@ -129,10 +142,12 @@ class DSEJob:
     pipelined: bool = True
     per_layer: bool = True      # include per-layer breakdowns in the record
     residency: bool = True      # graph compiler: fusion + on-chip residency
+    tune: str = "cached"        # autotuner policy: off | cached | full
 
     def __post_init__(self):
         # canonicalize aliases so key() and evaluation always agree
         object.__setattr__(self, "network", resolve_network(self.network))
+        assert self.tune in TUNE_MODES, self.tune
 
     def config(self) -> VTAConfig:
         return make_config(self.log_block, self.mem_width, self.spad_scale,
@@ -148,7 +163,11 @@ class DSEJob:
         return f"{self.network}:{self.config_label}"
 
     def key(self) -> str:
-        """Content address: engine version + config + workload fingerprint."""
+        """Content address: engine version + config + workload fingerprint.
+
+        ``tune`` enters as on/off only: "cached" and "full" run the same
+        deterministic search, so their points are interchangeable.
+        """
         ident = {"v": ENGINE_VERSION,
                  "config": json.loads(self.config().to_json()),
                  "network": self.network,
@@ -156,7 +175,8 @@ class DSEJob:
                                                 batch=1 << self.batch_log),
                  "pipelined": self.pipelined,
                  "per_layer": self.per_layer,
-                 "residency": self.residency}
+                 "residency": self.residency,
+                 "autotune": self.tune != "off"}
         blob = json.dumps(ident, sort_keys=True).encode()
         return hashlib.sha256(blob).hexdigest()
 
@@ -164,10 +184,11 @@ class DSEJob:
 def make_jobs(networks, *, log_blocks=DEFAULT_LOG_BLOCKS,
               mem_widths=DEFAULT_MEM_WIDTHS, spad_scales=DEFAULT_SPAD_SCALES,
               batch_logs=(0,), pipelined: bool = True,
-              per_layer: bool = True, residency: bool = True) -> list[DSEJob]:
+              per_layer: bool = True, residency: bool = True,
+              tune: str = "cached") -> list[DSEJob]:
     return [DSEJob(network=n, log_block=lb, mem_width=mw, spad_scale=ss,
                    batch_log=bl, pipelined=pipelined, per_layer=per_layer,
-                   residency=residency)
+                   residency=residency, tune=tune)
             for n in networks for lb in log_blocks for mw in mem_widths
             for ss in spad_scales for bl in batch_logs]
 
@@ -212,7 +233,9 @@ class ResultCache:
 
     def put(self, key: str, record: dict) -> None:
         record = {**record, "schema": CACHE_SCHEMA_VERSION}
-        tmp = self.path(key) + ".tmp"
+        # pid-unique tmp name: concurrent pool workers may race on one key
+        # (identical content); a shared tmp path could vanish mid-replace
+        tmp = f"{self.path(key)}.{os.getpid()}.tmp"
         with open(tmp, "w") as f:
             json.dump(record, f, indent=1)
         os.replace(tmp, self.path(key))
@@ -225,9 +248,22 @@ class ResultCache:
 # Job evaluation (runs inside pool workers)
 # ---------------------------------------------------------------------------
 _LAYER_CACHE: dict = {}     # per-process: repeated shapes share tsim runs
+_TUNERS: dict = {}          # per-process: (mode, dir, knobs) -> LayerTuner
 
 
-def eval_job(job: DSEJob) -> dict:
+def _tuner_for(job: DSEJob, tune_dir: Optional[str]):
+    """Per-process LayerTuner (memo of searched tiles survives across jobs;
+    the persistent cache at ``tune_dir`` survives across runs)."""
+    if job.tune == "off":
+        return None
+    from repro.vta.autotune import make_tuner
+    key = (job.tune, tune_dir)
+    if key not in _TUNERS:
+        _TUNERS[key] = make_tuner(job.tune, tune_dir)
+    return _TUNERS[key]
+
+
+def eval_job(job: DSEJob, tune_dir: Optional[str] = None) -> dict:
     """Evaluate one job to its cache record (feasible point or reason)."""
     hw = job.config()
     base = {"network": job.network, "label": job.config_label,
@@ -241,7 +277,8 @@ def eval_job(job: DSEJob) -> dict:
         # for every sweep point (it needs a double-buffered tiling to bite)
         rep = run_network(job.network, graph, hw, layer_cache=_LAYER_CACHE,
                           dedup_loads=True,
-                          fusion=job.residency, residency=job.residency)
+                          fusion=job.residency, residency=job.residency,
+                          tuner=_tuner_for(job, tune_dir))
     except (AssertionError, RuntimeError, ValueError) as e:
         # infeasible point (sparse design space, §V)
         return {**base, "feasible": False,
@@ -251,13 +288,15 @@ def eval_job(job: DSEJob) -> dict:
                   dram_bytes=rep.total_dram_bytes, label=job.config_label,
                   network=job.network, macs=rep.total_macs,
                   dram_bytes_saved=rep.dram_bytes_saved,
+                  tuned_layers=rep.tuned_layers,
+                  tuning_cycles_saved=rep.tuning_cycles_saved,
                   layers=rep.per_layer() if job.per_layer else [],
                   segments=rep.per_segment() if job.per_layer else [])
     return pt.to_dict()
 
 
-def _pool_eval(job: DSEJob) -> dict:
-    return eval_job(job)
+def _pool_eval(job: DSEJob, tune_dir: Optional[str] = None) -> dict:
+    return eval_job(job, tune_dir)
 
 
 # ---------------------------------------------------------------------------
@@ -315,7 +354,9 @@ class SweepResult:
                                 for p in self.frontier(net)],
                      "total_dram_bytes": sum(p.dram_bytes for p in pts),
                      "total_dram_bytes_saved": sum(p.dram_bytes_saved
-                                                   for p in pts)}
+                                                   for p in pts),
+                     "total_tuning_cycles_saved": sum(p.tuning_cycles_saved
+                                                      for p in pts)}
             if pts:
                 ref = _reference_point(pts)
                 best = min(pts, key=lambda p: p.cycles)
@@ -324,6 +365,8 @@ class SweepResult:
                     best=(best.label, best.area, best.cycles),
                     ref_dram_bytes=ref.dram_bytes,
                     ref_dram_bytes_saved=ref.dram_bytes_saved,
+                    ref_tuned_layers=ref.tuned_layers,
+                    ref_tuning_cycles_saved=ref.tuning_cycles_saved,
                     cycle_gain_best=ref.cycles / best.cycles,
                     area_cost_best=best.area / ref.area,
                     area_span=max(p.area for p in pts) / min(p.area for p in pts),
@@ -356,25 +399,30 @@ def run_sweep(networks, *, out_dir: Optional[str] = None,
               spad_scales=DEFAULT_SPAD_SCALES, batch_logs=(0,),
               pipelined: bool = True, workers: Optional[int] = None,
               per_layer: bool = True, use_cache: bool = True,
-              residency: bool = True,
+              residency: bool = True, tune: str = "cached",
               progress: Optional[Callable[[str], None]] = None) -> SweepResult:
     """Run the full (config grid x networks) sweep across a process pool.
 
-    ``out_dir`` holds the content-addressed cache at ``<out_dir>/cache`` and
-    the combined ``report.json``; omit it for a purely in-memory sweep.
-    ``residency=False`` turns the graph compiler off (per-layer baseline).
+    ``out_dir`` holds the content-addressed cache at ``<out_dir>/cache``,
+    the autotuner's tile cache at ``<out_dir>/autotune`` and the combined
+    ``report.json``; omit it for a purely in-memory sweep.
+    ``residency=False`` turns the graph compiler off (per-layer baseline);
+    ``tune`` sets the autotuner policy (off | cached | full).
     """
     t0 = time.time()
     jobs = make_jobs(networks, log_blocks=log_blocks, mem_widths=mem_widths,
                      spad_scales=spad_scales, batch_logs=batch_logs,
                      pipelined=pipelined, per_layer=per_layer,
-                     residency=residency)
+                     residency=residency, tune=tune)
     keys = {job: job.key() for job in jobs}
     cache = None
+    tune_dir = None
     if out_dir is not None:
         os.makedirs(out_dir, exist_ok=True)
         if use_cache:
             cache = ResultCache(os.path.join(out_dir, "cache"))
+        if tune != "off":
+            tune_dir = os.path.join(out_dir, "autotune")
 
     records: dict[str, dict] = {}
     todo: list[DSEJob] = []
@@ -398,12 +446,13 @@ def run_sweep(networks, *, out_dir: Optional[str] = None,
 
         if workers == 1 or len(todo) == 1:
             for job in todo:
-                rec = _pool_eval(job)
+                rec = _pool_eval(job, tune_dir)
                 records[keys[job]] = rec
                 note(keys[job], rec)
         else:
             with ProcessPoolExecutor(max_workers=workers) as pool:
-                futs = {pool.submit(_pool_eval, job): job for job in todo}
+                futs = {pool.submit(_pool_eval, job, tune_dir): job
+                        for job in todo}
                 pending = set(futs)
                 while pending:
                     done, pending = wait(pending, return_when=FIRST_COMPLETED)
@@ -509,6 +558,11 @@ def _print_report(rep: dict) -> None:
             print(f"     graph compiler: {e['total_dram_bytes_saved']/1e6:.1f}MB "
                   f"DRAM avoided across points "
                   f"(ref config {e.get('ref_dram_bytes_saved', 0)/1e6:.2f}MB)")
+        if e.get("total_tuning_cycles_saved"):
+            print(f"     autotuner: {e['total_tuning_cycles_saved']/1e6:.2f}M "
+                  f"cycles saved across points (ref config "
+                  f"{e.get('ref_tuning_cycles_saved', 0)/1e3:.0f}k over "
+                  f"{e.get('ref_tuned_layers', 0)} tuned layers)")
     j = rep.get("joint") or {}
     if j:
         print(f"  -- joint ({len(rep['networks'])} networks, "
@@ -541,6 +595,11 @@ def main(argv=None) -> int:
     ap.add_argument("--no-residency", action="store_true",
                     help="disable the graph compiler (fusion + on-chip "
                          "residency): per-layer baseline numbers")
+    ap.add_argument("--tune", choices=TUNE_MODES, default="cached",
+                    help="per-layer tile autotuner policy (default: cached "
+                         "— reuse tiles from <out>/autotune, search misses)")
+    ap.add_argument("--no-autotune", action="store_true",
+                    help="shorthand for --tune off (heuristic tilings only)")
     args = ap.parse_args(argv)
 
     ints = lambda s: tuple(int(x) for x in s.split(",") if x)
@@ -560,6 +619,7 @@ def main(argv=None) -> int:
         spad_scales=ints(args.spad_scales), batch_logs=ints(args.batch_logs),
         workers=args.workers, per_layer=not args.no_per_layer,
         use_cache=not args.no_cache, residency=not args.no_residency,
+        tune="off" if args.no_autotune else args.tune,
         progress=lambda line: print(line, flush=True))
     _print_report(res.report())
     if args.out:

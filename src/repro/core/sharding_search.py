@@ -1,6 +1,3 @@
-import os
-if "--xla" not in str(os.environ.get("XLA_FLAGS", "")):
-    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 """SPS — Sharding Parameter Search (beyond-paper, TPS lifted to the mesh).
 
 The paper's TPS formulation:  min DRAM bytes  s.t. scratchpad capacities.
@@ -19,10 +16,16 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 from dataclasses import dataclass
 from typing import Optional
+
+# must be staged before the (lazy, in-function) jax imports below run
+if "--xla" not in str(os.environ.get("XLA_FLAGS", "")):
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
 
 HBM_CAP_GIB = 16.0   # v5e-class
 
@@ -59,7 +62,7 @@ def evaluate(arch: str, shape: str, overrides: dict, name: str) -> SPSResult:
     from repro.launch.mesh import make_production_mesh
     from repro.launch.specs import input_specs
     from repro.models.registry import build_model
-    from repro.sharding.logical import DEFAULT_RULES, LogicalRules, use_rules
+    from repro.sharding.logical import LogicalRules, use_rules
     from repro.serve.engine import make_decode_step, make_prefill_step
     from repro.train.optimizer import AdamWConfig
     from repro.train.step import (abstract_opt_state, abstract_params,

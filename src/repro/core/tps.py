@@ -18,8 +18,7 @@ is vectorized over the full candidate grid with numpy.
 """
 from __future__ import annotations
 
-import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
@@ -180,6 +179,24 @@ def tps_search(wl: ConvWorkload, hw, *, require_db: bool = False,
         if best is None or cand.cost_bytes < best.cost_bytes:
             best = cand
     return TPSResult(best, best is not None, n * len(vts), searched)
+
+
+def heuristic_conv_tiling(wl: ConvWorkload, hw, *,
+                          prefer_db: bool = True) -> Tiling:
+    """The stack's default one-shot tiling policy: the traffic-minimal
+    double-buffered tiling when one exists (as upstream TVM/VTA always
+    schedules), else the traffic-minimal serial one.
+
+    Shared by the per-layer scheduler (vta/network.py) and the autotuner
+    (vta/autotune.py) — the autotuner always includes this tiling in its
+    candidate set, which is what makes tuning never-worse by construction.
+    """
+    res = tps_search(wl, hw, require_db=True) if prefer_db else None
+    if res is None or not res.feasible:
+        res = tps_search(wl, hw)
+    if not res.feasible:
+        raise RuntimeError(f"no feasible tiling for {wl.name} on {hw}")
+    return res.tiling
 
 
 def legacy_db_tiling(wl: ConvWorkload, hw) -> Optional[Tiling]:

@@ -10,7 +10,6 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import alu as _alu
 from repro.kernels import depthwise as _dw

@@ -22,7 +22,6 @@ Usage:
   python -m repro.launch.dryrun --list-cells
 """
 import argparse
-import dataclasses
 import json
 import sys
 import time
@@ -75,7 +74,6 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              depth: str = "full", save_hlo: str | None = None,
              verbose: bool = True, overrides: dict | None = None) -> dict:
     import jax
-    import jax.numpy as jnp
     from repro.analysis.hlo import parse_collectives
     from repro.launch.mesh import make_production_mesh
     from repro.launch.specs import input_specs

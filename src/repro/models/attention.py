@@ -11,7 +11,6 @@ Design notes (see DESIGN.md §6):
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -185,7 +184,6 @@ def attention_decode(p, x, cache: dict, pos: jax.Array, cfg: ModelConfig,
     per the assigned decode_32k / long_500k shapes): new K/V overwrite the slot
     at `pos % L` (ring buffer for local layers).
     """
-    B = x.shape[0]
     q, k, v = _project_qkv(p, x, cfg, sin, cos)
     L = cache["k"].shape[1]
     slot = (pos % L).astype(jnp.int32)

@@ -12,7 +12,6 @@ All functions are pure; params are nested dicts materialized from Spec trees
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

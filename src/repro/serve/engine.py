@@ -7,7 +7,6 @@ keep steady-state memory flat.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -18,12 +18,10 @@ import json
 import os
 import shutil
 import threading
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import numpy as np
-
-from repro.utils.tree import flatten_dict
 
 _SEP = "__"
 

@@ -22,7 +22,6 @@ import os
 import statistics
 import time
 from dataclasses import dataclass, field
-from typing import Optional
 
 import jax
 

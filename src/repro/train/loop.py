@@ -7,7 +7,7 @@ difference is the rules context + per-host data sharding.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import jax

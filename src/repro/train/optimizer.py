@@ -5,9 +5,7 @@ dry-run's memory analysis covers the full training footprint.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,17 +1,15 @@
 """Training / serving step factories with logical-sharding-aware jit."""
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
-from repro.models.registry import Model, build_model
+from repro.models.registry import Model
 from repro.models.layers import abstract_tree
 from repro.sharding.logical import LogicalRules, get_rules
-from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.train.optimizer import AdamWConfig, adamw_update
 
 
 def make_train_step(model: Model, opt_cfg: AdamWConfig,

@@ -62,6 +62,7 @@ class Segment:
     fused_adds: tuple = ()               # add-node names folded into convs
     resident_edges: tuple = ()           # "producer->consumer" on-chip edges
     dram_bytes: dict = field(default_factory=dict)
+    head_tune: Optional[dict] = None     # autotuned fused-head tile info
 
     @property
     def multi(self) -> bool:
@@ -186,17 +187,22 @@ def _fused_tiling(wl: ConvWorkload, hw: VTAConfig, *,
 # ---------------------------------------------------------------------------
 def _build_segment(chain: list, fused_add: Optional[Node], graph: Graph,
                    hw: VTAConfig, *, prefer_db: bool,
-                   dedup_loads: bool) -> Segment:
+                   dedup_loads: bool, tuner=None) -> Segment:
     """Lower a chain (+ optional trailing fused add) into one Program.
 
     Raises AssertionError when any member does not fit — the caller treats
-    that as an infeasible plan and falls back.
+    that as an infeasible plan and falls back. With a ``tuner``
+    (vta/autotune.LayerTuner), a fusion-only head's tiling is searched with
+    tsim on the actual fused program instead of taking ``_fused_tiling``'s
+    analytic answer; the analytic answer stays in the candidate set, so the
+    tuned segment is never slower than the untuned one.
     """
     alloc = UopAllocator(hw)
     tasks: list = []
     liveness = ResidencyAllocator(hw.inp_depth)
     bases: dict = {}                 # producer node name -> resident base
     resident: list = []
+    head_tune: Optional[dict] = None
     n_ctx = 1
     for i, node in enumerate(chain):
         layer = node.layer
@@ -231,8 +237,19 @@ def _build_segment(chain: list, fused_add: Optional[Node], graph: Graph,
                 t = _untiled_tiling(wl, hw, inp_reserve=reserve,
                                     fused=fuse is not None, bias=layer.bias)
             else:               # fusion-only segment head
-                t = _fused_tiling(wl, hw, prefer_db=prefer_db) \
-                    if fuse is not None else None
+                t = None
+                if fuse is not None:
+                    if tuner is not None:
+                        plan = tuner.tune_fused_conv(
+                            wl, hw, post_op=layer.post_op, bias=layer.bias,
+                            prefer_db=prefer_db, dedup_loads=dedup_loads,
+                            skip_name=skip_name, tensors=tensors)
+                        if plan is not None:
+                            t = plan.tile
+                            head_tune = {"chosen_tile": plan.tile_dict(),
+                                         "tuning_gain": plan.tuning_gain}
+                    if t is None:
+                        t = _fused_tiling(wl, hw, prefer_db=prefer_db)
                 if t is None and fuse is None:
                     res = tps_search(wl, hw, require_db=True) if prefer_db \
                         else None
@@ -270,7 +287,8 @@ def _build_segment(chain: list, fused_add: Optional[Node], graph: Graph,
     return Segment(nodes=nodes, program=prog, n_ctx=n_ctx,
                    fused_adds=(fused_add.name,) if fused_add is not None else (),
                    resident_edges=tuple(resident),
-                   dram_bytes=program_dram_bytes(prog, hw))
+                   dram_bytes=program_dram_bytes(prog, hw),
+                   head_tune=head_tune)
 
 
 def _build_concat(node: Node, graph: Graph, hw: VTAConfig) -> Segment:
@@ -344,10 +362,12 @@ def _fused_next(consumers: dict, comp: list, j: int) -> Optional[Node]:
 
 def compile_graph(graph: Graph, hw: VTAConfig, *, prefer_db: bool = True,
                   dedup_loads: bool = False, fusion: bool = True,
-                  residency: bool = True) -> list:
+                  residency: bool = True, tuner=None) -> list:
     """Partition ``graph`` into Segments (topo order). Nodes that join no
     feasible fused/resident plan become single-node fallback segments —
-    byte-for-byte today's per-layer path."""
+    byte-for-byte today's per-layer path. ``tuner`` tsim-searches fused-head
+    tilings (see ``_build_segment``); single-node fallbacks are tuned later,
+    on the per-layer path in ``run_network``."""
     graph.validate()
     consumers = graph.consumers()
     comp = graph.compute_nodes()
@@ -385,7 +405,7 @@ def compile_graph(graph: Graph, hw: VTAConfig, *, prefer_db: bool = True,
             try:
                 seg = _build_segment(cand_chain, cand_fused, graph, hw,
                                      prefer_db=prefer_db,
-                                     dedup_loads=dedup_loads)
+                                     dedup_loads=dedup_loads, tuner=tuner)
                 break
             except AssertionError:
                 seg = None

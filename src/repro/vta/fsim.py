@@ -29,7 +29,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.vta.isa import (AluInsn, AluOp, Buffer, GemmInsn, LoadInsn, Op,
+from repro.vta.isa import (AluInsn, AluOp, Buffer, GemmInsn, LoadInsn,
                            StoreInsn, VTAConfig)
 from repro.vta.runtime import Program
 

@@ -18,12 +18,12 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 from typing import Optional, Union
 
-from repro.core.tps import ConvWorkload, Tiling, tps_search
+from repro.core.tps import Tiling, heuristic_conv_tiling
 from repro.vta.graph import Graph, Node
 from repro.vta.isa import VTAConfig
 from repro.vta.scheduler import (Schedule, schedule_add, schedule_conv,
                                  schedule_depthwise, schedule_pool)
-from repro.vta.tsim import TsimResult, run_tsim
+from repro.vta.tsim import run_tsim
 from repro.vta.workloads import Layer, pad_for_blocking
 
 
@@ -41,12 +41,15 @@ class LayerReport:
     bytes_by_buffer: dict = field(default_factory=dict)
     segment: int = -1            # index into NetworkReport.segments
     fused: bool = False          # folded into the segment head's program
+    chosen_tile: Optional[dict] = None   # autotuner's committed tile
+    tuning_gain: int = 0         # cycles saved vs the heuristic tiling
 
     def to_dict(self) -> dict:
         return {"name": self.name, "kind": self.kind, "cycles": self.cycles,
                 "dram_bytes": self.dram_bytes, "macs": self.macs,
                 "on_cpu": self.on_cpu, "segment": self.segment,
-                "fused": self.fused}
+                "fused": self.fused, "chosen_tile": self.chosen_tile,
+                "tuning_gain": self.tuning_gain}
 
 
 @dataclass
@@ -100,6 +103,14 @@ class NetworkReport:
     def dram_bytes_saved(self) -> int:
         return sum(s.dram_bytes_saved for s in self.segments)
 
+    @property
+    def tuning_cycles_saved(self) -> int:
+        return sum(l.tuning_gain for l in self.layers)
+
+    @property
+    def tuned_layers(self) -> int:
+        return sum(1 for l in self.layers if l.chosen_tile is not None)
+
     def summary(self) -> dict:
         return {"network": self.name, "cycles": self.total_cycles,
                 "dram_bytes": self.total_dram_bytes, "macs": self.total_macs,
@@ -108,7 +119,9 @@ class NetworkReport:
                 "cpu_layers": sum(1 for l in self.layers if l.on_cpu),
                 "dram_bytes_saved": self.dram_bytes_saved,
                 "n_segments": len(self.segments),
-                "fused_segments": sum(1 for s in self.segments if s.multi)}
+                "fused_segments": sum(1 for s in self.segments if s.multi),
+                "tuned_layers": self.tuned_layers,
+                "tuning_cycles_saved": self.tuning_cycles_saved}
 
     def per_layer(self) -> list[dict]:
         return [l.to_dict() for l in self.layers]
@@ -117,39 +130,62 @@ class NetworkReport:
         return [s.to_dict() for s in self.segments]
 
 
+def plan_layer_tiles(layer: Layer, hw: VTAConfig, tuner, *,
+                     prefer_db: bool = True, dedup_loads: bool = False):
+    """Autotuner plan for one layer, or None (untuned kind / no tuner).
+
+    Kind gating lives in ``tuner.plan`` (autotune.TUNABLE_KINDS) — one
+    source of truth for which layer kinds are searchable.
+    """
+    if tuner is None:
+        return None
+    wl = pad_for_blocking(layer.wl, hw)
+    return tuner.plan(layer.kind, wl, hw, post_op=layer.post_op,
+                      bias=layer.bias, prefer_db=prefer_db,
+                      dedup_loads=dedup_loads)
+
+
 def schedule_layer(layer: Layer, hw: VTAConfig, *, prefer_db: bool = True,
                    dedup_loads: bool = False,
-                   tiling_fn=None) -> Optional[Schedule]:
+                   tiling_fn=None, tuner=None,
+                   plan=None) -> Optional[Schedule]:
+    """Lower one layer. ``plan`` (a precomputed TuneResult from
+    ``plan_layer_tiles``) takes precedence; else ``tuner`` computes one."""
     wl = pad_for_blocking(layer.wl, hw)
+    if plan is None and tiling_fn is None:
+        plan = plan_layer_tiles(layer, hw, tuner, prefer_db=prefer_db,
+                                dedup_loads=dedup_loads)
     if layer.kind in ("conv", "dense"):
         tiling = tiling_fn(wl, hw) if tiling_fn is not None else None
+        if tiling is None and plan is not None:
+            tiling = plan.tile
         if tiling is None:
-            res = tps_search(wl, hw, require_db=True) if prefer_db else None
-            if res is None or not res.feasible:
-                res = tps_search(wl, hw)
-            if not res.feasible:
-                raise RuntimeError(f"no feasible tiling for {wl.name} on {hw}")
-            tiling = res.tiling
+            tiling = heuristic_conv_tiling(wl, hw, prefer_db=prefer_db)
         return schedule_conv(wl, tiling, hw, post_op=layer.post_op,
                              dedup_loads=dedup_loads, bias=layer.bias)
+    alu_tile = tuple(plan.tile) if plan is not None else None
     if layer.kind == "depthwise":
-        return schedule_depthwise(wl, hw, post_op=layer.post_op)
+        return schedule_depthwise(wl, hw, post_op=layer.post_op,
+                                  tile=alu_tile)
     if layer.kind in ("maxpool", "avgpool"):
-        return schedule_pool(wl, hw, mode=layer.kind[:3])
+        return schedule_pool(wl, hw, mode=layer.kind[:3], tile=alu_tile)
     if layer.kind == "add":
         return schedule_add(wl, hw)
     raise ValueError(layer.kind)
 
 
 def layer_key(layer: Layer, hw: VTAConfig, *, prefer_db: bool = True,
-              dedup_loads: bool = False):
+              dedup_loads: bool = False, tuner=None):
     """Hashable identity of a (layer shape, schedule knobs, hw) evaluation.
 
     The layer *name* is excluded: repeated shapes inside a network (and across
-    networks in one sweep) share one schedule + tsim run.
+    networks in one sweep) share one schedule + tsim run. The autotuner's
+    ``tag`` (search-space knobs) joins the key — tuned and untuned
+    evaluations of the same shape must never collide in a shared cache.
     """
     return (layer.kind, replace(layer.wl, name=""), layer.post_op, layer.bias,
-            hw, prefer_db, dedup_loads)
+            hw, prefer_db, dedup_loads,
+            tuner.tag if tuner is not None else None)
 
 
 def _layer_macs(layer: Layer) -> int:
@@ -158,40 +194,55 @@ def _layer_macs(layer: Layer) -> int:
 
 
 def _eval_single(layer: Layer, hw: VTAConfig, *, prefer_db, dedup_loads,
-                 validate_encoding, tiling_fn, layer_cache) -> tuple:
-    """(cycles, dram_bytes, tiling, counts, util, bytes_by_buffer), cached."""
+                 validate_encoding, tiling_fn, layer_cache,
+                 tuner=None) -> tuple:
+    """(cycles, dram_bytes, tiling, counts, util, bytes_by_buffer,
+    tune_info), cached. ``tune_info`` is None on the untuned path, else
+    {"chosen_tile", "tuning_gain"} from the autotuner's committed plan."""
     key = None
     if layer_cache is not None and tiling_fn is None:
         key = layer_key(layer, hw, prefer_db=prefer_db,
-                        dedup_loads=dedup_loads)
+                        dedup_loads=dedup_loads, tuner=tuner)
         hit = layer_cache.get(key)
         if hit is not None:
             return hit
+    plan = None
+    if tiling_fn is None and tuner is not None:
+        plan = plan_layer_tiles(layer, hw, tuner, prefer_db=prefer_db,
+                                dedup_loads=dedup_loads)
     sched = schedule_layer(layer, hw, prefer_db=prefer_db,
-                           dedup_loads=dedup_loads, tiling_fn=tiling_fn)
+                           dedup_loads=dedup_loads, tiling_fn=tiling_fn,
+                           plan=plan)
+    tune_info = None
+    if plan is not None:
+        tune_info = {"chosen_tile": plan.tile_dict(),
+                     "tuning_gain": plan.tuning_gain}
     if validate_encoding:
         sched.program.validate_encoding()
     ts = run_tsim(sched.program, hw)
     val = (ts.total_cycles, ts.dram_bytes, sched.tiling, ts.counts,
-           ts.utilization(), dict(sched.dram_bytes))
+           ts.utilization(), dict(sched.dram_bytes), tune_info)
     if key is not None:
         layer_cache[key] = val
     return val
 
 
-def _segment_key(seg, hw: VTAConfig, prefer_db: bool, dedup_loads: bool):
+def _segment_key(seg, hw: VTAConfig, prefer_db: bool, dedup_loads: bool,
+                 tuner=None):
     """Segment identity for the cache: the plan is a deterministic function
-    of member shapes + hw + knobs, so member identities suffice. Segments
-    with layer-less members (concat) are not cached."""
+    of member shapes + hw + knobs (including the autotuner's search knobs —
+    tuned fused heads change the program), so member identities suffice.
+    Segments with layer-less members (concat) are not cached."""
     if any(n.layer is None for n in seg.nodes):
         return None
     members = tuple((n.kind, replace(n.layer.wl, name=""), n.layer.post_op,
                      n.layer.bias) for n in seg.nodes)
-    return ("seg", members, hw, prefer_db, dedup_loads)
+    return ("seg", members, hw, prefer_db, dedup_loads,
+            tuner.tag if tuner is not None else None)
 
 
 def _as_segments(layers, hw: VTAConfig, *, prefer_db, dedup_loads, fusion,
-                 residency, tiling_fn):
+                 residency, tiling_fn, tuner=None):
     """Normalize input (Graph or list[Layer]) to a list of Segments."""
     from repro.vta.compiler import Segment, compile_graph
     if isinstance(layers, Graph):
@@ -201,7 +252,8 @@ def _as_segments(layers, hw: VTAConfig, *, prefer_db, dedup_loads, fusion,
         return compile_graph(layers, hw, prefer_db=prefer_db,
                              dedup_loads=dedup_loads,
                              fusion=fusion and opt,
-                             residency=residency and opt)
+                             residency=residency and opt,
+                             tuner=tuner if opt else None)
     nodes = [Node(name=l.wl.name, kind=l.kind,
                   shape=(l.wl.b, l.wl.fo, l.wl.oh, l.wl.ow), layer=l)
              for l in layers]
@@ -212,19 +264,22 @@ def run_network(name: str, layers: Union[Graph, list], hw: VTAConfig, *,
                 prefer_db: bool = True, dedup_loads: bool = False,
                 validate_encoding: bool = False,
                 tiling_fn=None, layer_cache: Optional[dict] = None,
-                fusion: bool = True, residency: bool = True) -> NetworkReport:
+                fusion: bool = True, residency: bool = True,
+                tuner=None) -> NetworkReport:
     """Compile + tsim a network. ``layers`` may be a Graph (graph compiler:
     fused segments, scratchpad residency) or a list of Layers (strict
     per-layer path). With ``layer_cache`` (any mutable mapping), identical
     layer shapes — and identical fused segments — reuse prior tsim results;
-    repeat blocks dominate deep ResNets."""
+    repeat blocks dominate deep ResNets. ``tuner`` (vta/autotune.LayerTuner)
+    replaces the heuristic tilings with tsim-searched ones per layer."""
     report = NetworkReport(name=name, hw=hw)
     segments = _as_segments(layers, hw, prefer_db=prefer_db,
                             dedup_loads=dedup_loads, fusion=fusion,
-                            residency=residency, tiling_fn=tiling_fn)
+                            residency=residency, tiling_fn=tiling_fn,
+                            tuner=tuner)
     eval_kw = dict(prefer_db=prefer_db, dedup_loads=dedup_loads,
                    validate_encoding=validate_encoding, tiling_fn=tiling_fn,
-                   layer_cache=layer_cache)
+                   layer_cache=layer_cache, tuner=tuner)
     def emit_single(node, si):
         layer = node.layer
         sr = SegmentReport(index=si, layers=[layer.wl.name])
@@ -233,7 +288,11 @@ def run_network(name: str, layers: Union[Graph, list], hw: VTAConfig, *,
                          segment=si)
         if not node.on_cpu:
             (lr.cycles, lr.dram_bytes, lr.tiling, lr.counts, lr.util,
-             lr.bytes_by_buffer) = _eval_single(layer, hw, **eval_kw)
+             lr.bytes_by_buffer, tune_info) = _eval_single(layer, hw,
+                                                           **eval_kw)
+            if tune_info is not None:
+                lr.chosen_tile = tune_info["chosen_tile"]
+                lr.tuning_gain = tune_info["tuning_gain"]
             sr.cycles = sr.baseline_cycles = lr.cycles
             sr.dram_bytes = sr.baseline_dram_bytes = lr.dram_bytes
         report.layers.append(lr)
@@ -248,7 +307,7 @@ def run_network(name: str, layers: Union[Graph, list], hw: VTAConfig, *,
         # compiled segment: one program, tsim'd as a whole (cached)
         key = None
         if layer_cache is not None and tiling_fn is None:
-            key = _segment_key(seg, hw, prefer_db, dedup_loads)
+            key = _segment_key(seg, hw, prefer_db, dedup_loads, tuner)
         hit = layer_cache.get(key) if key is not None else None
         if hit is not None:
             seg_cycles, seg_dram, counts, util, onchip = hit
@@ -289,6 +348,9 @@ def run_network(name: str, layers: Union[Graph, list], hw: VTAConfig, *,
             if mi == 0:     # segment totals attributed to the head
                 lr.cycles, lr.dram_bytes = seg_cycles, seg_dram
                 lr.counts, lr.util = counts, util
+                if seg.head_tune is not None:
+                    lr.chosen_tile = seg.head_tune["chosen_tile"]
+                    lr.tuning_gain = seg.head_tune["tuning_gain"]
             report.layers.append(lr)
         report.segments.append(sr)
     return report

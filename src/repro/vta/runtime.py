@@ -15,10 +15,8 @@ tagged with a virtual-thread context); the runtime:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
-
 from repro.vta.isa import (AluInsn, Buffer, FinishInsn, GemmInsn, Insn,
-                           LoadInsn, Op, StoreInsn, Uop, VTAConfig, encode_insn)
+                           LoadInsn, Op, StoreInsn, VTAConfig, encode_insn)
 
 
 @dataclass

@@ -475,7 +475,8 @@ def emit_depthwise_tasks(wl: ConvWorkload, hw: VTAConfig,
                          post_op: str = "relu_shift",
                          tensors: Optional[dict] = None,
                          resident_out: Optional[int] = None,
-                         n_ctx: int = 1, vectorize: bool = True) -> Tiling:
+                         n_ctx: int = 1, vectorize: bool = True,
+                         tile: Optional[tuple] = None) -> Tiling:
     """Depthwise conv on the ALU.
 
     Vectorized form (default): one overwrite-MAC sweep seeds the output tile
@@ -490,6 +491,10 @@ def emit_depthwise_tasks(wl: ConvWorkload, hw: VTAConfig,
     Legacy form (``vectorize=False``, the pre-macro-op lowering kept as the
     tsim comparison baseline): per tap (tmp=0, copy, MUL weight, ADD into
     out), each a single-uop instruction, single-context, compute-queue loads.
+
+    ``tile`` overrides the capacity-greedy spatial tile with an explicit
+    ``(th_i, tw_i)`` — the autotuner's search knob; it must still fit the
+    per-context budget (asserted, so infeasible candidates are prunable).
     """
     BV, BO = hw.batch, hw.block_out
     assert wl.fi == wl.fo and wl.b % BV == 0 and wl.fo % BO == 0
@@ -514,7 +519,11 @@ def emit_depthwise_tasks(wl: ConvWorkload, hw: VTAConfig,
         n_ctx = 1
     wgt_reserve = n_ctx * kk if vectorize else 0
     half = (hw.acc_depth - wgt_reserve) // n_ctx
-    tile = _shrink_tile(oh, ow, need, half)
+    if tile is None:
+        tile = _shrink_tile(oh, ow, need, half)
+    else:
+        assert need(*tile) <= half, \
+            f"depthwise tile {tile} exceeds per-context acc budget"
     assert tile is not None, "acc scratchpad too small for depthwise tile"
     th_i, tw_i = tile
     th_o, tw_o = _ceil_div(oh, th_i), _ceil_div(ow, tw_i)
@@ -653,12 +662,13 @@ def emit_depthwise_tasks(wl: ConvWorkload, hw: VTAConfig,
 def schedule_depthwise(wl: ConvWorkload, hw: VTAConfig, *,
                        post_op: str = "relu_shift",
                        tensors: Optional[dict] = None,
-                       vectorize: bool = True) -> Schedule:
+                       vectorize: bool = True,
+                       tile: Optional[tuple] = None) -> Schedule:
     alloc = UopAllocator(hw)
     tasks: list[Task] = []
     t = emit_depthwise_tasks(wl, hw, alloc, tasks, post_op=post_op,
                              tensors=tensors, n_ctx=2 if vectorize else 1,
-                             vectorize=vectorize)
+                             vectorize=vectorize, tile=tile)
     return _finish_schedule(wl, t, hw, alloc, tasks, _n_ctx_of(tasks))
 
 
@@ -669,12 +679,14 @@ def emit_pool_tasks(wl: ConvWorkload, hw: VTAConfig,
                     alloc: UopAllocator, tasks: list, *, mode: str = "max",
                     tensors: Optional[dict] = None,
                     resident_out: Optional[int] = None,
-                    n_ctx: int = 1, vectorize: bool = True) -> Tiling:
+                    n_ctx: int = 1, vectorize: bool = True,
+                    tile: Optional[tuple] = None) -> Tiling:
     """Pool on the ALU. Vectorized form: tap 0 is an overwrite (write-through)
     copy and every remaining tap rides one multi-uop MAX/ADD macro sweep —
     2-3 ALU instructions per tile vs ``kh*kw + 2``; patch loads stream via
     the LD engine and tasks alternate scratchpad halves (``n_ctx == 2``).
-    ``vectorize=False`` keeps the single-uop, single-context legacy forms."""
+    ``vectorize=False`` keeps the single-uop, single-context legacy forms.
+    ``tile`` overrides the capacity-greedy spatial tile (autotuner knob)."""
     BV, BO = hw.batch, hw.block_out
     assert wl.fi == wl.fo and wl.fo % BO == 0
     if not vectorize:
@@ -691,7 +703,11 @@ def emit_pool_tasks(wl: ConvWorkload, hw: VTAConfig,
     if n_ctx > 1 and _shrink_tile(oh, ow, need, hw.acc_depth // n_ctx) is None:
         n_ctx = 1
     half = hw.acc_depth // n_ctx
-    tile = _shrink_tile(oh, ow, need, half)
+    if tile is None:
+        tile = _shrink_tile(oh, ow, need, half)
+    else:
+        assert need(*tile) <= half, \
+            f"pool tile {tile} exceeds per-context acc budget"
     assert tile is not None, "acc scratchpad too small for pool tile"
     th_i, tw_i = tile
     th_o, tw_o = _ceil_div(oh, th_i), _ceil_div(ow, tw_i)
@@ -790,11 +806,13 @@ def emit_pool_tasks(wl: ConvWorkload, hw: VTAConfig,
 
 def schedule_pool(wl: ConvWorkload, hw: VTAConfig, *, mode: str = "max",
                   tensors: Optional[dict] = None,
-                  vectorize: bool = True) -> Schedule:
+                  vectorize: bool = True,
+                  tile: Optional[tuple] = None) -> Schedule:
     alloc = UopAllocator(hw)
     tasks: list[Task] = []
     t = emit_pool_tasks(wl, hw, alloc, tasks, mode=mode, tensors=tensors,
-                        n_ctx=2 if vectorize else 1, vectorize=vectorize)
+                        n_ctx=2 if vectorize else 1, vectorize=vectorize,
+                        tile=tile)
     return _finish_schedule(wl, t, hw, alloc, tasks, _n_ctx_of(tasks))
 
 

@@ -21,9 +21,9 @@ import math
 from collections import deque
 from dataclasses import dataclass, field
 
-from repro.vta.isa import (AluInsn, Buffer, FinishInsn, GemmInsn, LoadInsn,
+from repro.vta.isa import (AluInsn, Buffer, GemmInsn, LoadInsn,
                            StoreInsn, VTAConfig)
-from repro.vta.runtime import Program, queue_of
+from repro.vta.runtime import Program
 from repro.vta.scheduler import insn_dram_bytes
 
 DECODE_OVERHEAD = 4   # fetch/decode cycles per instruction

@@ -10,8 +10,7 @@ cost, as on the real machine.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass
 
 from repro.core.tps import ConvWorkload
 

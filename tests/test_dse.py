@@ -12,7 +12,11 @@ from repro.vta.network import run_network
 from repro.vta.workloads import (NETWORKS, network_fingerprint,
                                  resolve_network)
 
-GRID = dict(log_blocks=(4,), mem_widths=(8, 64), spad_scales=(1,))
+# tune="off": these tests exercise the sweep engine itself (cache, pareto,
+# pool); the autotuner has its own suite (test_autotune.py) and would
+# multiply runtime here
+GRID = dict(log_blocks=(4,), mem_widths=(8, 64), spad_scales=(1,),
+            tune="off")
 
 
 # ---------------------------------------------------------------------------
