@@ -1,0 +1,105 @@
+"""Execution-backend benchmark: numpy fsim vs the JIT-compiled JAX backend.
+
+Measures the acceptance metric of the backend layer: wall-clock of
+*verifying a full autotune sweep* (``--tune full``: every winning candidate
+of every resnet18 + mobilenet layer executed functionally on a calibration
+batch and compared bit-exactly against the numpy oracle), numpy
+interpreter vs ``jax.jit``/vmap — identical verdicts by the bit-exactness
+contract, only wall-clock differs.
+
+CLI:
+
+  PYTHONPATH=src python -m benchmarks.bench_backend \
+      --nets resnet18,mobilenet --batch 8
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro.core.dse import make_config
+from repro.vta.autotune import LayerTuner
+from repro.vta.network import run_network
+from repro.vta.workloads import network_graph, resolve_network
+
+
+def run(nets=("resnet18", "mobilenet1.0"), batch: int = 8,
+        backends=("numpy", "jax"), passes: int = 2,
+        verbose: bool = True) -> dict:
+    """``passes``: the jax backend pays XLA compilation on first sight of
+    each chunk structure; pass 2+ measures the steady state (what repeated
+    sweeps, pool workers and CI hit — executables persist on disk via the
+    XLA compilation cache). The numpy interpreter has no warmup, so only
+    its first pass is kept."""
+    hw = make_config()
+    rows = []
+    if verbose:
+        print(f"== bench_backend: full autotune sweep, verify batch={batch}, "
+              f"default config ==")
+    for be in backends:
+        for p in range(passes if be != "numpy" else 1):
+            tuner = LayerTuner(mode="full", backend=be, verify_batch=batch)
+            t0 = time.perf_counter()
+            reports = {}
+            for net in nets:
+                reports[net] = run_network(net, network_graph(net, 1), hw,
+                                           dedup_loads=True, layer_cache={},
+                                           tuner=tuner)
+            wall = time.perf_counter() - t0
+            row = {"backend": be, "batch": batch, "pass": p,
+                   "verify_s": round(tuner.verify_seconds, 2),
+                   "sweep_s": round(wall, 2),
+                   "searches": tuner.searches,
+                   "cycles": {n: r.total_cycles for n, r in reports.items()}}
+            rows.append(row)
+            if verbose:
+                tag = "" if be == "numpy" else (
+                    " (cold: + XLA compile)" if p == 0 else " (steady state)")
+                print(f"  {be:6s}: verification {row['verify_s']:7.2f}s of "
+                      f"{row['sweep_s']:7.2f}s sweep "
+                      f"({tuner.searches} layer searches){tag}")
+    out = {"rows": rows}
+    if len({r["backend"] for r in rows}) == 2:
+        a = next(r for r in rows if r["backend"] == rows[0]["backend"])
+        b = rows[-1]                     # final pass of the second backend
+        assert all(r["cycles"] == a["cycles"] for r in rows), \
+            "backends disagree on tuned cycles"
+        out["verify_speedup"] = round(a["verify_s"] / max(b["verify_s"], 1e-9),
+                                      2)
+        out["sweep_speedup"] = round(a["sweep_s"] / max(b["sweep_s"], 1e-9), 2)
+        if verbose:
+            print("  -> identical tuned cycles on both backends")
+            print(f"  -> steady-state verification speedup "
+                  f"{out['verify_speedup']}x, whole-sweep "
+                  f"{out['sweep_speedup']}x "
+                  f"({a['backend']} -> {b['backend']})")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.bench_backend")
+    ap.add_argument("--nets", default="resnet18,mobilenet")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="calibration images per verification (default 8)")
+    ap.add_argument("--backends", default="numpy,jax")
+    ap.add_argument("--passes", type=int, default=2,
+                    help="jax passes (pass 1 pays XLA compile; the last "
+                         "pass is the steady-state measurement)")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="fail unless the verification speedup reaches this")
+    args = ap.parse_args(argv)
+    nets = tuple(resolve_network(n) for n in args.nets.split(",") if n)
+    backends = tuple(b for b in args.backends.split(",") if b)
+    out = run(nets=nets, batch=args.batch, backends=backends,
+              passes=args.passes)
+    if args.min_speedup is not None:
+        if out.get("verify_speedup", 0) < args.min_speedup:
+            print(f"FAIL: verification speedup {out.get('verify_speedup')}x "
+                  f"< required {args.min_speedup}x", file=sys.stderr)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,13 +33,14 @@ _STEMS = {"mobilenet1.0": "mobilenet"}
 
 def run(nets=("resnet18", "resnet34", "resnet50", "mobilenet1.0"),
         verbose: bool = True, cache_dir: Optional[str] = None,
-        tune: str = "cached", tune_dir: Optional[str] = None) -> dict:
+        tune: str = "cached", tune_dir: Optional[str] = None,
+        backend: str = "numpy") -> dict:
     cache = ResultCache(cache_dir) if cache_dir else None
     rows = []
     if verbose:
         print("== bench_end2end (paper §IV.E) ==")
     for name in nets:
-        job = DSEJob(network=name, tune=tune)
+        job = DSEJob(network=name, tune=tune, backend=backend)
         rec = cache.get(job.key()) if cache else None
         if rec is None:
             rec = eval_job(job, tune_dir)
@@ -150,11 +151,15 @@ def main(argv=None) -> int:
                     help="shorthand for --tune off")
     ap.add_argument("--tune-dir", default="results/autotune",
                     help="persistent autotune tile cache directory")
+    ap.add_argument("--backend", default="numpy",
+                    help="execution backend for autotune verification "
+                         "(numpy | jax; bit-identical results)")
     args = ap.parse_args(argv)
     nets = tuple(resolve_network(n) for n in args.nets.split(",") if n)
     tune = "off" if args.no_autotune else args.tune
     rows = run(nets=nets, cache_dir=args.cache_dir, tune=tune,
-               tune_dir=args.tune_dir if tune != "off" else None)["rows"]
+               tune_dir=args.tune_dir if tune != "off" else None,
+               backend=args.backend)["rows"]
     if args.json_out:
         for p in write_json(rows, args.json_out):
             print(f"wrote {p}")

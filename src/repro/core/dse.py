@@ -42,7 +42,7 @@ from repro.vta.network import run_network
 from repro.vta.workloads import (network_fingerprint, network_graph,
                                  resolve_network)
 
-ENGINE_VERSION = 4       # bump to invalidate every cached point
+ENGINE_VERSION = 5       # bump to invalidate every cached point
                          # v2: graph compiler (residual adds modeled, fused
                          # segments, scratchpad residency)
                          # v3: vectorized ALU macro-ops (MAC/overwrite),
@@ -50,6 +50,11 @@ ENGINE_VERSION = 4       # bump to invalidate every cached point
                          # patch loads, dedup_loads on by default
                          # v4: tsim-in-the-loop per-layer tile autotuner is
                          # the default lowering policy (tune=off|cached|full)
+                         # v5: hazard-free token protocol (same-ctx release
+                         # tokens, interleaved reduction loops, per-thread
+                         # merged-dedup halves) + the typed-trace execution
+                         # backend layer (run_tsim check_hazards, fsim on
+                         # the lowered trace, batched jax backend)
 CACHE_SCHEMA_VERSION = 3  # on-disk record layout; get() rejects other versions
                           # (v3: points carry tuned_layers /
                           # tuning_cycles_saved; autotune tile records share
@@ -143,6 +148,10 @@ class DSEJob:
     per_layer: bool = True      # include per-layer breakdowns in the record
     residency: bool = True      # graph compiler: fusion + on-chip residency
     tune: str = "cached"        # autotuner policy: off | cached | full
+    backend: str = "numpy"      # execution backend for fsim verification
+                                # (vta/backend.py registry; results are
+                                # bit-identical across backends, so the
+                                # cache key excludes it)
 
     def __post_init__(self):
         # canonicalize aliases so key() and evaluation always agree
@@ -185,10 +194,10 @@ def make_jobs(networks, *, log_blocks=DEFAULT_LOG_BLOCKS,
               mem_widths=DEFAULT_MEM_WIDTHS, spad_scales=DEFAULT_SPAD_SCALES,
               batch_logs=(0,), pipelined: bool = True,
               per_layer: bool = True, residency: bool = True,
-              tune: str = "cached") -> list[DSEJob]:
+              tune: str = "cached", backend: str = "numpy") -> list[DSEJob]:
     return [DSEJob(network=n, log_block=lb, mem_width=mw, spad_scale=ss,
                    batch_log=bl, pipelined=pipelined, per_layer=per_layer,
-                   residency=residency, tune=tune)
+                   residency=residency, tune=tune, backend=backend)
             for n in networks for lb in log_blocks for mw in mem_widths
             for ss in spad_scales for bl in batch_logs]
 
@@ -278,7 +287,8 @@ def eval_job(job: DSEJob, tune_dir: Optional[str] = None) -> dict:
         rep = run_network(job.network, graph, hw, layer_cache=_LAYER_CACHE,
                           dedup_loads=True,
                           fusion=job.residency, residency=job.residency,
-                          tuner=_tuner_for(job, tune_dir))
+                          tuner=_tuner_for(job, tune_dir),
+                          backend=job.backend)
     except (AssertionError, RuntimeError, ValueError) as e:
         # infeasible point (sparse design space, §V)
         return {**base, "feasible": False,
@@ -400,6 +410,7 @@ def run_sweep(networks, *, out_dir: Optional[str] = None,
               pipelined: bool = True, workers: Optional[int] = None,
               per_layer: bool = True, use_cache: bool = True,
               residency: bool = True, tune: str = "cached",
+              backend: str = "numpy",
               progress: Optional[Callable[[str], None]] = None) -> SweepResult:
     """Run the full (config grid x networks) sweep across a process pool.
 
@@ -413,7 +424,7 @@ def run_sweep(networks, *, out_dir: Optional[str] = None,
     jobs = make_jobs(networks, log_blocks=log_blocks, mem_widths=mem_widths,
                      spad_scales=spad_scales, batch_logs=batch_logs,
                      pipelined=pipelined, per_layer=per_layer,
-                     residency=residency, tune=tune)
+                     residency=residency, tune=tune, backend=backend)
     keys = {job: job.key() for job in jobs}
     cache = None
     tune_dir = None
@@ -600,6 +611,10 @@ def main(argv=None) -> int:
                          "— reuse tiles from <out>/autotune, search misses)")
     ap.add_argument("--no-autotune", action="store_true",
                     help="shorthand for --tune off (heuristic tilings only)")
+    ap.add_argument("--backend", default="numpy",
+                    help="execution backend for fsim verification "
+                         "(numpy | jax; see vta/backend.py — results are "
+                         "bit-identical, jax batches and JIT-compiles)")
     args = ap.parse_args(argv)
 
     ints = lambda s: tuple(int(x) for x in s.split(",") if x)
@@ -620,6 +635,7 @@ def main(argv=None) -> int:
         workers=args.workers, per_layer=not args.no_per_layer,
         use_cache=not args.no_cache, residency=not args.no_residency,
         tune="off" if args.no_autotune else args.tune,
+        backend=args.backend,
         progress=lambda line: print(line, flush=True))
     _print_report(res.report())
     if args.out:

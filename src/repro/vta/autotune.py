@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import time
 from dataclasses import asdict, dataclass, replace
 from typing import Optional
 
@@ -45,7 +46,7 @@ import numpy as np
 from repro.core.tile_search import (vta_alu_tile_candidates,
                                     vta_tile_candidates)
 from repro.core.tps import ConvWorkload, Tiling, heuristic_conv_tiling
-from repro.vta.fsim import (FSim, conv2d_ref, depthwise_ref, pool_ref,
+from repro.vta.fsim import (conv2d_ref, depthwise_ref, pool_ref,
                             post_op_ref)
 from repro.vta.isa import VTAConfig
 from repro.vta.runtime import Program, UopAllocator, finalize
@@ -104,7 +105,10 @@ class TuneResult:
 
 
 # ---------------------------------------------------------------------------
-# fsim bit-exactness oracles (deterministic synthetic data per fingerprint)
+# fsim bit-exactness oracles (deterministic synthetic data per fingerprint).
+# Verification executes on any registered backend (vta/backend.py): the
+# numpy FSim one image at a time, or the JIT-compiled JAX backend vmapped
+# over the whole calibration batch — one compiled program, N images.
 # ---------------------------------------------------------------------------
 def _rng(fingerprint: str) -> np.random.Generator:
     return np.random.default_rng(int(fingerprint[:8], 16))
@@ -112,49 +116,73 @@ def _rng(fingerprint: str) -> np.random.Generator:
 
 def _verify_conv(prog: Program, wl: ConvWorkload, hw: VTAConfig, *,
                  post_op: str, bias: bool, fingerprint: str,
-                 skip_tensor: Optional[dict] = None) -> bool:
-    """Run ``prog`` in fsim on random data; compare against the numpy
-    reference. ``skip_tensor`` (fused residual heads) maps the skip DRAM
-    tensor name to the out tensor name: ref adds the skip and re-clips."""
+                 skip_tensor: Optional[dict] = None,
+                 backend="numpy", batch: int = 1) -> bool:
+    """Run ``prog`` on ``batch`` random images via ``backend``; compare
+    against the numpy reference. ``skip_tensor`` (fused residual heads)
+    maps the skip DRAM tensor name to the out tensor name: ref adds the
+    skip and re-clips. The first image's draws match the historical
+    single-image verification exactly."""
+    from repro.vta.backend import get_backend
     rng = _rng(fingerprint)
-    inp = rng.integers(-32, 32, (wl.b, wl.fi, wl.h, wl.w), dtype=np.int8)
+    inps = [rng.integers(-32, 32, (wl.b, wl.fi, wl.h, wl.w), dtype=np.int8)]
     wgt = rng.integers(-8, 8, (wl.fo, wl.fi, wl.kh, wl.kw), dtype=np.int8)
-    out = np.zeros((wl.b, wl.fo, wl.oh, wl.ow), np.int8)
+    out_shape = (wl.b, wl.fo, wl.oh, wl.ow)
     b = rng.integers(-100, 100, (wl.fo,), dtype=np.int32) if bias else None
-    dram = {"inp": inp, "wgt": wgt, "out": out}
+    skips = [rng.integers(-64, 64, out_shape, dtype=np.int8)] \
+        if skip_tensor is not None else None
+    for _ in range(batch - 1):
+        inps.append(rng.integers(-32, 32, inps[0].shape, dtype=np.int8))
+        if skips is not None:
+            skips.append(rng.integers(-64, 64, out_shape, dtype=np.int8))
+    names = skip_tensor or {"inp": "inp", "wgt": "wgt", "bias": "bias",
+                            "out": "out"}
+    shared = {names["wgt"]: wgt}
     if bias:
-        dram["bias"] = b
-    ref = post_op_ref(conv2d_ref(inp, wgt, (wl.sh, wl.sw), (wl.ph, wl.pw), b),
-                      post_op)
-    if skip_tensor is not None:
-        skip = rng.integers(-64, 64, out.shape, dtype=np.int8)
-        dram = {skip_tensor["inp"]: inp, skip_tensor["wgt"]: wgt,
-                skip_tensor["out"]: out, skip_tensor["skip"]: skip}
-        if bias:
-            dram[skip_tensor["bias"]] = b
-        ref = np.clip(ref.astype(np.int32) + skip.astype(np.int32),
-                      -127, 127).astype(np.int8)
-    FSim(hw, dram).run(prog)
-    return bool(np.array_equal(out, ref))
+        shared[names["bias"]] = b
+    batched = {names["inp"]: np.stack(inps),
+               names["out"]: np.zeros((batch,) + out_shape, np.int8)}
+    if skips is not None:
+        batched[names["skip"]] = np.stack(skips)
+    outs = get_backend(backend).run_batched(prog, hw, shared=shared,
+                                            batched=batched)[names["out"]]
+    # the conv oracle is batch-parallel: one call covers every image
+    refs = post_op_ref(conv2d_ref(np.concatenate(inps), wgt, (wl.sh, wl.sw),
+                                  (wl.ph, wl.pw), b), post_op)         .reshape(batch, *out_shape)
+    if skips is not None:
+        refs = np.clip(refs.astype(np.int32)
+                       + np.stack(skips).astype(np.int32),
+                       -127, 127).astype(np.int8)
+    return bool(np.array_equal(outs, refs))
 
 
 def _verify_alu(prog: Program, wl: ConvWorkload, hw: VTAConfig, *,
-                kind: str, post_op: str, fingerprint: str) -> bool:
+                kind: str, post_op: str, fingerprint: str,
+                backend="numpy", batch: int = 1) -> bool:
+    from repro.vta.backend import get_backend
     rng = _rng(fingerprint)
-    inp = rng.integers(-64, 64, (wl.b, wl.fi, wl.h, wl.w), dtype=np.int8)
-    out = np.zeros((wl.b, wl.fo, wl.oh, wl.ow), np.int8)
-    dram = {"inp": inp, "out": out}
+    inps = [rng.integers(-64, 64, (wl.b, wl.fi, wl.h, wl.w), dtype=np.int8)]
+    out_shape = (wl.b, wl.fo, wl.oh, wl.ow)
+    shared = {}
     if kind == "depthwise":
-        w = rng.integers(-8, 8, (wl.fi, wl.kh, wl.kw), dtype=np.int8)
-        dram["dw_wgt"] = w
-        ref = post_op_ref(depthwise_ref(inp, w, (wl.sh, wl.sw),
-                                        (wl.ph, wl.pw)), post_op)
+        shared["dw_wgt"] = rng.integers(-8, 8, (wl.fi, wl.kh, wl.kw),
+                                        dtype=np.int8)
+    for _ in range(batch - 1):
+        inps.append(rng.integers(-64, 64, inps[0].shape, dtype=np.int8))
+    batched = {"inp": np.stack(inps),
+               "out": np.zeros((batch,) + out_shape, np.int8)}
+    outs = get_backend(backend).run_batched(prog, hw, shared=shared,
+                                            batched=batched)["out"]
+    stacked = np.concatenate(inps)       # the oracles are batch-parallel
+    if kind == "depthwise":
+        refs = post_op_ref(depthwise_ref(stacked, shared["dw_wgt"],
+                                         (wl.sh, wl.sw), (wl.ph, wl.pw)),
+                           post_op)
     else:
-        ref = np.clip(pool_ref(inp, (wl.kh, wl.kw), (wl.sh, wl.sw),
-                               (wl.ph, wl.pw), kind[:3]),
-                      -128, 127).astype(np.int8)
-    FSim(hw, dram).run(prog)
-    return bool(np.array_equal(out, ref))
+        refs = np.clip(pool_ref(stacked, (wl.kh, wl.kw), (wl.sh, wl.sw),
+                                (wl.ph, wl.pw), kind[:3]),
+                       -128, 127).astype(np.int8)
+    return bool(np.array_equal(outs, refs.reshape(batch, *out_shape)))
 
 
 # ---------------------------------------------------------------------------
@@ -175,7 +203,8 @@ class LayerTuner:
 
     def __init__(self, mode: str = "cached", cache=None, *,
                  k_traffic: int = 12, k_cycles: int = 8,
-                 tune_alu: bool = True, verify: bool = True):
+                 tune_alu: bool = True, verify: bool = True,
+                 backend: str = "numpy", verify_batch: int = 1):
         assert mode in ("cached", "full"), mode
         self.mode = mode
         self.cache = cache               # ResultCache-like or None
@@ -183,9 +212,42 @@ class LayerTuner:
         self.k_cycles = k_cycles
         self.tune_alu = tune_alu
         self.verify = verify
+        self.backend = backend           # execution backend for winner
+        self.verify_batch = verify_batch  # images per verification
         self._memo: dict = {}            # fingerprint -> TuneResult
-        self.searches = 0                # cold searches this process
-        self.hits = 0                    # memo/disk hits
+        # stats live in a dict so with_backend() copies keep reporting into
+        # the caller-held tuner (searches / hits / verify_seconds)
+        self._stats = {"searches": 0, "hits": 0, "verify_seconds": 0.0}
+
+    def with_backend(self, backend=None, verify_batch=None) -> "LayerTuner":
+        """A shallow copy bound to another execution backend (shares the
+        memo and the persistent cache — results are backend-invariant by
+        the tested bit-exactness contract, so they interchange freely)."""
+        if (backend in (None, self.backend)
+                and verify_batch in (None, self.verify_batch)):
+            return self
+        import copy
+        t = copy.copy(self)
+        if backend is not None:
+            t.backend = backend
+        if verify_batch is not None:
+            t.verify_batch = verify_batch
+        return t
+
+    @property
+    def searches(self) -> int:
+        """Cold searches this process (shared across with_backend copies)."""
+        return self._stats["searches"]
+
+    @property
+    def hits(self) -> int:
+        """Memo/disk hits (shared across with_backend copies)."""
+        return self._stats["hits"]
+
+    @property
+    def verify_seconds(self) -> float:
+        """Wall-clock spent in winner verification (shared across copies)."""
+        return self._stats["verify_seconds"]
 
     @property
     def tag(self) -> tuple:
@@ -208,14 +270,14 @@ class LayerTuner:
     def _lookup(self, key: str) -> Optional[TuneResult]:
         hit = self._memo.get(key)
         if hit is not None:
-            self.hits += 1
+            self._stats["hits"] += 1
             return hit
         if self.cache is not None and self.mode == "cached":
             rec = self.cache.get(key)
             if rec is not None:
                 tr = TuneResult.from_record(rec)
                 self._memo[key] = tr
-                self.hits += 1
+                self._stats["hits"] += 1
                 return tr
         return None
 
@@ -236,9 +298,13 @@ class LayerTuner:
         last_err: Optional[str] = None
         for i in order:
             cycles, tile, prog = scored[i]
-            if self.verify and not verify_fn(prog):
-                last_err = f"fsim mismatch for {kind} tile {tile}"
-                continue
+            if self.verify:
+                t0 = time.perf_counter()
+                ok = verify_fn(prog)
+                self._stats["verify_seconds"] += time.perf_counter() - t0
+                if not ok:
+                    last_err = f"fsim mismatch for {kind} tile {tile}"
+                    continue
             if isinstance(tile, Tiling):
                 # structural fields only: a tile served from the cache must
                 # compare equal to a freshly searched one
@@ -262,7 +328,7 @@ class LayerTuner:
         hit = self._lookup(key)
         if hit is not None:
             return hit
-        self.searches += 1
+        self._stats["searches"] += 1
         heur = heuristic_conv_tiling(wl, hw, prefer_db=prefer_db)
         cands = [heur] + [t for t in vta_tile_candidates(
             wl, hw, k_traffic=self.k_traffic, k_cycles=self.k_cycles)
@@ -285,7 +351,9 @@ class LayerTuner:
         tr = self._pick(
             scored, kind, scored[0][0], pruned,
             lambda prog: _verify_conv(prog, wl, hw, post_op=post_op,
-                                      bias=bias, fingerprint=key))
+                                      bias=bias, fingerprint=key,
+                                      backend=self.backend,
+                                      batch=self.verify_batch))
         return self._commit(key, tr)
 
     def tune_alu_layer(self, kind: str, wl: ConvWorkload, hw: VTAConfig, *,
@@ -296,7 +364,7 @@ class LayerTuner:
         hit = self._lookup(key)
         if hit is not None:
             return hit
-        self.searches += 1
+        self._stats["searches"] += 1
 
         def build(tile):
             if kind == "depthwise":
@@ -334,7 +402,9 @@ class LayerTuner:
         tr = self._pick(
             scored, kind, scored[0][0], pruned,
             lambda prog: _verify_alu(prog, wl, hw, kind=kind,
-                                     post_op=post_op, fingerprint=key))
+                                     post_op=post_op, fingerprint=key,
+                                     backend=self.backend,
+                                     batch=self.verify_batch))
         return self._commit(key, tr)
 
     def tune_fused_conv(self, wl: ConvWorkload, hw: VTAConfig, *,
@@ -354,7 +424,7 @@ class LayerTuner:
         hit = self._lookup(key)
         if hit is not None:
             return hit
-        self.searches += 1
+        self._stats["searches"] += 1
         shrunk = replace(hw, log_acc_buff=hw.log_acc_buff - 1)
         try:
             heur = heuristic_conv_tiling(wl, shrunk, prefer_db=prefer_db)
@@ -399,7 +469,9 @@ class LayerTuner:
                 scored, kind, scored[0][0], pruned,
                 lambda prog: _verify_conv(prog, wl, hw, post_op=post_op,
                                           bias=bias, fingerprint=key,
-                                          skip_tensor=names))
+                                          skip_tensor=names,
+                                          backend=self.backend,
+                                          batch=self.verify_batch))
         except RuntimeError:
             # every candidate failed fsim verification: refuse to tune this
             # head (compiler falls back to its own plan + demotion) instead

@@ -1,0 +1,572 @@
+"""JIT-compiled JAX execution backend for the lowered tensor-op trace.
+
+Executes exactly the trace ``vta/lowering.py`` produces — the same one the
+numpy ``FSim`` consumes — under ``jax.jit``, ``vmap``-batched over N input
+images, so one compiled program verifies a whole calibration batch. The
+numpy backend runs a batch as N sequential per-image interpreter passes;
+this backend runs it as one XLA computation whose gathers, GEMMs and ALU
+sweeps are vectorized over the batch axis.
+
+Compile-cost control: a trace is split into a *static spec* (hashable op
+structure: kinds, tensor names, imms) and *dynamic arguments* (index maps,
+masks, scratchpad bases — traced, never embedded constants). ``jax.jit``
+keys its cache on the spec plus array shapes, so autotune candidates of the
+same layer — and repeat layers across a network — reuse one compilation
+instead of paying XLA per program, and a persistent on-disk XLA cache
+(``enable_persistent_cache``) carries executables across processes.
+
+The GEMM inner op (gathered int8 operand tiles -> int32 accumulation) has
+two implementations selected by ``gemm_impl``:
+
+  * ``"einsum"`` — jnp.einsum, the default on CPU;
+  * ``"pallas"`` — a Pallas kernel (``pallas_gemm``) gridded over the
+    gathered tile axis, for accelerator backends (validated in interpret
+    mode on CPU, like kernels/gemm.py; set REPRO_FSIM_PALLAS=1 to force it
+    with interpretation).
+
+Integer semantics match numpy bit for bit: int32 wraparound, arithmetic
+right shift, scatter-add with duplicate indices.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.vta.isa import AluOp, Buffer, VTAConfig
+from repro.vta.lowering import (F32_EXACT_TERMS, AluSweep, GatherLoad,
+                                GemmOp, ScatterStore, SpillStore, Trace,
+                                UopLoad, lower)
+from repro.vta.runtime import Program
+
+try:
+    import jax.experimental.pallas as pl
+except ImportError:                                  # pragma: no cover
+    pl = None
+
+
+# ---------------------------------------------------------------------------
+# Pallas GEMM kernel (one gathered tile pair per grid step)
+# ---------------------------------------------------------------------------
+def _pallas_gemm_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def pallas_gemm(x, w, *, interpret: bool = True):
+    """f32 matmul x (M, K) @ w (K, N) -> (M, N), gridded over M.
+
+    The MXU form of one GEMM instruction's contraction (operands are
+    gathered int8 tiles widened to f32 — exact, see ``_gemm_product``). On
+    CPU run with ``interpret=True`` (numerical validation); on TPU/GPU pass
+    False.
+    """
+    assert pl is not None, "jax.experimental.pallas unavailable"
+    M, K = x.shape
+    _, N = w.shape
+    bm = min(256, M)
+    while M % bm:
+        bm //= 2
+    bm = max(bm, 1)
+    return pl.pallas_call(
+        _pallas_gemm_kernel,
+        grid=(M // bm,),
+        in_specs=[pl.BlockSpec((bm, K), lambda i: (i, 0)),
+                  pl.BlockSpec((K, N), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((bm, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+
+
+def _matmul(x, w, gemm_impl: str):
+    if gemm_impl == "pallas":
+        return pallas_gemm(x, w, interpret=False)
+    if gemm_impl == "pallas_interpret":
+        return pallas_gemm(x, w, interpret=True)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def _gemm_product(x, w, g: int, R: int, w_d: int, gemm_impl: str):
+    """One GEMM instruction's products, contracted per accumulator target.
+
+    x (g*R, BV, BI) int8 — gathered input tiles, statically permuted so the
+    g accumulator groups are contiguous per weight block; w (w_d*R, BO, BI)
+    int8 — the instruction's w_d distinct weight blocks (the wgt sweep
+    factors are zero, so the sweep grid shares them). Returns (g, BV, BO)
+    int32, bit-exact: the int8 operands are widened to f32 and contracted
+    as w_d real (gb*BV, R*BI) @ (R*BI, BO) matmuls — the shape XLA/MXU is
+    actually fast at — in exact-f32 blocks accumulated in int32.
+    """
+    BV, BI = x.shape[1], x.shape[2]
+    BO = w.shape[1]
+    K = R * BI
+    gb = g // w_d
+    xf = x.reshape(w_d, gb, R, BV, BI).transpose(0, 1, 3, 2, 4) \
+        .reshape(w_d, gb * BV, K).astype(jnp.float32)
+    wf = w.reshape(w_d, R, BO, BI).transpose(0, 1, 3, 2) \
+        .reshape(w_d, K, BO).astype(jnp.float32)
+    parts = []
+    for j in range(w_d):
+        out = None
+        for k0 in range(0, K, F32_EXACT_TERMS):
+            part = _matmul(xf[j, :, k0:k0 + F32_EXACT_TERMS],
+                           wf[j, k0:k0 + F32_EXACT_TERMS], gemm_impl)
+            part = part.astype(jnp.int32)
+            out = part if out is None else out + part
+        parts.append(out)
+    return jnp.stack(parts).reshape(g, BV, BO)
+
+
+def default_gemm_impl() -> str:
+    if os.environ.get("REPRO_FSIM_PALLAS") == "1":
+        return "pallas" if jax.default_backend() != "cpu" else \
+            "pallas_interpret"
+    return "einsum" if jax.default_backend() == "cpu" else "pallas"
+
+
+_CACHE_READY = False
+
+
+def enable_persistent_cache() -> None:
+    """Point jax at a persistent XLA-compilation cache so trace-chunk
+    executables survive process boundaries — DSE pool workers, repeated
+    sweeps and CI runs skip straight to the steady state instead of paying
+    XLA again for every structurally known chunk. Directory from
+    REPRO_JAX_CACHE_DIR (set it empty to disable); defaults under
+    ~/.cache."""
+    global _CACHE_READY
+    if _CACHE_READY:
+        return
+    _CACHE_READY = True
+    path = os.environ.get("REPRO_JAX_CACHE_DIR")
+    if path == "":
+        return
+    if path is None:
+        path = os.path.join(os.path.expanduser("~"), ".cache",
+                            "repro_fsim_jax")
+    try:
+        os.makedirs(path, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", path)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.1)
+    except Exception:                                # pragma: no cover
+        pass                 # cache is an optimization, never a requirement
+
+
+# ---------------------------------------------------------------------------
+# Trace -> (static spec, dynamic index arrays)
+# ---------------------------------------------------------------------------
+def _spec_of(trace: Trace):
+    """Per-op (hashable entry, dynamic arrays) pairs.
+
+    The entry captures only execution-relevant structure (no step numbers),
+    so structurally identical ops — repeated tiles within a program, repeat
+    layers across programs — hash equal and share XLA compilations. Bool
+    masks and int32 index maps ride as traced arguments, never as embedded
+    constants.
+    """
+    pairs: list = []
+    for op in trace.ops:
+        if op is None or isinstance(op, UopLoad):
+            continue                      # uops are resolved at lowering
+        if isinstance(op, GatherLoad):
+            e = ("gather", int(op.buffer), op.tensor,
+                 op.mask is not None, op.fill)
+            a = (np.int32(op.base), op.index) if op.mask is None \
+                else (np.int32(op.base), op.index, op.mask)
+        elif isinstance(op, GemmOp):
+            if op.reset:
+                e = ("gemm", True, 1, 0, *_scatter_hints(op.acc_idx))
+                a = (op.acc_idx,)
+            else:
+                # Group iterations by accumulator target: consecutive runs
+                # of R reduction uops (ci, dy, dx) hit the same acc entry,
+                # so the contraction folds into real matmuls and the
+                # scatter-add sees only unique indices — XLA's CPU scatter
+                # serializes on duplicates, and this is what makes the JIT
+                # path beat the interpreter on GEMM-heavy programs. The
+                # wgt sweep factors are zero in every emitted schedule, so
+                # the instruction has only w_d = tb_i*tco_i distinct weight
+                # blocks; a static permutation makes same-weight groups
+                # contiguous, one real matmul each (einsum fallback for
+                # hypothetical schedules that break the pattern).
+                R = _reduction_run(op.acc_idx)
+                uidx = op.acc_idx[::R]
+                g = len(uidx)
+                rows = op.wgt_idx.reshape(g, R)
+                grouped = _weight_blocks(rows)
+                if grouped is not None:
+                    wrows, perm = grouped
+                    uidx = uidx[perm]
+                    e = ("gemm", False, R, len(wrows),
+                         *_scatter_hints(uidx))
+                    a = (uidx.astype(np.int32),
+                         op.inp_idx.reshape(g, R)[perm].reshape(-1),
+                         wrows.reshape(-1).astype(np.int32))
+                else:
+                    e = ("gemm", False, R, 0, *_scatter_hints(uidx))
+                    a = (uidx, op.inp_idx, op.wgt_idx)
+        elif isinstance(op, AluSweep):
+            fused = _fuse_sweep(op)
+            if fused is not None:
+                e, a = fused
+            else:
+                steps = tuple((s.src is not None, s.src2 >= 0,
+                               *_scatter_hints(s.dst)) for s in op.steps)
+                e = ("alu", int(op.alu_op), op.use_imm, op.imm, op.overwrite,
+                     steps)
+                a = tuple(x for s in op.steps for x in
+                          ((np.int32(max(s.src2, 0)),)
+                           + ((s.dst,) if s.src is None
+                              else (s.dst, s.src))))
+        elif isinstance(op, ScatterStore):
+            hints = (False, False) if op.mask is not None \
+                else _scatter_hints(op.index.reshape(-1))
+            e = ("store", op.tensor, len(op.index),
+                 op.mask is not None, *hints)
+            a = (np.int32(op.base), op.index) if op.mask is None \
+                else (np.int32(op.base), op.index, op.mask)
+        elif isinstance(op, SpillStore):
+            e = ("spill", *_scatter_hints(op.dst))
+            a = (op.src, op.dst)
+        else:
+            raise TypeError(type(op))
+        pairs.append((e, a))
+    return pairs
+
+
+def _fuse_sweep(op: AluSweep):
+    """Fuse a multi-step ADD/MAX/MIN/MAC macro sweep whose steps all write
+    the SAME destination grid from sources disjoint with it (the depthwise
+    tap accumulation, the pool tap reduce) into one gather -> reduce ->
+    scatter op. Sequential step semantics are preserved exactly: with a
+    shared destination and non-overlapping sources, chaining T commutative
+    updates equals one reduction. Returns (entry, args) or None.
+    """
+    if op.use_imm or op.overwrite or len(op.steps) < 2:
+        return None
+    if op.alu_op not in (AluOp.MAC, AluOp.ADD, AluOp.MAX, AluOp.MIN):
+        return None
+    s0 = op.steps[0]
+    for s in op.steps:
+        if s.src is None or not np.array_equal(s.dst, s0.dst):
+            return None
+    dset = set(s0.dst.tolist())
+    for s in op.steps:
+        if dset.intersection(s.src.tolist()):
+            return None
+        if op.alu_op == AluOp.MAC and s.src2 in dset:
+            return None
+    srcs = np.stack([s.src for s in op.steps])          # (T, g)
+    src2 = np.array([max(s.src2, 0) for s in op.steps], np.int32)
+    e = ("alufused", int(op.alu_op), len(op.steps), *_scatter_hints(s0.dst))
+    return e, (s0.dst, srcs, src2)
+
+
+def _weight_blocks(rows: np.ndarray):
+    """(distinct weight-index blocks, group permutation) for a GEMM whose
+    per-group weight rows repeat — periodically in every emitted schedule
+    (period = tb_i*tco_i; checked cheaply), with an np.unique fallback for
+    other repeat structures. None when grouping would not pay."""
+    g = len(rows)
+    same0 = (rows == rows[0]).all(axis=1)
+    p = int(np.argmax(same0[1:])) + 1 if same0[1:].any() else g
+    if p <= 16 and g % p == 0 and \
+            bool((rows.reshape(g // p, p, -1) == rows[:p]).all()):
+        perm = np.arange(g).reshape(g // p, p).T.reshape(-1)
+        return rows[:p], perm
+    wrows, inv = np.unique(rows, axis=0, return_inverse=True)
+    counts = np.bincount(inv)
+    if len(wrows) <= 16 and bool((counts == counts[0]).all()):
+        return wrows, np.argsort(inv, kind="stable")
+    return None
+
+
+def _reduction_run(acc_idx: np.ndarray) -> int:
+    """Largest R with ``acc_idx.reshape(-1, R)`` constant per row (the
+    reduction-uop run length of a GEMM's index vector)."""
+    n = len(acc_idx)
+    changes = np.flatnonzero(np.diff(acc_idx))
+    R = int(changes[0]) + 1 if len(changes) else n
+    if R <= 1 or n % R:
+        return 1
+    rows = acc_idx.reshape(-1, R)
+    return R if bool((rows == rows[:, :1]).all()) else 1
+
+
+def _scatter_hints(idx: np.ndarray) -> tuple:
+    """(unique, sorted) flags for XLA scatter fast paths, proven statically
+    at spec-build time from the concrete index vector."""
+    if len(idx) <= 1:
+        return True, True
+    d = np.diff(idx)
+    srt = bool((d >= 0).all())
+    if srt:
+        return bool((d > 0).all()), True
+    s = np.sort(idx)                 # ~3x cheaper than np.unique
+    return bool((np.diff(s) > 0).all()), False
+
+
+def _chunks(pairs: list, cap: int = 24):
+    """Split the op stream into jit-able blocks of up to ``cap`` ops.
+
+    Because entries carry neither step numbers nor scratchpad bases (those
+    ride as traced arguments), the repeated tile blocks that dominate real
+    programs produce *identical* (spec, shapes) keys, so a whole program
+    compiles only its handful of distinct block structures — this is what
+    keeps XLA compile time flat in program length.
+    """
+    block: list = []
+    bargs: list = []
+    for e, a in pairs:
+        block.append(e)
+        bargs.extend(a)
+        # close on task boundaries (stores) once half-full — big tasks stay
+        # aligned for cache reuse, small ALU tasks coalesce up to the cap
+        if len(block) >= cap or (e[0] == "store" and len(block) >= cap // 2):
+            yield tuple(block), tuple(bargs)
+            block, bargs = [], []
+    if block:
+        yield tuple(block), tuple(bargs)
+
+
+def _geom_of(hw: VTAConfig) -> tuple:
+    return (hw.inp_depth, hw.batch, hw.block_in, hw.wgt_depth, hw.block_out,
+            hw.acc_depth)
+
+
+_BUF_KEY = {int(Buffer.INP): "inp", int(Buffer.WGT): "wgt",
+            int(Buffer.ACC): "acc"}
+_BUF_DTYPE = {int(Buffer.INP): jnp.int8, int(Buffer.WGT): jnp.int8,
+              int(Buffer.ACC): jnp.int32}
+
+
+def _exec_entries(spec: tuple, args: tuple, state: dict,
+                  gemm_impl: str) -> None:
+    """Apply spec entries to ``state`` (scratchpads + tensors), consuming
+    ``args`` positionally. Runs traced (inside the chunk jit, vmapped over
+    the batch) and eagerly (the stepped divergence-debug path)."""
+    ai = 0
+
+    def nxt():
+        nonlocal ai
+        a = args[ai]
+        ai += 1
+        return a
+
+    for e in spec:
+        kind = e[0]
+        if kind == "gather":
+            _, buf, tensor, has_mask, fill = e
+            base = nxt()
+            idx = nxt()
+            flat = state["tensors"][tensor].reshape(-1)
+            src = flat[idx]
+            if has_mask:
+                src = jnp.where(nxt(), src, jnp.asarray(fill, src.dtype))
+            key = _BUF_KEY[buf]
+            state[key] = jax.lax.dynamic_update_slice_in_dim(
+                state[key], src.astype(_BUF_DTYPE[buf]), base, axis=0)
+        elif kind == "gemm":
+            _, reset, R, w_d, uniq, srt = e
+            acc_idx = nxt()
+            if reset:
+                state["acc"] = state["acc"].at[acc_idx].set(
+                    0, unique_indices=uniq, indices_are_sorted=srt)
+            else:
+                x = state["inp"][nxt()]
+                w = state["wgt"][nxt()]
+                g = x.shape[0] // R
+                if w_d:
+                    prod = _gemm_product(x, w, g, R, w_d, gemm_impl)
+                else:       # per-group weights (no emitted schedule today)
+                    prod = jnp.einsum(
+                        "grbi,groi->gbo",
+                        x.reshape(g, R, *x.shape[1:]).astype(jnp.int32),
+                        w.reshape(g, R, *w.shape[1:]).astype(jnp.int32))
+                state["acc"] = state["acc"].at[acc_idx].add(
+                    prod, unique_indices=uniq, indices_are_sorted=srt)
+        elif kind == "alu":
+            _, alu_op, use_imm, imm, overwrite, steps = e
+            acc = state["acc"]
+            for has_src, _has_src2, uniq, srt in steps:
+                src2 = nxt()
+                dst_i = nxt()
+
+                def put(val):
+                    return acc.at[dst_i].set(val, unique_indices=uniq,
+                                             indices_are_sorted=srt)
+                if alu_op == int(AluOp.MAC):
+                    prod = acc[nxt()] * acc[src2][None]
+                    acc = put(prod if overwrite else acc[dst_i] + prod)
+                    continue
+                src = jnp.int32(imm) if use_imm else acc[nxt()]
+                if overwrite:
+                    acc = put(jnp.broadcast_to(src, acc[dst_i].shape))
+                    continue
+                dst = acc[dst_i]
+                if alu_op == int(AluOp.ADD):
+                    r = dst + src
+                elif alu_op == int(AluOp.MAX):
+                    r = jnp.maximum(dst, src)
+                elif alu_op == int(AluOp.MIN):
+                    r = jnp.minimum(dst, src)
+                elif alu_op == int(AluOp.SHR):
+                    r = jnp.right_shift(dst, src)
+                elif alu_op == int(AluOp.MUL):
+                    r = dst * src
+                elif alu_op == int(AluOp.CLIP):
+                    bound = abs(int(imm))
+                    r = jnp.clip(dst, -bound, bound)
+                else:
+                    raise ValueError(alu_op)
+                acc = put(r)
+            state["acc"] = acc
+        elif kind == "alufused":
+            _, alu_op, T, uniq, srt = e
+            dst = nxt()
+            srcs = nxt()
+            src2 = nxt()
+            acc = state["acc"]
+            src = acc[srcs]                      # (T, g, BV, BO)
+            if alu_op == int(AluOp.MAC):
+                r = acc[dst] + (src * acc[src2][:, None]).sum(0)
+            elif alu_op == int(AluOp.ADD):
+                r = acc[dst] + src.sum(0)
+            elif alu_op == int(AluOp.MAX):
+                r = jnp.maximum(acc[dst], src.max(0))
+            else:
+                r = jnp.minimum(acc[dst], src.min(0))
+            state["acc"] = acc.at[dst].set(r, unique_indices=uniq,
+                                           indices_are_sorted=srt)
+        elif kind == "store":
+            _, tensor, n, has_mask, uniq, srt = e
+            base = nxt()
+            idx = nxt()
+            vals = jnp.clip(jax.lax.dynamic_slice_in_dim(
+                state["acc"], base, n, axis=0), -128, 127).astype(jnp.int8)
+            arr = state["tensors"][tensor]
+            flat = arr.reshape(-1)
+            if has_mask:
+                idx = jnp.where(nxt(), idx, flat.shape[0])   # OOB -> drop
+            state["tensors"][tensor] = flat.at[idx].set(
+                vals, mode="drop", unique_indices=uniq,
+                indices_are_sorted=srt).reshape(arr.shape)
+        elif kind == "spill":
+            _, uniq, srt = e
+            src = nxt()
+            dst = nxt()
+            vals = jnp.clip(state["acc"][src], -128, 127).astype(jnp.int8)
+            state["inp"] = state["inp"].at[dst].set(
+                vals, unique_indices=uniq, indices_are_sorted=srt)
+        else:
+            raise ValueError(kind)
+    assert ai == len(args), (ai, len(args))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(3,))
+def _run_chunk(spec, gemm_impl, args, state):
+    """One jit-compiled block, vmapped over the leading batch axis of every
+    state leaf. Donating ``state`` lets XLA update the scratchpads and DRAM
+    tensors in place across the chunk chain."""
+    def body(st):
+        _exec_entries(spec, args, st, gemm_impl)
+        return st
+    return jax.vmap(body)(state)
+
+
+
+# ---------------------------------------------------------------------------
+# The backend object
+# ---------------------------------------------------------------------------
+class JaxBackend:
+    """``jax.jit``-compiled, ``vmap``-batched executor of the lowered trace.
+
+    ``gemm_impl``: None -> ``default_gemm_impl()`` (einsum on CPU, Pallas on
+    accelerators, REPRO_FSIM_PALLAS=1 forces Pallas-interpret on CPU).
+    """
+
+    name = "jax"
+
+    def __init__(self, gemm_impl: Optional[str] = None, chunk_cap: int = 24):
+        self.gemm_impl = gemm_impl or default_gemm_impl()
+        self.chunk_cap = chunk_cap
+        enable_persistent_cache()
+
+    # -- core loop ---------------------------------------------------------
+    def _execute(self, trace: Trace, hw: VTAConfig, tensors: dict) -> dict:
+        """``tensors``: every DRAM tensor with a leading batch axis N."""
+        n = next(iter(tensors.values())).shape[0]
+        inp_depth, BV, BI, wgt_depth, BO, acc_depth = _geom_of(hw)
+        state = {"inp": jnp.zeros((n, inp_depth, BV, BI), jnp.int8),
+                 "wgt": jnp.zeros((n, wgt_depth, BO, BI), jnp.int8),
+                 "acc": jnp.zeros((n, acc_depth, BV, BO), jnp.int32),
+                 "tensors": {k: jnp.asarray(v) for k, v in tensors.items()}}
+        for cspec, cargs in _chunks(_spec_of(trace), self.chunk_cap):
+            state = _run_chunk(cspec, self.gemm_impl, cargs, state)
+        return {t: state["tensors"][t] for t in trace.tensors_written}
+
+    # -- Backend protocol --------------------------------------------------
+    def run(self, prog: Program, hw: VTAConfig, dram: dict) -> None:
+        shapes = {k: np.asarray(v).shape for k, v in dram.items()}
+        trace = lower(prog, hw, shapes)
+        outs = self._execute(trace, hw,
+                             {k: np.asarray(v)[None] for k, v in dram.items()})
+        for name, val in outs.items():
+            dram[name][...] = np.asarray(val)[0]
+
+    def run_batched(self, prog: Program, hw: VTAConfig, *, shared: dict,
+                    batched: dict) -> dict:
+        n = next(iter(batched.values())).shape[0]
+        shapes = {k: np.asarray(v).shape for k, v in shared.items()}
+        shapes.update({k: np.asarray(v).shape[1:] for k, v in batched.items()})
+        trace = lower(prog, hw, shapes)
+        tensors = {k: np.broadcast_to(np.asarray(v)[None],
+                                      (n,) + np.asarray(v).shape)
+                   for k, v in shared.items()}
+        tensors.update(batched)
+        outs = self._execute(trace, hw, tensors)
+        return {k: np.asarray(v) for k, v in outs.items()}
+
+    # -- divergence debugging (vta/trace.py) -------------------------------
+    def run_stepped(self, prog: Program, hw: VTAConfig, dram: dict,
+                    hook) -> None:
+        """Execute one instruction at a time (each op is its own singleton
+        chunk — cached like any other), calling ``hook(step, insn, state)``
+        after each; ``state`` exposes numpy ``inp``/``wgt``/``acc``/``uop``
+        snapshots shaped like the numpy FSim's, so vta/trace.py can digest
+        both backends identically."""
+        shapes = {k: np.asarray(v).shape for k, v in dram.items()}
+        trace = lower(prog, hw, shapes)
+        inp_depth, BV, BI, wgt_depth, BO, acc_depth = _geom_of(hw)
+        state = {"inp": jnp.zeros((1, inp_depth, BV, BI), jnp.int8),
+                 "wgt": jnp.zeros((1, wgt_depth, BO, BI), jnp.int8),
+                 "acc": jnp.zeros((1, acc_depth, BV, BO), jnp.int32),
+                 "tensors": {k: jnp.asarray(v)[None]
+                             for k, v in dram.items()}}
+        uop = np.zeros((hw.uop_depth, 3), np.int64)
+
+        class _View:
+            pass
+
+        for step, (insn, op) in enumerate(zip(trace.insns, trace.ops)):
+            if isinstance(op, UopLoad):
+                uop[op.base:op.base + len(op.values)] = op.values
+            elif op is not None:
+                mini = Trace(hw=hw, insns=[insn], ops=[op], touches=[])
+                for cspec, cargs in _chunks(_spec_of(mini), self.chunk_cap):
+                    state = _run_chunk(cspec, self.gemm_impl, cargs, state)
+            if hook is not None:
+                view = _View()
+                view.inp = np.asarray(state["inp"])[0]
+                view.wgt = np.asarray(state["wgt"])[0]
+                view.acc = np.asarray(state["acc"])[0]
+                view.uop = uop
+                hook(step, insn, view)
+        for name in trace.tensors_written:
+            dram[name][...] = np.asarray(state["tensors"][name])[0]

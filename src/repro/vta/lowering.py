@@ -1,0 +1,502 @@
+"""Lower a Program into a flat, typed tensor-op trace (the backend IR).
+
+The instruction stream the scheduler emits is *architectural*: loads and
+stores carry stringly-typed ``meta`` dicts describing the DRAM-side tensor
+slice, GEMM/ALU instructions index a uop scratchpad whose contents depend on
+the uop loads that executed before them. Historically every consumer
+re-interpreted those metas independently — ``fsim`` to execute them,
+``scheduler.insn_dram_bytes`` to bill them, the graph compiler's resid/spill
+paths to special-case them. This module is the single lowering point:
+
+  * the **uop buffer is resolved statically** — lowering replays the uop
+    loads in program order, so every GEMM/ALU op in the trace carries fully
+    materialized scratchpad index vectors and no backend needs uop state;
+  * every data load/store becomes a **gather/scatter with explicit flat
+    index maps** into the named DRAM tensor (padding = a mask + fill value,
+    clamped edges = a mask that drops lanes), so a backend is just "apply
+    this index arithmetic" — numpy fancy-indexing (``fsim``) and
+    ``jax.jit``-compiled XLA gathers (``fsim_jax``) execute the *same*
+    trace and must agree bit for bit;
+  * every op declares the **scratchpad ranges it reads and writes**
+    (``Touch``), which drives ``run_tsim``'s RAW/WAW hazard checker and the
+    trace-divergence tooling (vta/trace.py).
+
+``lower`` needs the DRAM tensor shapes (they are runtime inputs, not part of
+the Program); ``lower_ranges`` computes only the per-instruction Touch list
+and needs no shapes — that is the cheap pass tsim's hazard checker uses.
+
+``insn_dram_bytes`` lives here as the canonical DRAM-traffic accounting
+(scheduler/tsim import it), so the widening-load and on-chip-spill rules are
+stated exactly once.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.vta.isa import (AluInsn, AluOp, Buffer, GemmInsn, LoadInsn,
+                           StoreInsn, VTAConfig)
+from repro.vta.runtime import Program
+
+# f32 accumulation of int8·int8 products is exact while every partial sum
+# stays below 2^24: products are <= 127*128 < 2^14, so blocks of up to 2^10
+# contraction terms are safe (2^10 * 2^14 = 2^24). Shared by every backend
+# (and the numpy oracle) that contracts int8 operands through f32 matmuls —
+# the bit-exactness contract depends on all of them agreeing on this bound.
+F32_EXACT_TERMS = 1024
+
+
+# ---------------------------------------------------------------------------
+# DRAM traffic accounting (single source of truth; scheduler/tsim import it)
+# ---------------------------------------------------------------------------
+def insn_dram_bytes(insn, hw: VTAConfig) -> int:
+    """Bytes this instruction moves over the DRAM interface."""
+    if isinstance(insn, LoadInsn):
+        per_tile = {Buffer.INP: hw.inp_tile_bytes, Buffer.WGT: hw.wgt_tile_bytes,
+                    Buffer.ACC: hw.acc_tile_bytes, Buffer.UOP: hw.uop_bytes,
+                    Buffer.OUT: hw.out_tile_bytes}[insn.buffer]
+        if insn.buffer == Buffer.ACC and getattr(insn, "meta", {}).get("kind") in \
+                ("dw_patch", "resid"):
+            per_tile = hw.batch * hw.block_out * hw.inp_bytes  # widening load
+        return insn.dram_tiles() * per_tile
+    if isinstance(insn, StoreInsn):
+        if insn.on_chip:
+            return 0        # scratchpad spill: no DRAM traffic at all
+        return insn.tiles() * hw.out_tile_bytes
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# Typed trace ops
+# ---------------------------------------------------------------------------
+@dataclass
+class TraceOp:
+    step: int                        # index into Program.order
+
+
+@dataclass
+class UopLoad(TraceOp):
+    """Uop-buffer refill. Backends need no uop state (GEMM/ALU indices are
+    resolved at lowering time); the numpy fsim still materializes the buffer
+    so state digests cover it."""
+    base: int = 0
+    values: np.ndarray = None        # (n, 3) resolved uop rows
+
+
+@dataclass
+class GatherLoad(TraceOp):
+    """DRAM -> scratchpad: ``buf[base:base+n] = dram[tensor].flat[index]``
+    with ``fill`` where ``mask`` is False (hardware padding)."""
+    buffer: Buffer = Buffer.INP
+    tensor: str = ""
+    base: int = 0
+    index: np.ndarray = None         # (n, R, C) int32 flat indices
+    mask: Optional[np.ndarray] = None  # bool, False -> fill
+    fill: int = 0
+    dram_bytes: int = 0
+
+
+@dataclass
+class GemmOp(TraceOp):
+    acc_idx: np.ndarray = None       # (iters,) flat scratchpad indices
+    inp_idx: np.ndarray = None
+    wgt_idx: np.ndarray = None
+    reset: bool = False
+
+
+@dataclass
+class AluStepOp:
+    """One uop of an ALU macro-op, vectorized over the lp0 x lp1 grid.
+    Steps execute in sequence (batched vectors may chain through a shared
+    destination, e.g. the depthwise MAC accumulation)."""
+    dst: np.ndarray                  # (g,) acc indices
+    src: Optional[np.ndarray]        # (g,) acc indices, None for imm-only ops
+    src2: int = -1                   # MAC latched operand address
+
+
+@dataclass
+class AluSweep(TraceOp):
+    alu_op: AluOp = AluOp.ADD
+    use_imm: bool = False
+    imm: int = 0
+    overwrite: bool = False
+    steps: list = field(default_factory=list)   # [AluStepOp]
+
+
+@dataclass
+class ScatterStore(TraceOp):
+    """Narrow acc rows to int8 and scatter into the DRAM tensor:
+    ``dram[tensor].flat[index] = clip(acc[base:base+n])`` where mask holds
+    (False lanes are clamped edge positions and are dropped)."""
+    tensor: str = ""
+    base: int = 0
+    index: np.ndarray = None         # (n, BV, BO) int32 flat indices
+    mask: Optional[np.ndarray] = None
+    dram_bytes: int = 0
+
+
+@dataclass
+class SpillStore(TraceOp):
+    """On-chip spill: narrowed acc rows land in the INP scratchpad in the
+    consumer's layout (row-level index maps, no DRAM traffic)."""
+    src: np.ndarray = None           # (n,) acc row indices
+    dst: np.ndarray = None           # (n,) inp row indices
+
+
+@dataclass
+class Touch:
+    """Scratchpad ranges one instruction reads/writes: {buffer: (lo, hi)}."""
+    reads: tuple = ()                # ((Buffer, lo, hi), ...)
+    writes: tuple = ()
+
+
+@dataclass
+class Trace:
+    hw: VTAConfig
+    insns: list                      # Program.order (parallel to ops)
+    ops: list                        # TraceOp | None (FINISH / no-op)
+    touches: list                    # Touch per instruction
+    tensors_read: tuple = ()
+    tensors_written: tuple = ()
+
+
+# ---------------------------------------------------------------------------
+# Index-map builders (one per meta kind; the only place metas are decoded)
+# ---------------------------------------------------------------------------
+def _strides(shape) -> list:
+    st = [1] * len(shape)
+    for i in range(len(shape) - 2, -1, -1):
+        st[i] = st[i + 1] * shape[i + 1]
+    return st
+
+
+def _ax(a: np.ndarray, axis: int, ndim: int) -> np.ndarray:
+    """Reshape a 1-D array so it broadcasts along ``axis`` of an ndim grid."""
+    shape = [1] * ndim
+    shape[axis] = len(a)
+    return a.reshape(shape)
+
+
+def _load_default_tensor(kind: str) -> str:
+    return {"inp": "inp", "wgt": "wgt", "bias": "bias", "dw_patch": "inp",
+            "dw_wgt": "dw_wgt", "resid": None}[kind]
+
+
+def _gather_index(insn: LoadInsn, hw: VTAConfig, shape):
+    """(index, mask, fill) for a data load; index is (n, R, C) into the
+    flattened DRAM tensor, mask is None when every lane is in bounds."""
+    meta = insn.meta
+    kind = meta["kind"]
+    BV, BI, BO = hw.batch, hw.block_in, hw.block_out
+    if kind == "inp":
+        B, C, H, W = shape
+        sB, sC, sH, sW = _strides(shape)
+        tb, tci, ih, iw = meta["tb"], meta["tci"], meta["ih"], meta["iw"]
+        y = meta["y0"] + np.arange(ih)
+        x = meta["x0"] + np.arange(iw)
+        idx = (_ax((meta["b0"] + np.arange(tb)) * BV, 0, 6)
+               + _ax(np.arange(BV), 4, 6)) * sB \
+            + (_ax((meta["ci0"] + np.arange(tci)) * BI, 1, 6)
+               + _ax(np.arange(BI), 5, 6)) * sC \
+            + _ax(np.clip(y, 0, H - 1), 2, 6) * sH \
+            + _ax(np.clip(x, 0, W - 1), 3, 6) * sW
+        valid = _ax((y >= 0) & (y < H), 2, 6) & _ax((x >= 0) & (x < W), 3, 6)
+        n = tb * tci * ih * iw
+        mask = None if valid.all() else \
+            np.broadcast_to(valid, idx.shape).reshape(n, BV, BI)
+        return idx.reshape(n, BV, BI), mask, 0
+    if kind == "wgt":
+        sF, sC, sKH, sKW = _strides(shape)
+        tco, tci, kh, kw = meta["tco"], meta["tci"], meta["kh"], meta["kw"]
+        idx = (_ax((meta["co0"] + np.arange(tco)) * BO, 0, 6)
+               + _ax(np.arange(BO), 4, 6)) * sF \
+            + (_ax((meta["ci0"] + np.arange(tci)) * BI, 1, 6)
+               + _ax(np.arange(BI), 5, 6)) * sC \
+            + _ax(np.arange(kh), 2, 6) * sKH \
+            + _ax(np.arange(kw), 3, 6) * sKW
+        return idx.reshape(tco * tci * kh * kw, BO, BI), None, 0
+    if kind == "bias":
+        tb, tco = meta["tb"], meta["tco"]
+        idx = _ax(np.zeros(tb, np.int64), 0, 4) \
+            + _ax((meta["co0"] + np.arange(tco)) * BO, 1, 4) \
+            + _ax(np.zeros(BV, np.int64), 2, 4) + _ax(np.arange(BO), 3, 4)
+        return np.broadcast_to(idx, (tb, tco, BV, BO)) \
+            .reshape(tb * tco, BV, BO).copy(), None, 0
+    if kind == "dw_patch":
+        B, C, H, W = shape
+        sB, sC, sH, sW = _strides(shape)
+        ih, iw = meta["ih"], meta["iw"]
+        y = meta["y0"] + np.arange(ih)
+        x = meta["x0"] + np.arange(iw)
+        idx = (meta["b0"] * BV + _ax(np.arange(BV), 2, 4)) * sB \
+            + (meta["c0"] * BO + _ax(np.arange(BO), 3, 4)) * sC \
+            + _ax(np.clip(y, 0, H - 1), 0, 4) * sH \
+            + _ax(np.clip(x, 0, W - 1), 1, 4) * sW
+        valid = _ax((y >= 0) & (y < H), 0, 4) & _ax((x >= 0) & (x < W), 1, 4)
+        n = ih * iw
+        mask = None if valid.all() else \
+            np.broadcast_to(valid, idx.shape).reshape(n, BV, BO)
+        return idx.reshape(n, BV, BO), mask, meta.get("pad_value", 0)
+    if kind == "resid":
+        sB, sC, sH, sW = _strides(shape)
+        tb, tco, th, tw = meta["tb"], meta["tco"], meta["th"], meta["tw"]
+        idx = (_ax((meta["b0"] + np.arange(tb)) * BV, 0, 6)
+               + _ax(np.arange(BV), 4, 6)) * sB \
+            + (_ax((meta["co0"] + np.arange(tco)) * BO, 1, 6)
+               + _ax(np.arange(BO), 5, 6)) * sC \
+            + _ax(meta["y0"] + np.arange(th), 2, 6) * sH \
+            + _ax(meta["x0"] + np.arange(tw), 3, 6) * sW
+        return idx.reshape(tb * tco * th * tw, BV, BO), None, 0
+    if kind == "dw_wgt":
+        sC, sKH, sKW = _strides(shape)
+        kh, kw = meta["kh"], meta["kw"]
+        idx = (meta["c0"] * BO + _ax(np.arange(BO), 3, 4)) * sC \
+            + _ax(np.arange(kh), 0, 4) * sKH + _ax(np.arange(kw), 1, 4) * sKW
+        idx = idx + _ax(np.zeros(BV, np.int64), 2, 4)
+        return np.broadcast_to(idx, (kh, kw, BV, BO)) \
+            .reshape(kh * kw, BV, BO).copy(), None, 0
+    raise ValueError(kind)
+
+
+def _scatter_index(insn: StoreInsn, hw: VTAConfig, shape):
+    """(index, mask) for a DRAM store (n, BV, BO)."""
+    meta = insn.meta
+    BV, BO = hw.batch, hw.block_out
+    if meta["kind"] == "out":
+        sB, sC, sH, sW = _strides(shape)
+        tb, tco, th, tw = meta["tb"], meta["tco"], meta["th"], meta["tw"]
+        idx = (_ax((meta["b0"] + np.arange(tb)) * BV, 0, 6)
+               + _ax(np.arange(BV), 4, 6)) * sB \
+            + (_ax((meta["co0"] + np.arange(tco)) * BO, 1, 6)
+               + _ax(np.arange(BO), 5, 6)) * sC \
+            + _ax(meta["y0"] + np.arange(th), 2, 6) * sH \
+            + _ax(meta["x0"] + np.arange(tw), 3, 6) * sW
+        return idx.reshape(tb * tco * th * tw, BV, BO), None
+    if meta["kind"] == "dw_out":
+        B, C, OH, OW = shape
+        sB, sC, sH, sW = _strides(shape)
+        th, tw = meta["th"], meta["tw"]
+        y = meta["y0"] + np.arange(th)
+        x = meta["x0"] + np.arange(tw)
+        idx = (meta["b0"] * BV + _ax(np.arange(BV), 2, 4)) * sB \
+            + (meta["c0"] * BO + _ax(np.arange(BO), 3, 4)) * sC \
+            + _ax(np.clip(y, 0, OH - 1), 0, 4) * sH \
+            + _ax(np.clip(x, 0, OW - 1), 1, 4) * sW
+        valid = _ax(y < OH, 0, 4) & _ax(x < OW, 1, 4)
+        n = th * tw
+        mask = None if valid.all() else \
+            np.broadcast_to(valid, idx.shape).reshape(n, BV, BO)
+        return idx.reshape(n, BV, BO), mask
+    raise ValueError(meta["kind"])
+
+
+def _load_rows(insn: LoadInsn) -> int:
+    """Scratchpad entries a data load writes (its sram footprint)."""
+    meta = getattr(insn, "meta", None)
+    if meta is None:
+        return insn.tiles()
+    if meta["kind"] == "inp":
+        return meta["tb"] * meta["tci"] * meta["ih"] * meta["iw"]
+    return insn.tiles()
+
+
+# ---------------------------------------------------------------------------
+# GEMM / ALU index resolution (uop buffer replayed statically)
+# ---------------------------------------------------------------------------
+def _gemm_indices(insn: GemmInsn, uops: np.ndarray):
+    l0 = np.arange(insn.lp0)[:, None, None]
+    l1 = np.arange(insn.lp1)[None, :, None]
+    out = []
+    for col, f0, f1 in ((0, insn.acc_f0, insn.acc_f1),
+                        (1, insn.inp_f0, insn.inp_f1),
+                        (2, insn.wgt_f0, insn.wgt_f1)):
+        out.append((uops[None, None, :, col] + l0 * f0 + l1 * f1)
+                   .reshape(-1).astype(np.int32))
+    return out
+
+
+def _alu_steps(insn: AluInsn, uops: np.ndarray) -> list:
+    l0 = np.arange(insn.lp0)[:, None]
+    l1 = np.arange(insn.lp1)[None, :]
+    dst_g = (l0 * insn.dst_f0 + l1 * insn.dst_f1).reshape(-1)
+    src_g = (l0 * insn.src_f0 + l1 * insn.src_f1).reshape(-1)
+    steps = []
+    for (a, i, w) in uops:
+        if insn.alu_op == AluOp.MAC:
+            steps.append(AluStepOp(dst=(int(a) + dst_g).astype(np.int32),
+                                   src=(int(i) + src_g).astype(np.int32),
+                                   src2=int(w)))
+        elif insn.use_imm:
+            steps.append(AluStepOp(dst=(int(a) + dst_g).astype(np.int32),
+                                   src=None))
+        else:
+            steps.append(AluStepOp(dst=(int(a) + dst_g).astype(np.int32),
+                                   src=(int(i) + src_g).astype(np.int32)))
+    return steps
+
+
+def _env(lo: int, hi: int, f0: int, f1: int, lp0: int, lp1: int):
+    """[lo, hi) envelope swept by base range + the lp0 x lp1 factor grid.
+    Factors are encode-checked non-negative, so the extremes are corners."""
+    return lo, hi + (lp0 - 1) * f0 + (lp1 - 1) * f1
+
+
+def _touch_of(insn, hw: VTAConfig, uops: Optional[np.ndarray]) -> Touch:
+    if isinstance(insn, LoadInsn):
+        if insn.buffer == Buffer.UOP:
+            return Touch(writes=((Buffer.UOP, insn.sram_base,
+                                  insn.sram_base + insn.x_size),))
+        n = _load_rows(insn)
+        return Touch(writes=((insn.buffer, insn.sram_base,
+                              insn.sram_base + n),))
+    if isinstance(insn, StoreInsn):
+        n = insn.tiles()
+        reads = ((Buffer.ACC, insn.sram_base, insn.sram_base + n),)
+        if insn.on_chip:
+            dst, stride = insn.meta["dst"], insn.meta["dst_stride"]
+            hi = dst + (insn.y_size - 1) * stride + insn.x_size
+            return Touch(reads=reads, writes=((Buffer.INP, dst, hi),))
+        return Touch(reads=reads)
+    if isinstance(insn, GemmInsn):
+        a0, a1 = int(uops[:, 0].min()), int(uops[:, 0].max()) + 1
+        acc = (Buffer.ACC,) + _env(a0, a1, insn.acc_f0, insn.acc_f1,
+                                   insn.lp0, insn.lp1)
+        if insn.reset:
+            return Touch(writes=(acc,))
+        i0, i1 = int(uops[:, 1].min()), int(uops[:, 1].max()) + 1
+        w0, w1 = int(uops[:, 2].min()), int(uops[:, 2].max()) + 1
+        return Touch(
+            reads=((Buffer.INP,) + _env(i0, i1, insn.inp_f0, insn.inp_f1,
+                                        insn.lp0, insn.lp1),
+                   (Buffer.WGT,) + _env(w0, w1, insn.wgt_f0, insn.wgt_f1,
+                                        insn.lp0, insn.lp1),
+                   acc),            # accumulate: read-modify-write
+            writes=(acc,))
+    if isinstance(insn, AluInsn):
+        d0, d1 = int(uops[:, 0].min()), int(uops[:, 0].max()) + 1
+        dst = (Buffer.ACC,) + _env(d0, d1, insn.dst_f0, insn.dst_f1,
+                                   insn.lp0, insn.lp1)
+        reads = []
+        if insn.alu_op == AluOp.MAC or not insn.use_imm:
+            s0, s1 = int(uops[:, 1].min()), int(uops[:, 1].max()) + 1
+            reads.append((Buffer.ACC,) + _env(s0, s1, insn.src_f0,
+                                              insn.src_f1, insn.lp0, insn.lp1))
+        if insn.alu_op == AluOp.MAC:
+            reads.append((Buffer.ACC, int(uops[:, 2].min()),
+                          int(uops[:, 2].max()) + 1))
+        if not insn.overwrite:
+            reads.append(dst)
+        return Touch(reads=tuple(reads), writes=(dst,))
+    return Touch()
+
+
+# ---------------------------------------------------------------------------
+# The lowering passes
+# ---------------------------------------------------------------------------
+class _UopReplay:
+    """Static replay of the uop scratchpad across the instruction stream."""
+
+    def __init__(self, prog: Program, hw: VTAConfig):
+        self.buf = np.zeros((hw.uop_depth, 3), np.int64)
+        self.mem = np.array(
+            [(u.acc_idx, u.inp_idx, u.wgt_idx) for u in prog.uop_mem],
+            np.int64).reshape(-1, 3)
+
+    def load(self, insn: LoadInsn) -> np.ndarray:
+        n = insn.x_size
+        vals = self.mem[insn.dram_base:insn.dram_base + n]
+        self.buf[insn.sram_base:insn.sram_base + n] = vals
+        return vals
+
+    def window(self, bgn: int, end: int) -> np.ndarray:
+        return self.buf[bgn:end].copy()
+
+
+def lower(prog: Program, hw: VTAConfig, shapes: dict) -> Trace:
+    """Full lowering: Program + DRAM tensor shapes -> typed tensor-op trace.
+
+    ``shapes`` maps tensor names to array shapes (the dram dict's shapes);
+    only tensors the program actually touches need to be present.
+    """
+    replay = _UopReplay(prog, hw)
+    ops: list = []
+    touches: list = []
+    read, written = [], []
+
+    def shape_of(tensor: str):
+        if tensor not in shapes:
+            raise KeyError(f"program references DRAM tensor {tensor!r} "
+                           f"missing from dram dict (has {sorted(shapes)})")
+        return shapes[tensor]
+
+    for step, insn in enumerate(prog.order):
+        uops = None
+        if isinstance(insn, LoadInsn):
+            if insn.buffer == Buffer.UOP:
+                vals = replay.load(insn)
+                ops.append(UopLoad(step=step, base=insn.sram_base,
+                                   values=vals))
+            else:
+                meta = getattr(insn, "meta", None)
+                assert meta is not None, "data loads need meta"
+                tensor = meta.get("tensor") or _load_default_tensor(meta["kind"])
+                idx, mask, fill = _gather_index(insn, hw, shape_of(tensor))
+                if tensor not in read:
+                    read.append(tensor)
+                ops.append(GatherLoad(step=step, buffer=insn.buffer,
+                                      tensor=tensor, base=insn.sram_base,
+                                      index=idx.astype(np.int32), mask=mask,
+                                      fill=fill,
+                                      dram_bytes=insn_dram_bytes(insn, hw)))
+        elif isinstance(insn, GemmInsn):
+            uops = replay.window(insn.uop_bgn, insn.uop_end)
+            acc_i, inp_i, wgt_i = _gemm_indices(insn, uops)
+            ops.append(GemmOp(step=step, acc_idx=acc_i, inp_idx=inp_i,
+                              wgt_idx=wgt_i, reset=insn.reset))
+        elif isinstance(insn, AluInsn):
+            uops = replay.window(insn.uop_bgn, insn.uop_end)
+            ops.append(AluSweep(step=step, alu_op=insn.alu_op,
+                                use_imm=insn.use_imm, imm=insn.imm,
+                                overwrite=insn.overwrite,
+                                steps=_alu_steps(insn, uops)))
+        elif isinstance(insn, StoreInsn):
+            if insn.on_chip:
+                dst, stride = insn.meta["dst"], insn.meta["dst_stride"]
+                r = np.arange(insn.y_size)[:, None]
+                j = np.arange(insn.x_size)[None, :]
+                ops.append(SpillStore(
+                    step=step,
+                    src=(insn.sram_base + r * insn.x_size + j)
+                    .reshape(-1).astype(np.int32),
+                    dst=(dst + r * stride + j).reshape(-1).astype(np.int32)))
+            else:
+                tensor = insn.meta.get("tensor", "out")
+                idx, mask = _scatter_index(insn, hw, shape_of(tensor))
+                if tensor not in written:
+                    written.append(tensor)
+                ops.append(ScatterStore(step=step, tensor=tensor,
+                                        base=insn.sram_base,
+                                        index=idx.astype(np.int32), mask=mask,
+                                        dram_bytes=insn_dram_bytes(insn, hw)))
+        else:
+            ops.append(None)         # FINISH
+        touches.append(_touch_of(insn, hw, uops))
+    return Trace(hw=hw, insns=list(prog.order), ops=ops, touches=touches,
+                 tensors_read=tuple(read), tensors_written=tuple(written))
+
+
+def lower_ranges(prog: Program, hw: VTAConfig) -> list:
+    """Per-instruction scratchpad Touch list only (no DRAM shapes needed) —
+    the cheap pass behind ``run_tsim(check_hazards=True)``."""
+    replay = _UopReplay(prog, hw)
+    touches = []
+    for insn in prog.order:
+        uops = None
+        if isinstance(insn, LoadInsn) and insn.buffer == Buffer.UOP:
+            replay.load(insn)
+        elif isinstance(insn, (GemmInsn, AluInsn)):
+            uops = replay.window(insn.uop_bgn, insn.uop_end)
+        touches.append(_touch_of(insn, hw, uops))
+    return touches

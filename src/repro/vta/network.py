@@ -265,13 +265,18 @@ def run_network(name: str, layers: Union[Graph, list], hw: VTAConfig, *,
                 validate_encoding: bool = False,
                 tiling_fn=None, layer_cache: Optional[dict] = None,
                 fusion: bool = True, residency: bool = True,
-                tuner=None) -> NetworkReport:
+                tuner=None, backend: Optional[str] = None) -> NetworkReport:
     """Compile + tsim a network. ``layers`` may be a Graph (graph compiler:
     fused segments, scratchpad residency) or a list of Layers (strict
     per-layer path). With ``layer_cache`` (any mutable mapping), identical
     layer shapes — and identical fused segments — reuse prior tsim results;
     repeat blocks dominate deep ResNets. ``tuner`` (vta/autotune.LayerTuner)
-    replaces the heuristic tilings with tsim-searched ones per layer."""
+    replaces the heuristic tilings with tsim-searched ones per layer;
+    ``backend`` (vta/backend.py registry name) selects the execution
+    backend its winner verification runs on — every backend is bit-exact
+    by contract, so results are identical and only wall-clock changes."""
+    if backend is not None and tuner is not None:
+        tuner = tuner.with_backend(backend)
     report = NetworkReport(name=name, hw=hw)
     segments = _as_segments(layers, hw, prefer_db=prefer_db,
                             dedup_loads=dedup_loads, fusion=fusion,

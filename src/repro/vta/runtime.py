@@ -129,38 +129,54 @@ class UopAllocator:
 def finalize(tasks: list[Task], hw: VTAConfig, n_ctx: int = 1) -> Program:
     """Assign dependency bits and produce the global instruction order.
 
-    Token protocol per task t (synchronizing with task t-n_ctx on the same
-    scratchpad halves):
-      load[0]        pop_next   (compute of t-n_ctx released inp/wgt half)
+    Token protocol per task t, synchronizing with the *previous task in the
+    same virtual-thread context* — the task whose scratchpad regions t
+    reuses. For strictly-alternating schedules that is exactly task
+    t - n_ctx (the classic VTA pattern); for runs of same-context tasks
+    (e.g. a conv's reduction loop reusing one inp/wgt half per step) it is
+    task t - 1, which the old fixed-distance protocol left unsynchronized —
+    a scratchpad WAR race that ``run_tsim(check_hazards=True)`` now catches:
+      load[0]        pop_next   (prev same-ctx compute released inp/wgt half)
       load[-1]       push_next  (data ready for compute)
       compute[0]     pop_prev   (consume load token)
-      compute[last_use] push_prev (release inp/wgt half to load of t+n_ctx)
+      compute[-1]    push_prev  (release inp/wgt half to the next same-ctx
+                                 task's loads)
       compute[-1]    push_next  (result ready for store)
-      compute[0]     pop_next   (store of t-n_ctx freed the out half)
+      compute[0]     pop_next   (prev same-ctx store freed the acc half)
       store[0]       pop_prev ; store[-1] push_prev
+
+    Release tokens are tracked per context as pending counters so pushes
+    and pops stay balanced even when tasks lack loads or stores (reduction
+    steps store nothing; their first compute still consumes the pending
+    store release so it cannot clobber an acc half that is mid-store).
     """
     order: list = []
-    for t, task in enumerate(tasks):
+    load_rel: dict = {}      # ctx -> pending compute->load half releases
+    store_rel: dict = {}     # ctx -> pending store->compute half releases
+    for task in tasks:
+        ctx = task.ctx
         has_loads = bool(task.loads)
         has_stores = bool(task.stores)
-        prior = t - n_ctx >= 0
-        prior_task = tasks[t - n_ctx] if prior else None
         if has_loads:
-            if prior and prior_task.loads:
+            if load_rel.get(ctx, 0) > 0:
                 task.loads[0].pop_next = True       # wait compute release
+                load_rel[ctx] -= 1
             task.loads[-1].push_next = True
         if task.computes:
             if has_loads:
                 task.computes[0].pop_prev = True
-            if prior and prior_task.stores and has_stores:
-                task.computes[0].pop_next = True    # out half freed by store
+            if store_rel.get(ctx, 0) > 0:
+                task.computes[0].pop_next = True    # acc half freed by store
+                store_rel[ctx] -= 1
             if has_loads:
                 task.computes[-1].push_prev = True  # release inp/wgt half
+                load_rel[ctx] = load_rel.get(ctx, 0) + 1
             if has_stores:
                 task.computes[-1].push_next = True
         if has_stores:
             task.stores[0].pop_prev = True
             task.stores[-1].push_prev = True
+            store_rel[ctx] = store_rel.get(ctx, 0) + 1
         order.extend(task.loads)
         order.extend(task.computes)
         order.extend(task.stores)

@@ -57,6 +57,7 @@ from typing import Optional
 from repro.core.tps import ConvWorkload, Tiling
 from repro.vta.isa import (PAD_BITS, AluInsn, AluOp, Buffer, GemmInsn,
                            LoadInsn, Op, StoreInsn, Uop, VTAConfig)
+from repro.vta.lowering import insn_dram_bytes as insn_dram_bytes
 from repro.vta.runtime import Program, Task, UopAllocator, finalize
 
 INT8_MIN = -128
@@ -214,23 +215,25 @@ def emit_conv_tasks(wl: ConvWorkload, t: Tiling, hw: VTAConfig,
         units = [[o] for o in outer]
 
     merged = dedup_loads and t.double_buffered
-    for ui, unit in enumerate(units):
+
+    def unit_state(ui: int, unit: list) -> tuple:
         ctx = ui % n_ctx
         # Buffer policy:
         #  * normal: every buffer split in ctx halves (classic virtual threads)
-        #  * merged (dedup): the *shared* operand alternates halves (that's the
-        #    paper's I1/I2), while the pair's two distinct chunks of the other
-        #    operand occupy the full buffer (W1,W2 resident side by side); acc
-        #    holds both sub-results. WAR between consecutive pairs on the
-        #    full-buffer regions is closed by the t-2 token sync (see tsim).
-        if merged:
-            inp_base0 = (ctx * inp_half) if t.oc_n == 2 else 0
-            wgt_base0 = 0 if t.oc_n == 2 else (ctx * wgt_half)
-            acc_base0 = 0
-        else:
-            inp_base0 = ctx * inp_half
-            wgt_base0 = ctx * wgt_half
-            acc_base0 = ctx * acc_half
+        #  * merged (dedup): the pair's two subs run as the two virtual
+        #    threads (ctx = sub index). The *shared* operand is loaded once
+        #    per (pair, reduction step) by ctx0's task and read by both
+        #    contexts' GEMMs — that is the paper's reordered access pattern
+        #    (I1,W1),(I1,W2),(I2,W1),(I2,W2) — alternating the two halves of
+        #    its scratchpad by reduction-step parity so the next step's load
+        #    never clobbers the chunk the other context is still reading
+        #    (the cross-context read itself is ordered by the serial compute
+        #    queue). The non-shared operand and acc use classic per-context
+        #    halves, so every region has exactly one loading context and the
+        #    same-ctx release tokens (runtime.finalize) close all reuse.
+        inp_base0 = ctx * inp_half
+        wgt_base0 = ctx * wgt_half
+        acc_base0 = ctx * acc_half
         # distinct operand keys within the unit (shared ones load once)
         inp_keys: list[tuple] = []
         wgt_keys: list[tuple] = []
@@ -243,145 +246,186 @@ def emit_conv_tasks(wl: ConvWorkload, t: Tiling, hw: VTAConfig,
             if wk not in wgt_keys:
                 wgt_keys.append(wk)
             subs.append((bo, ho, wo, coo, inp_keys.index(ik), wgt_keys.index(wk)))
+        if resident_in is None:
+            assert n_inp * (1 if merged else len(inp_keys)) <= inp_half, \
+                "inp tiles exceed half"
+        assert n_wgt * (1 if merged else len(wgt_keys)) <= wgt_half, \
+            "wgt tiles exceed half"
+        assert acc_per_sub * (1 if merged else len(subs)) <= acc_half
+        return (ctx, ui, inp_base0, wgt_base0, acc_base0, inp_keys,
+                wgt_keys, subs)
+
+    def emit_unit_task(state: tuple, r: int) -> None:
+        (ctx, ui, inp_base0, wgt_base0, acc_base0, inp_keys, wgt_keys,
+         subs) = state
+        # merged units run their two subs as the two virtual threads; the
+        # shared operand's scratchpad halves alternate by reduction-step
+        # parity (see the buffer-policy comment in unit_state)
+        shared_inp = merged and t.oc_n == 2
+        sp = (ui * t.tci_o + r) % 2
         if merged:
-            if resident_in is None:
-                assert len(inp_keys) * n_inp <= \
-                    (inp_half if t.oc_n == 2 else hw.inp_depth - inp_reserve)
-            assert len(wgt_keys) * n_wgt <= (hw.wgt_depth if t.oc_n == 2 else wgt_half)
-            assert len(subs) * acc_per_sub <= hw.acc_depth
+            unit_tasks = [Task(ctx=si) for si in range(len(subs))]
         else:
-            if resident_in is None:
-                assert len(inp_keys) * n_inp <= inp_half, "inp tiles exceed half"
-            assert len(wgt_keys) * n_wgt <= wgt_half, "wgt tiles exceed half"
-            assert len(subs) * acc_per_sub <= acc_half
-
-        for r in range(t.tci_o):
-            task = Task(ctx=ctx)
-            # ---- loads ----
-            if resident_in is None:
-                for ii, (bo, ho, wo) in enumerate(inp_keys):
-                    y0 = ho * th_i * wl.sh - wl.ph
-                    x0 = wo * tw_i * wl.sw - wl.pw
-                    ypad0 = max(0, -y0)
-                    ypad1 = max(0, y0 + ih_i - wl.h)
-                    xpad0 = max(0, -x0)
-                    xpad1 = max(0, x0 + iw_i - wl.w)
-                    ld = LoadInsn(
-                        op=Op.LOAD, buffer=Buffer.INP,
-                        sram_base=inp_base0 + ii * n_inp,
-                        dram_base=ui % (1 << 20),
-                        y_size=ih_i - ypad0 - ypad1, x_size=iw_i - xpad0 - xpad1,
-                        x_stride=max(1, wl.w),
-                        y_pad0=min(15, ypad0), y_pad1=min(15, ypad1),
-                        x_pad0=min(15, xpad0), x_pad1=min(15, xpad1))
-                    ld.meta = {"kind": "inp", "b0": bo * tb_i, "tb": tb_i,
-                               "ci0": r * tci_i, "tci": tci_i,
-                               "y0": y0, "x0": x0, "ih": ih_i, "iw": iw_i}
-                    if tname("inp"):
-                        ld.meta["tensor"] = tname("inp")
-                    task.loads.append(ld)
-            for wi_, (coo,) in enumerate(wgt_keys):
+            unit_tasks = [Task(ctx=ctx)]
+        task = unit_tasks[0]
+        # ---- loads ----
+        if resident_in is None:
+            for ii, (bo, ho, wo) in enumerate(inp_keys):
+                if merged:
+                    tgt = unit_tasks[0] if shared_inp else unit_tasks[ii]
+                    base = (sp if shared_inp else ii) * inp_half
+                else:
+                    tgt, base = task, inp_base0 + ii * n_inp
+                y0 = ho * th_i * wl.sh - wl.ph
+                x0 = wo * tw_i * wl.sw - wl.pw
+                ypad0 = max(0, -y0)
+                ypad1 = max(0, y0 + ih_i - wl.h)
+                xpad0 = max(0, -x0)
+                xpad1 = max(0, x0 + iw_i - wl.w)
                 ld = LoadInsn(
-                    op=Op.LOAD, buffer=Buffer.WGT,
-                    sram_base=wgt_base0 + wi_ * n_wgt,
+                    op=Op.LOAD, buffer=Buffer.INP,
+                    sram_base=base,
                     dram_base=ui % (1 << 20),
-                    y_size=tco_i, x_size=tci_i * wl.kh * wl.kw,
-                    x_stride=max(1, di * wl.kh * wl.kw))
-                ld.meta = {"kind": "wgt", "co0": coo * tco_i, "tco": tco_i,
+                    y_size=ih_i - ypad0 - ypad1, x_size=iw_i - xpad0 - xpad1,
+                    x_stride=max(1, wl.w),
+                    y_pad0=min(15, ypad0), y_pad1=min(15, ypad1),
+                    x_pad0=min(15, xpad0), x_pad1=min(15, xpad1))
+                ld.meta = {"kind": "inp", "b0": bo * tb_i, "tb": tb_i,
                            "ci0": r * tci_i, "tci": tci_i,
-                           "kh": wl.kh, "kw": wl.kw}
-                if tname("wgt"):
-                    ld.meta["tensor"] = tname("wgt")
-                task.loads.append(ld)
+                           "y0": y0, "x0": x0, "ih": ih_i, "iw": iw_i}
+                if tname("inp"):
+                    ld.meta["tensor"] = tname("inp")
+                tgt.loads.append(ld)
+        for wi_, (coo,) in enumerate(wgt_keys):
+            if merged:
+                tgt = unit_tasks[wi_] if shared_inp else unit_tasks[0]
+                base = (wi_ if shared_inp else sp) * wgt_half
+            else:
+                tgt, base = task, wgt_base0 + wi_ * n_wgt
+            ld = LoadInsn(
+                op=Op.LOAD, buffer=Buffer.WGT,
+                sram_base=base,
+                dram_base=ui % (1 << 20),
+                y_size=tco_i, x_size=tci_i * wl.kh * wl.kw,
+                x_stride=max(1, di * wl.kh * wl.kw))
+            ld.meta = {"kind": "wgt", "co0": coo * tco_i, "tco": tco_i,
+                       "ci0": r * tci_i, "tci": tci_i,
+                       "kh": wl.kh, "kw": wl.kw}
+            if tname("wgt"):
+                ld.meta["tensor"] = tname("wgt")
+            tgt.loads.append(ld)
 
-            # ---- computes (per sub-iteration) ----
-            for si, (bo, ho, wo, coo, ik, wk) in enumerate(subs):
+        # ---- computes (per sub-iteration) ----
+        for si, (bo, ho, wo, coo, ik, wk) in enumerate(subs):
+            if merged:
+                task = unit_tasks[si]
+                acc_base = si * acc_half
+                inp_base = (sp if shared_inp else ik) * inp_half
+                wgt_base = (wk if shared_inp else sp) * wgt_half
+            else:
                 acc_base = acc_base0 + si * acc_per_sub
-                bias_base = acc_base + n_acc
-                skip_base = bias_base + (tb_i * tco_i if bias else 0)
-                inp_base = resident_in if resident_in is not None \
-                    else inp_base0 + ik * n_inp
+                inp_base = inp_base0 + ik * n_inp
                 wgt_base = wgt_base0 + wk * n_wgt
-                if r == 0:
-                    if bias:
-                        ld = LoadInsn(op=Op.LOAD, buffer=Buffer.ACC,
-                                      sram_base=bias_base, dram_base=0,
-                                      y_size=1, x_size=tb_i * tco_i,
-                                      x_stride=tb_i * tco_i)
-                        ld.meta = {"kind": "bias", "co0": coo * tco_i,
-                                   "tco": tco_i, "tb": tb_i}
-                        if tname("bias"):
-                            ld.meta["tensor"] = tname("bias")
-                        task.computes.append(ld)
-                    emit_compute(task, acc_uops(acc_base),
-                                 lambda b, e: GemmInsn(op=Op.GEMM, reset=True,
-                                                       uop_bgn=b, uop_end=e,
-                                                       lp0=th_i, lp1=tw_i,
-                                                       acc_f0=tw_i, acc_f1=1))
-                seq = gemm_uops(inp_base, wgt_base, acc_base)
-                emit_compute(task, seq, lambda b, e: GemmInsn(
-                    op=Op.GEMM, uop_bgn=b, uop_end=e, lp0=th_i, lp1=tw_i,
-                    acc_f0=tw_i, acc_f1=1,
-                    inp_f0=wl.sh * iw_i, inp_f1=wl.sw))
+            bias_base = acc_base + n_acc
+            skip_base = bias_base + (tb_i * tco_i if bias else 0)
+            if resident_in is not None:
+                inp_base = resident_in
+            if r == 0:
+                if bias:
+                    ld = LoadInsn(op=Op.LOAD, buffer=Buffer.ACC,
+                                  sram_base=bias_base, dram_base=0,
+                                  y_size=1, x_size=tb_i * tco_i,
+                                  x_stride=tb_i * tco_i)
+                    ld.meta = {"kind": "bias", "co0": coo * tco_i,
+                               "tco": tco_i, "tb": tb_i}
+                    if tname("bias"):
+                        ld.meta["tensor"] = tname("bias")
+                    task.computes.append(ld)
+                emit_compute(task, acc_uops(acc_base),
+                             lambda b, e: GemmInsn(op=Op.GEMM, reset=True,
+                                                   uop_bgn=b, uop_end=e,
+                                                   lp0=th_i, lp1=tw_i,
+                                                   acc_f0=tw_i, acc_f1=1))
+            seq = gemm_uops(inp_base, wgt_base, acc_base)
+            emit_compute(task, seq, lambda b, e: GemmInsn(
+                op=Op.GEMM, uop_bgn=b, uop_end=e, lp0=th_i, lp1=tw_i,
+                acc_f0=tw_i, acc_f1=1,
+                inp_f0=wl.sh * iw_i, inp_f1=wl.sw))
 
-                if r == t.tci_o - 1:
-                    if bias:
-                        emit_compute(task, acc_uops(acc_base, bias_base),
-                                     lambda b, e: AluInsn(
-                                         op=Op.ALU, alu_op=AluOp.ADD,
-                                         uop_bgn=b, uop_end=e,
-                                         lp0=th_i, lp1=tw_i,
-                                         dst_f0=tw_i, dst_f1=1,
-                                         src_f0=0, src_f1=0))
-                    _emit_post_ops(task, emit_compute, acc_uops(acc_base),
-                                   th_i, tw_i, post_op)
-                    if fuse_add is not None:
-                        # residual add against the resident output tile:
-                        # ACC-load the skip tile, ALU ADD, re-clip (the add
-                        # node's clip) — replaces a whole DRAM pass.
-                        ld = LoadInsn(op=Op.LOAD, buffer=Buffer.ACC,
-                                      sram_base=skip_base,
-                                      dram_base=ui % (1 << 20),
-                                      y_size=tb_i * tco_i, x_size=th_i * tw_i,
-                                      x_stride=max(1, oh * ow))
-                        ld.meta = {"kind": "resid", "tensor": fuse_add,
-                                   "b0": bo * tb_i, "tb": tb_i,
-                                   "co0": coo * tco_i, "tco": tco_i,
-                                   "y0": ho * th_i, "th": th_i,
-                                   "x0": wo * tw_i, "tw": tw_i}
-                        task.computes.append(ld)
-                        emit_compute(
-                            task,
-                            acc_uops(acc_base, skip_base,
-                                     src_stride=th_i * tw_i),
-                            lambda b, e: AluInsn(op=Op.ALU, alu_op=AluOp.ADD,
-                                                 uop_bgn=b, uop_end=e,
-                                                 lp0=th_i, lp1=tw_i,
-                                                 dst_f0=tw_i, dst_f1=1,
-                                                 src_f0=tw_i, src_f1=1))
-                        emit_compute(
-                            task, acc_uops(acc_base),
-                            lambda b, e: AluInsn(op=Op.ALU, alu_op=AluOp.CLIP,
-                                                 uop_bgn=b, uop_end=e,
-                                                 lp0=th_i, lp1=tw_i,
-                                                 dst_f0=tw_i, dst_f1=1,
-                                                 src_f0=tw_i, src_f1=1,
-                                                 use_imm=True, imm=127))
-                    st = StoreInsn(op=Op.STORE, sram_base=acc_base,
-                                   dram_base=ui % (1 << 20),
-                                   y_size=tb_i * tco_i, x_size=th_i * tw_i,
-                                   x_stride=max(1, oh * ow))
-                    st.meta = {"kind": "out", "b0": bo * tb_i, "tb": tb_i,
+            if r == t.tci_o - 1:
+                if bias:
+                    emit_compute(task, acc_uops(acc_base, bias_base),
+                                 lambda b, e: AluInsn(
+                                     op=Op.ALU, alu_op=AluOp.ADD,
+                                     uop_bgn=b, uop_end=e,
+                                     lp0=th_i, lp1=tw_i,
+                                     dst_f0=tw_i, dst_f1=1,
+                                     src_f0=0, src_f1=0))
+                _emit_post_ops(task, emit_compute, acc_uops(acc_base),
+                               th_i, tw_i, post_op)
+                if fuse_add is not None:
+                    # residual add against the resident output tile:
+                    # ACC-load the skip tile, ALU ADD, re-clip (the add
+                    # node's clip) — replaces a whole DRAM pass.
+                    ld = LoadInsn(op=Op.LOAD, buffer=Buffer.ACC,
+                                  sram_base=skip_base,
+                                  dram_base=ui % (1 << 20),
+                                  y_size=tb_i * tco_i, x_size=th_i * tw_i,
+                                  x_stride=max(1, oh * ow))
+                    ld.meta = {"kind": "resid", "tensor": fuse_add,
+                               "b0": bo * tb_i, "tb": tb_i,
                                "co0": coo * tco_i, "tco": tco_i,
                                "y0": ho * th_i, "th": th_i,
                                "x0": wo * tw_i, "tw": tw_i}
-                    if tname("out"):
-                        st.meta["tensor"] = tname("out")
-                    if resident_out is not None:
-                        _spill(st, resident_out + coo * tco_i * oh * ow,
-                               oh * ow)
-                    task.stores.append(st)
-            tasks.append(task)
+                    task.computes.append(ld)
+                    emit_compute(
+                        task,
+                        acc_uops(acc_base, skip_base,
+                                 src_stride=th_i * tw_i),
+                        lambda b, e: AluInsn(op=Op.ALU, alu_op=AluOp.ADD,
+                                             uop_bgn=b, uop_end=e,
+                                             lp0=th_i, lp1=tw_i,
+                                             dst_f0=tw_i, dst_f1=1,
+                                             src_f0=tw_i, src_f1=1))
+                    emit_compute(
+                        task, acc_uops(acc_base),
+                        lambda b, e: AluInsn(op=Op.ALU, alu_op=AluOp.CLIP,
+                                             uop_bgn=b, uop_end=e,
+                                             lp0=th_i, lp1=tw_i,
+                                             dst_f0=tw_i, dst_f1=1,
+                                             src_f0=tw_i, src_f1=1,
+                                             use_imm=True, imm=127))
+                st = StoreInsn(op=Op.STORE, sram_base=acc_base,
+                               dram_base=ui % (1 << 20),
+                               y_size=tb_i * tco_i, x_size=th_i * tw_i,
+                               x_stride=max(1, oh * ow))
+                st.meta = {"kind": "out", "b0": bo * tb_i, "tb": tb_i,
+                           "co0": coo * tco_i, "tco": tco_i,
+                           "y0": ho * th_i, "th": th_i,
+                           "x0": wo * tw_i, "tw": tw_i}
+                if tname("out"):
+                    st.meta["tensor"] = tname("out")
+                if resident_out is not None:
+                    _spill(st, resident_out + coo * tco_i * oh * ow,
+                           oh * ow)
+                task.stores.append(st)
+        tasks.extend(unit_tasks)
+
+    # Build tasks in final program order. Reduction steps (the tci_o loop)
+    # interleave across the group's n_ctx contexts — (u0,r0),(u1,r0),
+    # (u0,r1),(u1,r1),... — so that while one context's GEMM chews step r,
+    # the other context's loads stream step r in parallel. Each context's
+    # step-r+1 load still waits for its own step-r compute to release the
+    # half (finalize's same-ctx token), which is what makes the reuse of one
+    # inp/wgt half across the reduction loop hazard-free. Merged dedup units
+    # span both contexts themselves, so they form their own group.
+    group_n = 1 if merged else n_ctx
+    for g0 in range(0, len(units), group_n):
+        states = [unit_state(g0 + k, u)
+                  for k, u in enumerate(units[g0:g0 + group_n])]
+        for r in range(t.tci_o):
+            for state in states:
+                emit_unit_task(state, r)
     return n_ctx
 
 
@@ -961,24 +1005,10 @@ def emit_concat_tasks(shapes: list, hw: VTAConfig,
 
 
 # ---------------------------------------------------------------------------
-# DRAM traffic accounting (drives Fig 10/11 benches + tsim memory timing)
+# DRAM traffic accounting (drives Fig 10/11 benches + tsim memory timing).
+# The per-instruction rule (`insn_dram_bytes`, re-exported above) lives in
+# vta/lowering.py — the single point that interprets load/store metas.
 # ---------------------------------------------------------------------------
-def insn_dram_bytes(insn, hw: VTAConfig) -> int:
-    if isinstance(insn, LoadInsn):
-        per_tile = {Buffer.INP: hw.inp_tile_bytes, Buffer.WGT: hw.wgt_tile_bytes,
-                    Buffer.ACC: hw.acc_tile_bytes, Buffer.UOP: hw.uop_bytes,
-                    Buffer.OUT: hw.out_tile_bytes}[insn.buffer]
-        if insn.buffer == Buffer.ACC and getattr(insn, "meta", {}).get("kind") in \
-                ("dw_patch", "resid"):
-            per_tile = hw.batch * hw.block_out * hw.inp_bytes  # widening load
-        return insn.dram_tiles() * per_tile
-    if isinstance(insn, StoreInsn):
-        if insn.on_chip:
-            return 0        # scratchpad spill: no DRAM traffic at all
-        return insn.tiles() * hw.out_tile_bytes
-    return 0
-
-
 def program_dram_bytes(prog: Program, hw: VTAConfig) -> dict:
     out = {"inp": 0, "wgt": 0, "acc": 0, "uop": 0, "out": 0, "total": 0,
            "onchip": 0}

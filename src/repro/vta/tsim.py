@@ -23,11 +23,15 @@ from dataclasses import dataclass, field
 
 from repro.vta.isa import (AluInsn, Buffer, GemmInsn, LoadInsn,
                            StoreInsn, VTAConfig)
+from repro.vta.lowering import insn_dram_bytes, lower_ranges
 from repro.vta.runtime import Program
-from repro.vta.scheduler import insn_dram_bytes
 
 DECODE_OVERHEAD = 4   # fetch/decode cycles per instruction
 CMD_OVERHEAD = 4      # DMA command setup per load/store
+
+
+class HazardError(RuntimeError):
+    """A scratchpad RAW/WAW hazard the dependency tokens do not close."""
 
 
 @dataclass
@@ -85,8 +89,74 @@ def insn_cycles(insn, hw: VTAConfig) -> int:
     return DECODE_OVERHEAD
 
 
+def _ranges_conflict(a: tuple, b: tuple) -> bool:
+    """Do two (buffer, lo, hi) scratchpad ranges overlap?"""
+    return a[0] == b[0] and a[1] < b[2] and b[1] < a[2]
+
+
+def _benign_reload(prog: Program, touches: list, wi: int, yi: int,
+                   w: tuple, r: tuple) -> bool:
+    """A concurrent clobber is value-identical (and therefore not a data
+    hazard) when the writer is a LoadInsn re-fetching exactly the DRAM slice
+    that currently backs the overlapped region — e.g. merged dedup units
+    re-loading the same weight chunks into the shared full-buffer slots."""
+    writer = prog.order[wi]
+    if not isinstance(writer, LoadInsn):
+        return False
+    sect = (w[0], max(w[1], r[1]), min(w[2], r[2]))
+    for j in range(yi - 1, -1, -1):     # program-order backing write
+        for bw in touches[j].writes:
+            if _ranges_conflict(bw, sect):
+                backing = prog.order[j]
+                return (isinstance(backing, LoadInsn)
+                        and backing.buffer == writer.buffer
+                        and backing.sram_base == writer.sram_base
+                        and getattr(backing, "meta", None)
+                        == getattr(writer, "meta", None))
+    return False
+
+
+def _check_hazards(prog: Program, hw: VTAConfig, spans: list) -> None:
+    """Scratchpad RAW/WAW checking over the lowered ranges (vta/lowering.py).
+
+    Two instructions from *different* queues whose simulated busy intervals
+    overlap run concurrently — the dependency tokens impose no order between
+    them — so a write range of one overlapping a read or write range of the
+    other is a race the hardware could lose. Same-queue instructions
+    serialize and are never flagged; a load that re-fetches exactly the
+    bytes already backing the overlapped region is value-identical and
+    skipped (``_benign_reload``).
+    """
+    touches = lower_ranges(prog, hw)
+    active: list = []                   # (end, queue, order_idx)
+    for start, end, q, i in sorted(spans):
+        active = [a for a in active if a[0] > start]
+        for aend, aq, ai in active:
+            if aq == q:
+                continue
+            for xi, yi in ((i, ai), (ai, i)):
+                for w in touches[xi].writes:
+                    for r in touches[yi].reads + touches[yi].writes:
+                        if not _ranges_conflict(w, r):
+                            continue
+                        if _benign_reload(prog, touches, xi, yi, w, r):
+                            continue
+                        kind = "WAW" if r in touches[yi].writes else "RAW"
+                        raise HazardError(
+                            f"{kind} hazard on {w[0].name} scratchpad "
+                            f"[{w[1]}, {w[2]}): insn {xi} "
+                            f"({type(prog.order[xi]).__name__}) writes "
+                            f"while insn {yi} "
+                            f"({type(prog.order[yi]).__name__}) touches "
+                            f"[{r[1]}, {r[2]}) concurrently")
+        active.append((end, q, i))
+
+
 def run_tsim(prog: Program, hw: VTAConfig, *, check_hazards: bool = False) -> TsimResult:
     queues = prog.queues
+    if check_hazards:
+        pos = {id(insn): i for i, insn in enumerate(prog.order)}
+        spans = []                      # (start, end, queue, order_idx)
     names = ("load", "compute", "store")
     idx = {q: 0 for q in names}
     qtime = {q: 0 for q in names}
@@ -162,6 +232,8 @@ def run_tsim(prog: Program, hw: VTAConfig, *, check_hazards: bool = False) -> Ts
                     kind = ("gemm" if isinstance(insn, GemmInsn)
                             else "alu" if isinstance(insn, AluInsn) else "ctrl")
                 stall_cycles[q] += max(0, start - qtime[q])
+                if check_hazards:
+                    spans.append((start, end, q, pos[id(insn)]))
                 if end > start:
                     busy[q].append((start, end, kind))
                 qtime[q] = end
@@ -174,6 +246,8 @@ def run_tsim(prog: Program, hw: VTAConfig, *, check_hazards: bool = False) -> Ts
             raise RuntimeError(
                 f"tsim deadlock: queue {q} stuck at insn {idx[q]}/{len(queues[q])} "
                 f"({type(queues[q][idx[q]]).__name__})")
+    if check_hazards:
+        _check_hazards(prog, hw, spans)
     total = max(qtime.values())
     return TsimResult(total_cycles=total, busy=busy, counts=prog.counts(),
                       dram_bytes=total_dram, stalls=stall_cycles,
