@@ -12,7 +12,7 @@ import time
 
 from benchmarks import (bench_double_buffer, bench_end2end, bench_kernels,
                         bench_pareto, bench_pipelining, bench_roofline,
-                        bench_tps)
+                        bench_serve, bench_tps)
 
 BENCHES = {
     "pipelining": lambda quick: bench_pipelining.run(),
@@ -26,6 +26,11 @@ BENCHES = {
         nets=("resnet18", "mobilenet1.0") if quick
         else ("resnet18", "resnet34", "resnet50", "mobilenet1.0")),
     "kernels": lambda quick: bench_kernels.run(),
+    "serve": lambda quick: bench_serve.run(
+        scale="tiny" if quick else "small",
+        requests=48 if quick else 96,
+        poisson_requests=24 if quick else 48,
+        verify=4 if quick else 8),
 }
 
 

@@ -1,63 +1,254 @@
-"""Serving engine: prefill / decode step factories + a simple batched server.
+"""Serving engines: VTA continuous batching + the LM generation session.
 
-`serve_step` (decode) is what the assigned decode_32k / long_500k shapes
-lower: one new token against a seq_len-deep KV/state cache, cache donated to
-keep steady-state memory flat.
+Two serving front ends coexist here:
+
+* ``ServeSession`` (serve/session.py, re-exported) — the language-model
+  prefill/decode generation loop over ``repro.models``.
+
+* ``VTAServeEngine`` — the production path for the accelerator stack: an
+  async multi-tenant request queue feeding a continuous-batching scheduler
+  (serve/scheduler.py) that assembles dynamic batches per served model —
+  one (network, VTAConfig) pair — pads them to bucket sizes so XLA chunk
+  compiles are reused (vta/fsim_jax.py keys its cache on trace structure +
+  batch), and dispatches through ``Backend.run_batched``.
+
+The engine is deterministic by construction: its clock and its executor
+are both injected. Tests drive it with a ``FakeClock`` and a recording
+executor — every fairness/backpressure/deadline decision replays exactly,
+with no JAX in the loop. Production wires the ``SystemClock`` and a
+``BackendExecutor`` over the jax backend, optionally on a background
+thread (``start``/``stop``).
 """
 from __future__ import annotations
 
-import dataclasses
+import itertools
+import threading
+from typing import Callable, Optional, Union
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.models.registry import Model
+from repro.serve.clock import FakeClock, SystemClock
+from repro.serve.metrics import ServeMetrics
+from repro.serve.queues import REJECT_NEW, Request
+from repro.serve.scheduler import DEFAULT_BUCKETS, BatchPlan, BatchScheduler
+from repro.serve.session import (ServeSession, greedy_token,  # noqa: F401
+                                 make_decode_step, make_prefill_step)
 
-
-def make_prefill_step(model: Model):
-    def prefill_step(params, batch):
-        logits, caches = model.prefill(params, batch)
-        return logits[:, -1:], caches
-    return prefill_step
-
-
-def make_decode_step(model: Model):
-    def decode_step(params, batch, caches, pos):
-        logits, new_caches = model.decode(params, batch, caches, pos)
-        return logits, new_caches
-    return decode_step
+__all__ = ["ServeSession", "make_prefill_step", "make_decode_step",
+           "greedy_token", "Ticket", "BackendExecutor", "VTAServeEngine"]
 
 
-def greedy_token(logits):
-    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+class Ticket:
+    """Caller-facing handle for one submitted request."""
+
+    def __init__(self, request: Request):
+        self.request = request
+        self._done = threading.Event()
+        if request.status in ("rejected", "shed", "expired"):
+            self._done.set()
+
+    @property
+    def status(self) -> str:
+        return self.request.status
+
+    @property
+    def ok(self) -> bool:
+        return self.request.status == "done"
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def _resolve(self) -> None:
+        self._done.set()
+
+    def result(self, timeout: Optional[float] = None):
+        """Block until resolved; returns the output array or raises
+        ``RuntimeError`` naming the drop reason (queue_full / deadline)."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request {self.request.id} still pending")
+        if self.request.status != "done":
+            raise RuntimeError(f"request {self.request.id} "
+                               f"{self.request.status}: {self.request.error}")
+        return self.request.result
 
 
-@dataclasses.dataclass
-class ServeSession:
-    """Minimal batched generation loop over the jitted steps (CPU-testable)."""
-    model: Model
-    params: object
-    max_context: int = 256
+class BackendExecutor:
+    """The production executor: pads a batch to its bucket and runs it as
+    one ``run_batched`` dispatch on the configured backend. Pad slots are
+    zero images; their outputs are computed and discarded (the price of a
+    reused compile, measured by the occupancy metric)."""
 
-    def __post_init__(self):
-        self._prefill = jax.jit(make_prefill_step(self.model))
-        self._decode = jax.jit(make_decode_step(self.model), donate_argnums=(2,))
+    def __init__(self, models: dict, backend: str = "jax"):
+        self.models = models
+        self.backend = backend
 
-    def generate(self, tokens, n_steps: int):
-        """tokens: (B, S) prompt (or (B,K,S) for codebook models)."""
-        cfg = self.model.cfg
-        batch = {"tokens": tokens}
-        logits, caches = self._prefill(self.params, batch)
-        S = tokens.shape[-1]
-        out = []
-        cur = greedy_token(logits)
-        for step in range(n_steps):
-            if cfg.n_codebooks:
-                cur = cur.reshape(cur.shape[0], cfg.n_codebooks, 1)
-            elif cur.ndim == 2:
-                cur = cur[:, -1:]
-            out.append(cur)
-            logits, caches = self._decode(self.params, {"tokens": cur}, caches,
-                                          jnp.asarray(S + step, jnp.int32))
-            cur = greedy_token(logits)
-        return jnp.concatenate([o.reshape(o.shape[0], -1) for o in out], axis=-1)
+    def __call__(self, model_key: str, images: list, bucket: int) -> list:
+        model = self.models[model_key]
+        batch = np.zeros((bucket,) + model.image_shape, np.int8)
+        for i, img in enumerate(images):
+            batch[i] = img
+        outs = model.run_batch(batch, backend=self.backend)
+        return [np.asarray(outs[i]) for i in range(len(images))]
+
+
+class VTAServeEngine:
+    """Multi-tenant continuous-batching server over the VTA backends.
+
+    ``executor(model_key, images, bucket) -> [outputs]`` and ``clock`` are
+    injectable; defaults are ``BackendExecutor(models, backend)`` and the
+    system clock. ``submit`` is thread-safe; batch execution happens outside
+    the lock so submitters never block on the accelerator.
+    """
+
+    def __init__(self, models: Optional[dict] = None, *,
+                 backend: str = "jax",
+                 clock: Union[SystemClock, FakeClock, None] = None,
+                 executor: Optional[Callable] = None,
+                 buckets: tuple = DEFAULT_BUCKETS,
+                 queue_capacity: int = 64,
+                 shed_policy: str = REJECT_NEW,
+                 max_wait_s: float = 0.0,
+                 metrics: Optional[ServeMetrics] = None):
+        self.models = models or {}
+        self.clock = clock or SystemClock()
+        self.executor = executor if executor is not None \
+            else BackendExecutor(self.models, backend)
+        self.scheduler = BatchScheduler(buckets=buckets,
+                                        queue_capacity=queue_capacity,
+                                        shed_policy=shed_policy,
+                                        max_wait_s=max_wait_s)
+        self.metrics = metrics or ServeMetrics()
+        self._lock = threading.Lock()
+        self._ids = itertools.count()
+        self._tickets: dict = {}
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # ------------------------------------------------------------------
+    # tenants + submission
+    # ------------------------------------------------------------------
+    def add_tenant(self, name: str, *, weight: float = 1.0,
+                   capacity: Optional[int] = None) -> None:
+        with self._lock:
+            self.scheduler.add_tenant(name, weight=weight, capacity=capacity)
+
+    def submit(self, tenant: str, model: str, image: np.ndarray, *,
+               deadline_s: Optional[float] = None) -> Ticket:
+        """Enqueue one image. ``deadline_s`` is relative to now; a request
+        whose deadline passes while queued is dropped, never executed."""
+        if self.models and model not in self.models:
+            raise KeyError(f"unknown served model {model!r}; "
+                           f"known: {sorted(self.models)}")
+        with self._lock:
+            now = self.clock.now()
+            req = Request(id=next(self._ids), tenant=tenant, model=model,
+                          payload=image, arrival_t=now,
+                          deadline=None if deadline_s is None
+                          else now + deadline_s)
+            if self.metrics.started_at == 0.0:
+                self.metrics.started_at = now
+            self.metrics.on_submit(tenant)
+            adm = self.scheduler.submit(req, now)
+            ticket = Ticket(req)
+            self._tickets[req.id] = ticket
+            if not adm.accepted:
+                self.metrics.on_reject(tenant)
+            if adm.shed is not None:
+                self.metrics.on_shed(adm.shed.tenant)
+                self._finish(adm.shed)
+        return ticket
+
+    def pending(self) -> int:
+        with self._lock:
+            return self.scheduler.pending()
+
+    # ------------------------------------------------------------------
+    # the serving loop
+    # ------------------------------------------------------------------
+    def _finish(self, req: Request) -> None:
+        t = self._tickets.pop(req.id, None)
+        if t is not None:
+            t._resolve()
+
+    def step(self) -> bool:
+        """Assemble and execute at most one batch; False when nothing was
+        dispatchable (idle, or a partial batch is being held back)."""
+        with self._lock:
+            plan, expired = self.scheduler.next_batch(self.clock.now())
+            for req in expired:
+                self.metrics.on_expire(req.tenant)
+                self._finish(req)
+            if plan is None:
+                return False
+            t0 = self.clock.now()
+            for req in plan.requests:
+                req.status = "dispatched"
+                req.dispatch_t = t0
+        self._execute(plan, t0)
+        return True
+
+    def _execute(self, plan: BatchPlan, t0: float) -> None:
+        try:
+            outs = self.executor(plan.model,
+                                 [r.payload for r in plan.requests],
+                                 plan.bucket)
+        except Exception as e:                       # noqa: BLE001
+            with self._lock:
+                for req in plan.requests:
+                    req.status = "failed"
+                    req.error = repr(e)
+                    self._finish(req)
+            raise
+        t1 = self.clock.now()
+        with self._lock:
+            self.metrics.on_batch(plan.filled, plan.bucket, t1 - t0)
+            for req, out in zip(plan.requests, outs):
+                req.status = "done"
+                req.done_t = t1
+                req.result = out
+                self.metrics.on_complete(req.tenant,
+                                         req.dispatch_t - req.arrival_t,
+                                         t1 - req.arrival_t)
+                self.metrics.finished_at = t1
+                self._finish(req)
+
+    def drain(self, max_batches: int = 10_000) -> int:
+        """Serve until idle (or the safety cap); returns batches run. With
+        ``max_wait_s`` holdback and a FakeClock, advances the clock past the
+        holdback window instead of spinning."""
+        n = 0
+        while n < max_batches:
+            if self.step():
+                n += 1
+                continue
+            if self.pending() == 0:
+                break
+            # held-back partial batch: move time forward to its release
+            self.clock.sleep(max(self.scheduler.max_wait_s, 1e-4))
+        return n
+
+    # ------------------------------------------------------------------
+    # background driving (production)
+    # ------------------------------------------------------------------
+    def start(self, poll_interval_s: float = 0.001) -> None:
+        assert self._thread is None, "engine already started"
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                if not self.step():
+                    self.clock.sleep(poll_interval_s)
+
+        self._thread = threading.Thread(target=loop, name="vta-serve",
+                                        daemon=True)
+        self._thread.start()
+
+    def stop(self, drain: bool = True) -> None:
+        if self._thread is None:
+            return
+        if drain:
+            while self.pending() > 0:
+                self.clock.sleep(0.001)
+        self._stop.set()
+        self._thread.join()
+        self._thread = None

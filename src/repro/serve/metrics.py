@@ -1,0 +1,141 @@
+"""Serving metrics: per-request and per-batch counters + latency histograms.
+
+Purely in-memory and allocation-light: the engine records every completed
+request (queue wait, end-to-end latency, tenant) and every dispatched batch
+(occupancy, bucket, execution wall time); ``snapshot()`` reduces them to
+the report the benchmark and the CI smoke job consume (p50/p99 latency,
+batch occupancy, images/sec).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+def percentile(values: list, q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]); 0.0 on empty input."""
+    if not values:
+        return 0.0
+    s = sorted(values)
+    k = max(0, min(len(s) - 1, int(round(q / 100.0 * (len(s) - 1)))))
+    return float(s[k])
+
+
+@dataclass
+class Histogram:
+    values: list = field(default_factory=list)
+
+    def record(self, v: float) -> None:
+        self.values.append(float(v))
+
+    @property
+    def count(self) -> int:
+        return len(self.values)
+
+    @property
+    def mean(self) -> float:
+        return sum(self.values) / len(self.values) if self.values else 0.0
+
+    def p(self, q: float) -> float:
+        return percentile(self.values, q)
+
+    def summary(self) -> dict:
+        return {"count": self.count, "mean": round(self.mean, 6),
+                "p50": round(self.p(50), 6), "p99": round(self.p(99), 6),
+                "max": round(max(self.values), 6) if self.values else 0.0}
+
+
+@dataclass
+class TenantMetrics:
+    submitted: int = 0
+    completed: int = 0
+    rejected: int = 0            # bounded-queue admission refusals
+    shed: int = 0                # evicted by the shed_oldest policy
+    expired: int = 0             # deadline passed before dispatch
+    queue_wait: Histogram = field(default_factory=Histogram)
+    latency: Histogram = field(default_factory=Histogram)
+
+    def to_dict(self) -> dict:
+        return {"submitted": self.submitted, "completed": self.completed,
+                "rejected": self.rejected, "shed": self.shed,
+                "expired": self.expired,
+                "queue_wait_s": self.queue_wait.summary(),
+                "latency_s": self.latency.summary()}
+
+
+@dataclass
+class ServeMetrics:
+    """The engine-wide registry. All times in seconds on the engine clock."""
+    tenants: dict = field(default_factory=dict)    # name -> TenantMetrics
+    batches: int = 0
+    images: int = 0              # real requests dispatched (pad slots excluded)
+    padded_slots: int = 0
+    occupancy: Histogram = field(default_factory=Histogram)   # filled/bucket
+    batch_exec_s: Histogram = field(default_factory=Histogram)
+    started_at: float = 0.0
+    finished_at: float = 0.0
+
+    def tenant(self, name: str) -> TenantMetrics:
+        if name not in self.tenants:
+            self.tenants[name] = TenantMetrics()
+        return self.tenants[name]
+
+    # -- recording hooks (called by the engine) ----------------------------
+    def on_submit(self, tenant: str) -> None:
+        self.tenant(tenant).submitted += 1
+
+    def on_reject(self, tenant: str) -> None:
+        self.tenant(tenant).rejected += 1
+
+    def on_shed(self, tenant: str) -> None:
+        self.tenant(tenant).shed += 1
+
+    def on_expire(self, tenant: str) -> None:
+        self.tenant(tenant).expired += 1
+
+    def on_batch(self, filled: int, bucket: int, exec_s: float) -> None:
+        self.batches += 1
+        self.images += filled
+        self.padded_slots += bucket - filled
+        self.occupancy.record(filled / bucket)
+        self.batch_exec_s.record(exec_s)
+
+    def on_complete(self, tenant: str, queue_wait_s: float,
+                    latency_s: float) -> None:
+        t = self.tenant(tenant)
+        t.completed += 1
+        t.queue_wait.record(queue_wait_s)
+        t.latency.record(latency_s)
+
+    # -- reduction ---------------------------------------------------------
+    def _all(self, attr: str) -> list:
+        out: list = []
+        for t in self.tenants.values():
+            out.extend(getattr(t, attr).values)
+        return out
+
+    def snapshot(self) -> dict:
+        lat = self._all("latency")
+        wait = self._all("queue_wait")
+        wall = max(self.finished_at - self.started_at, 0.0)
+        done = sum(t.completed for t in self.tenants.values())
+        return {
+            "requests": {
+                "submitted": sum(t.submitted for t in self.tenants.values()),
+                "completed": done,
+                "rejected": sum(t.rejected for t in self.tenants.values()),
+                "shed": sum(t.shed for t in self.tenants.values()),
+                "expired": sum(t.expired for t in self.tenants.values()),
+            },
+            "latency_s": {"p50": round(percentile(lat, 50), 6),
+                          "p99": round(percentile(lat, 99), 6),
+                          "mean": round(sum(lat) / len(lat), 6) if lat else 0.0},
+            "queue_wait_s": {"p50": round(percentile(wait, 50), 6),
+                             "p99": round(percentile(wait, 99), 6)},
+            "batches": self.batches,
+            "images": self.images,
+            "padded_slots": self.padded_slots,
+            "batch_occupancy": round(self.occupancy.mean, 4),
+            "wall_s": round(wall, 6),
+            "images_per_sec": round(done / wall, 2) if wall > 0 else 0.0,
+            "per_tenant": {k: v.to_dict() for k, v in self.tenants.items()},
+        }

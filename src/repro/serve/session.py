@@ -1,0 +1,68 @@
+"""Token-generation serving: prefill / decode step factories + ServeSession.
+
+`serve_step` (decode) is what the assigned decode_32k / long_500k shapes
+lower: one new token against a seq_len-deep KV/state cache, cache donated to
+keep steady-state memory flat.
+
+This is the *language-model* half of serve/: batched greedy generation over
+the jitted prefill/decode steps of a ``repro.models`` Model. The VTA-side
+serving engine (continuous batching over the execution backends) lives in
+serve/engine.py; both are exported there.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        logits, caches = model.prefill(params, batch)
+        return logits[:, -1:], caches
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, batch, caches, pos):
+        logits, new_caches = model.decode(params, batch, caches, pos)
+        return logits, new_caches
+    return decode_step
+
+
+def greedy_token(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class ServeSession:
+    """Minimal batched generation loop over the jitted steps (CPU-testable)."""
+    model: Model
+    params: object
+    max_context: int = 256
+
+    def __post_init__(self):
+        self._prefill = jax.jit(make_prefill_step(self.model))
+        self._decode = jax.jit(make_decode_step(self.model), donate_argnums=(2,))
+
+    def generate(self, tokens, n_steps: int):
+        """tokens: (B, S) prompt (or (B,K,S) for codebook models)."""
+        cfg = self.model.cfg
+        batch = {"tokens": tokens}
+        logits, caches = self._prefill(self.params, batch)
+        S = tokens.shape[-1]
+        out = []
+        cur = greedy_token(logits)
+        for step in range(n_steps):
+            if cfg.n_codebooks:
+                cur = cur.reshape(cur.shape[0], cfg.n_codebooks, 1)
+            elif cur.ndim == 2:
+                cur = cur[:, -1:]
+            out.append(cur)
+            logits, caches = self._decode(self.params, {"tokens": cur}, caches,
+                                          jnp.asarray(S + step, jnp.int32))
+            cur = greedy_token(logits)
+        return jnp.concatenate([o.reshape(o.shape[0], -1) for o in out], axis=-1)

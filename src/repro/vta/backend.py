@@ -32,7 +32,7 @@ from typing import Callable, Dict, Protocol, Union, runtime_checkable
 import numpy as np
 
 from repro.vta.isa import VTAConfig
-from repro.vta.lowering import lower
+from repro.vta.lowering import lower_cached
 from repro.vta.runtime import Program
 
 
@@ -63,7 +63,8 @@ class NumpyBackend:
 
     def run(self, prog: Program, hw: VTAConfig, dram: dict) -> None:
         from repro.vta.fsim import FSim
-        FSim(hw, dram).run(prog)
+        shapes = {k: np.asarray(v).shape for k, v in dram.items()}
+        FSim(hw, dram).run(prog, trace=lower_cached(prog, hw, shapes))
 
     def run_batched(self, prog: Program, hw: VTAConfig, *, shared: dict,
                     batched: dict) -> dict:
@@ -71,7 +72,7 @@ class NumpyBackend:
         n = next(iter(batched.values())).shape[0]
         shapes = {k: np.asarray(v).shape for k, v in shared.items()}
         shapes.update({k: np.asarray(v).shape[1:] for k, v in batched.items()})
-        trace = lower(prog, hw, shapes)
+        trace = lower_cached(prog, hw, shapes)
         outs: dict = {t: [] for t in trace.tensors_written}
         for i in range(n):
             dram = dict(shared)

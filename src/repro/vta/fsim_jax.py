@@ -29,6 +29,7 @@ right shift, scatter-add with duplicate indices.
 """
 from __future__ import annotations
 
+import collections
 import functools
 import os
 from typing import Optional
@@ -40,7 +41,7 @@ import numpy as np
 from repro.vta.isa import AluOp, Buffer, VTAConfig
 from repro.vta.lowering import (F32_EXACT_TERMS, AluSweep, GatherLoad,
                                 GemmOp, ScatterStore, SpillStore, Trace,
-                                UopLoad, lower)
+                                UopLoad, lower_cached)
 from repro.vta.runtime import Program
 
 try:
@@ -312,6 +313,20 @@ def _scatter_hints(idx: np.ndarray) -> tuple:
     return bool((np.diff(s) > 0).all()), False
 
 
+def _spec_chunks(trace: Trace, cap: int) -> list:
+    """Chunked (spec, args) blocks for a trace, memoized on the Trace.
+
+    Serving replays one lowered trace per dispatch; spec construction is
+    pure numpy bookkeeping but shows up at high request rates, so cache the
+    chunk list alongside the trace (keyed by cap — backends may differ).
+    """
+    memo = trace.__dict__.setdefault("_spec_chunks", {})
+    hit = memo.get(cap)
+    if hit is None:
+        hit = memo[cap] = list(_chunks(_spec_of(trace), cap))
+    return hit
+
+
 def _chunks(pairs: list, cap: int = 24):
     """Split the op stream into jit-able blocks of up to ``cap`` ops.
 
@@ -469,15 +484,55 @@ def _exec_entries(spec: tuple, args: tuple, state: dict,
     assert ai == len(args), (ai, len(args))
 
 
+# ---------------------------------------------------------------------------
+# XLA trace accounting. The Python body of ``_run_chunk`` executes only when
+# ``jax.jit`` misses its cache — i.e. exactly once per XLA trace/compile — so
+# a plain counter keyed on the true cache identity (chunk spec, traced arg
+# shapes, batch size) is an exact compile-reuse regression hook: serving any
+# number of batches at a bucket size must leave every key at 1
+# (tests/test_serve.py). Wall-clock-free, persistent-cache-independent.
+# ---------------------------------------------------------------------------
+_XLA_TRACES: collections.Counter = collections.Counter()
+
+
+def _note_trace(spec, args, state) -> None:
+    n = state["acc"].shape[0]
+    sig = (hash(spec), tuple(np.shape(a) for a in args), int(n))
+    _XLA_TRACES[sig] += 1
+
+
+def reset_xla_trace_log() -> None:
+    _XLA_TRACES.clear()
+
+
+def xla_trace_log() -> dict:
+    """{(chunk-spec hash, arg shapes, batch): traces} since the last
+    ``reset_xla_trace_log``. Any value above 1 means a structurally known
+    chunk was re-traced — a compile-cache regression."""
+    return dict(_XLA_TRACES)
+
+
 @functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(3,))
 def _run_chunk(spec, gemm_impl, args, state):
-    """One jit-compiled block, vmapped over the leading batch axis of every
-    state leaf. Donating ``state`` lets XLA update the scratchpads and DRAM
-    tensors in place across the chunk chain."""
+    """One jit-compiled block, vmapped over the leading batch axis of the
+    scratchpads and per-image tensors. ``state["shared"]`` (weights/biases)
+    rides through with ``in_axes=None`` — vmap keeps gathers from unmapped
+    tensors unbatched, so weight loads run once per batch instead of once
+    per image. The shared/batched split is part of the jit cache key via
+    the state pytree structure. Donating ``state`` lets XLA update the
+    scratchpads and DRAM tensors in place across the chunk chain."""
+    _note_trace(spec, args, state)
+    axes = {"inp": 0, "wgt": 0, "acc": 0, "tensors": 0, "shared": None}
+
     def body(st):
-        _exec_entries(spec, args, st, gemm_impl)
-        return st
-    return jax.vmap(body)(state)
+        inner = {"inp": st["inp"], "wgt": st["wgt"], "acc": st["acc"],
+                 "tensors": {**st["tensors"], **st["shared"]}}
+        _exec_entries(spec, args, inner, gemm_impl)
+        return {"inp": inner["inp"], "wgt": inner["wgt"],
+                "acc": inner["acc"], "shared": st["shared"],
+                "tensors": {k: inner["tensors"][k] for k in st["tensors"]}}
+
+    return jax.vmap(body, in_axes=(axes,), out_axes=axes)(state)
 
 
 
@@ -499,22 +554,32 @@ class JaxBackend:
         enable_persistent_cache()
 
     # -- core loop ---------------------------------------------------------
-    def _execute(self, trace: Trace, hw: VTAConfig, tensors: dict) -> dict:
-        """``tensors``: every DRAM tensor with a leading batch axis N."""
-        n = next(iter(tensors.values())).shape[0]
+    def _execute(self, trace: Trace, hw: VTAConfig, batched: dict,
+                 shared: dict = None) -> dict:
+        """``batched``: DRAM tensors with a leading batch axis N; ``shared``:
+        single arrays every image reads (never stores into)."""
+        shared = shared or {}
+        assert not (set(trace.tensors_written) & set(shared)), \
+            "programs must not store into shared tensors"
+        n = next(iter(batched.values())).shape[0]
         inp_depth, BV, BI, wgt_depth, BO, acc_depth = _geom_of(hw)
+        # jnp.array (not asarray): the chunk chain donates `state`, and a
+        # zero-copy view of a caller-owned numpy buffer must never be
+        # donated — XLA would write through the alias into the caller's
+        # arrays (weights included), corrupting every later run
         state = {"inp": jnp.zeros((n, inp_depth, BV, BI), jnp.int8),
                  "wgt": jnp.zeros((n, wgt_depth, BO, BI), jnp.int8),
                  "acc": jnp.zeros((n, acc_depth, BV, BO), jnp.int32),
-                 "tensors": {k: jnp.asarray(v) for k, v in tensors.items()}}
-        for cspec, cargs in _chunks(_spec_of(trace), self.chunk_cap):
+                 "tensors": {k: jnp.array(v) for k, v in batched.items()},
+                 "shared": {k: jnp.array(v) for k, v in shared.items()}}
+        for cspec, cargs in _spec_chunks(trace, self.chunk_cap):
             state = _run_chunk(cspec, self.gemm_impl, cargs, state)
         return {t: state["tensors"][t] for t in trace.tensors_written}
 
     # -- Backend protocol --------------------------------------------------
     def run(self, prog: Program, hw: VTAConfig, dram: dict) -> None:
         shapes = {k: np.asarray(v).shape for k, v in dram.items()}
-        trace = lower(prog, hw, shapes)
+        trace = lower_cached(prog, hw, shapes)
         outs = self._execute(trace, hw,
                              {k: np.asarray(v)[None] for k, v in dram.items()})
         for name, val in outs.items():
@@ -522,15 +587,10 @@ class JaxBackend:
 
     def run_batched(self, prog: Program, hw: VTAConfig, *, shared: dict,
                     batched: dict) -> dict:
-        n = next(iter(batched.values())).shape[0]
         shapes = {k: np.asarray(v).shape for k, v in shared.items()}
         shapes.update({k: np.asarray(v).shape[1:] for k, v in batched.items()})
-        trace = lower(prog, hw, shapes)
-        tensors = {k: np.broadcast_to(np.asarray(v)[None],
-                                      (n,) + np.asarray(v).shape)
-                   for k, v in shared.items()}
-        tensors.update(batched)
-        outs = self._execute(trace, hw, tensors)
+        trace = lower_cached(prog, hw, shapes)
+        outs = self._execute(trace, hw, batched, shared)
         return {k: np.asarray(v) for k, v in outs.items()}
 
     # -- divergence debugging (vta/trace.py) -------------------------------
@@ -542,13 +602,14 @@ class JaxBackend:
         snapshots shaped like the numpy FSim's, so vta/trace.py can digest
         both backends identically."""
         shapes = {k: np.asarray(v).shape for k, v in dram.items()}
-        trace = lower(prog, hw, shapes)
+        trace = lower_cached(prog, hw, shapes)
         inp_depth, BV, BI, wgt_depth, BO, acc_depth = _geom_of(hw)
         state = {"inp": jnp.zeros((1, inp_depth, BV, BI), jnp.int8),
                  "wgt": jnp.zeros((1, wgt_depth, BO, BI), jnp.int8),
                  "acc": jnp.zeros((1, acc_depth, BV, BO), jnp.int32),
-                 "tensors": {k: jnp.asarray(v)[None]
-                             for k, v in dram.items()}}
+                 "tensors": {k: jnp.array(np.asarray(v)[None])
+                             for k, v in dram.items()},
+                 "shared": {}}
         uop = np.zeros((hw.uop_depth, 3), np.int64)
 
         class _View:

@@ -487,6 +487,24 @@ def lower(prog: Program, hw: VTAConfig, shapes: dict) -> Trace:
                  tensors_read=tuple(read), tensors_written=tuple(written))
 
 
+def lower_cached(prog: Program, hw: VTAConfig, shapes: dict) -> Trace:
+    """``lower``, memoized on the Program object per (hw, relevant shapes).
+
+    Serving dispatches the same Program thousands of times with a handful
+    of distinct shape sets (one per batch bucket's tensor layout — the
+    per-image shapes, not the batch size, so usually exactly one); paying
+    index-map construction once per distinct set keeps lowering off the
+    dispatch hot path. The cache lives on the Program instance itself, so
+    it dies with the program and never aliases across programs.
+    """
+    memo = prog.__dict__.setdefault("_lowered", {})
+    key = (hw, tuple(sorted((t, tuple(s)) for t, s in shapes.items())))
+    hit = memo.get(key)
+    if hit is None:
+        hit = memo[key] = lower(prog, hw, shapes)
+    return hit
+
+
 def lower_ranges(prog: Program, hw: VTAConfig) -> list:
     """Per-instruction scratchpad Touch list only (no DRAM shapes needed) —
     the cheap pass behind ``run_tsim(check_hazards=True)``."""

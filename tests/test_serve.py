@@ -1,0 +1,357 @@
+"""Serving engine tests: deterministic scheduling + end-to-end equivalence.
+
+Three layers, cheapest first:
+
+* pure scheduler tests (no engine, no JAX): fairness, shedding, deadlines,
+  bucket selection, partial-batch holdback — all driven by explicit `now`
+  values so every decision replays exactly;
+* engine tests with a FakeClock and a recording executor: ticket lifecycle,
+  backpressure surfaced to callers, metrics timing;
+* backend-equivalence tests over the real served models: every request
+  routed through the batch assembler must be bit-identical to batch-1
+  numpy execution, and XLA must trace each (chunk-spec, bucket) at most
+  once (counted by the fsim_jax trace log — no wall-clock).
+"""
+import numpy as np
+import pytest
+
+from repro.serve.clock import FakeClock
+from repro.serve.engine import VTAServeEngine
+from repro.serve.model import list_served_models, served_model
+from repro.serve.queues import REJECT_NEW, SHED_OLDEST, Request
+from repro.serve.scheduler import BatchScheduler
+
+from _hyp import given, settings, st
+
+# ---------------------------------------------------------------------------
+# scheduler unit tests (no engine, no backends)
+# ---------------------------------------------------------------------------
+
+
+def _req(i, tenant, model="m", t=0.0, deadline=None):
+    return Request(id=i, tenant=tenant, model=model, payload=f"p{i}",
+                   arrival_t=t, deadline=deadline)
+
+
+def _drain_plans(sched, now=0.0, cap=100):
+    plans = []
+    while True:
+        plan, _ = sched.next_batch(now)
+        if plan is None or len(plans) >= cap:
+            return plans
+        plans.append(plan)
+
+
+def test_no_tenant_starves_under_asymmetric_load():
+    """A flooding tenant cannot lock a light tenant out: with equal weights
+    every assembled batch serves the light tenant while it has work."""
+    sched = BatchScheduler(buckets=(1, 2, 4))
+    ids = iter(range(1000))
+    for _ in range(32):
+        sched.submit(_req(next(ids), "flood"), 0.0)
+    for _ in range(4):
+        sched.submit(_req(next(ids), "light"), 0.0)
+    plans = _drain_plans(sched)
+    assert sum(p.filled for p in plans) == 36
+    light_left = 4
+    for p in plans:
+        n_light = sum(1 for r in p.requests if r.tenant == "light")
+        if light_left > 0:
+            assert n_light >= 1, "light tenant starved by flood"
+        light_left -= n_light
+    assert light_left == 0
+
+
+def test_weighted_fair_share():
+    """Weights 3:1 → dispatch slots split ~3:1 while both are backlogged."""
+    sched = BatchScheduler(buckets=(4,))
+    sched.add_tenant("a", weight=3.0)
+    sched.add_tenant("b", weight=1.0)
+    ids = iter(range(1000))
+    for _ in range(30):
+        sched.submit(_req(next(ids), "a"), 0.0)
+        sched.submit(_req(next(ids), "b"), 0.0)
+    picked = [r.tenant for p in _drain_plans(sched, cap=5) for r in p.requests]
+    assert len(picked) == 20
+    assert 14 <= picked.count("a") <= 16   # ~3/4 of 20 slots
+    assert picked.count("b") == 20 - picked.count("a")
+
+
+def test_rejoining_tenant_does_not_hoard_credit():
+    """A lane idle through many dispatches re-joins at the current virtual
+    time: it shares the next batch instead of monopolizing it."""
+    sched = BatchScheduler(buckets=(4,))
+    ids = iter(range(1000))
+    for _ in range(12):
+        sched.submit(_req(next(ids), "a"), 0.0)
+    for _ in range(3):
+        plan, _ = sched.next_batch(0.0)
+        assert [r.tenant for r in plan.requests] == ["a"] * 4
+    for _ in range(8):                     # b arrives late with a backlog
+        sched.submit(_req(next(ids), "a"), 0.0)
+        sched.submit(_req(next(ids), "b"), 0.0)
+    plan, _ = sched.next_batch(0.0)
+    tenants = [r.tenant for r in plan.requests]
+    assert tenants.count("b") == 2, tenants   # alternates, not all-b
+
+
+def test_deterministic_replay():
+    """Same submissions + same clock → identical dispatch order."""
+    def run():
+        sched = BatchScheduler(buckets=(1, 2, 4))
+        sched.add_tenant("a", weight=2.0)
+        sched.add_tenant("b", weight=1.0)
+        for i in range(13):
+            sched.submit(_req(i, "ab"[i % 2], model="mn"[i % 3 == 0]), 0.0)
+        return [(p.model, [r.id for r in p.requests], p.bucket)
+                for p in _drain_plans(sched)]
+    assert run() == run()
+
+
+def test_bounded_queue_sheds_instead_of_growing():
+    sched = BatchScheduler(buckets=(4,), queue_capacity=3,
+                           shed_policy=SHED_OLDEST)
+    admits = [sched.submit(_req(i, "a"), 0.0) for i in range(5)]
+    assert all(a.accepted for a in admits)
+    victims = [a.shed for a in admits if a.shed is not None]
+    assert [v.id for v in victims] == [0, 1]
+    assert all(v.status == "shed" for v in victims)
+    assert sched.pending() == 3            # bounded: never grew past capacity
+
+
+def test_bounded_queue_rejects_new():
+    sched = BatchScheduler(buckets=(4,), queue_capacity=3,
+                           shed_policy=REJECT_NEW)
+    admits = [sched.submit(_req(i, "a"), 0.0) for i in range(5)]
+    assert [a.accepted for a in admits] == [True] * 3 + [False] * 2
+    assert all(a.reason == "queue_full" for a in admits[3:])
+    assert sched.pending() == 3
+
+
+def test_expired_requests_never_dispatched():
+    sched = BatchScheduler(buckets=(1, 2, 4))
+    sched.submit(_req(0, "a", deadline=5.0), 0.0)
+    sched.submit(_req(1, "a", deadline=50.0), 0.0)
+    sched.submit(_req(2, "a"), 0.0)
+    plan, expired = sched.next_batch(10.0)   # deadline 5.0 already passed
+    assert [r.id for r in expired] == [0]
+    assert expired[0].status == "expired"
+    assert sorted(r.id for r in plan.requests) == [1, 2]
+    # admission-time check: an already-expired request is refused outright
+    adm = sched.submit(_req(3, "a", deadline=9.0), 10.0)
+    assert not adm.accepted and adm.reason == "deadline_expired"
+
+
+def test_bucket_padding_and_holdback():
+    sched = BatchScheduler(buckets=(1, 2, 4, 8), max_wait_s=1.0)
+    for i in range(2):
+        sched.submit(_req(i, "a", t=0.0), 0.0)
+    plan, _ = sched.next_batch(0.5)
+    assert plan is None                    # partial batch held back
+    plan, _ = sched.next_batch(1.5)        # holdback window elapsed
+    assert plan.filled == 2 and plan.bucket == 2
+    # a full max-bucket backlog is never held back
+    for i in range(8):
+        sched.submit(_req(10 + i, "a", t=2.0), 2.0)
+    plan, _ = sched.next_batch(2.0)
+    assert plan.filled == 8 and plan.bucket == 8
+    # 5 pending → fills 5, pads to the 8-bucket
+    for i in range(5):
+        sched.submit(_req(20 + i, "a", t=3.0), 3.0)
+    plan, _ = sched.next_batch(99.0)
+    assert plan.filled == 5 and plan.bucket == 8
+
+
+def test_batches_are_single_model():
+    sched = BatchScheduler(buckets=(8,))
+    for i in range(6):
+        sched.submit(_req(i, "a", model="mn"[i % 2]), 0.0)
+    for plan in _drain_plans(sched):
+        assert len({r.model for r in plan.requests}) == 1
+
+
+# ---------------------------------------------------------------------------
+# engine tests: FakeClock + recording executor (no JAX)
+# ---------------------------------------------------------------------------
+
+
+class RecordingExecutor:
+    """Echoes payloads back as results; optionally burns fake time."""
+
+    def __init__(self, clock=None, exec_s=0.0):
+        self.clock, self.exec_s = clock, exec_s
+        self.calls = []
+
+    def __call__(self, model, images, bucket):
+        self.calls.append((model, list(images), bucket))
+        if self.clock is not None and self.exec_s:
+            self.clock.advance(self.exec_s)
+        return [f"out:{p}" for p in images]
+
+
+def _fake_engine(**kw):
+    clock = FakeClock()
+    fx = RecordingExecutor(clock, kw.pop("exec_s", 0.0))
+    eng = VTAServeEngine(clock=clock, executor=fx, **kw)
+    return eng, clock, fx
+
+
+def test_engine_ticket_lifecycle():
+    eng, _, fx = _fake_engine(buckets=(1, 2, 4))
+    tks = [eng.submit("a", "m", f"img{i}") for i in range(3)]
+    assert all(not t.done() for t in tks)
+    assert eng.drain() == 1
+    assert all(t.ok and t.result() == f"out:img{i}"
+               for i, t in enumerate(tks))
+    assert fx.calls == [("m", ["img0", "img1", "img2"], 4)]
+    snap = eng.metrics.snapshot()
+    assert snap["padded_slots"] == 1 and snap["batch_occupancy"] == 0.75
+
+
+def test_engine_backpressure_surfaces_to_callers():
+    eng, _, _ = _fake_engine(queue_capacity=2, shed_policy=REJECT_NEW)
+    tks = [eng.submit("a", "m", i) for i in range(4)]
+    assert [t.status for t in tks] == ["queued"] * 2 + ["rejected"] * 2
+    with pytest.raises(RuntimeError, match="queue_full"):
+        tks[3].result(timeout=0)
+    eng.drain()
+    assert [t.status for t in tks] == ["done"] * 2 + ["rejected"] * 2
+    snap = eng.metrics.snapshot()["requests"]
+    assert snap["rejected"] == 2 and snap["completed"] == 2
+
+
+def test_engine_shed_oldest_resolves_victims():
+    eng, _, fx = _fake_engine(queue_capacity=2, shed_policy=SHED_OLDEST)
+    tks = [eng.submit("a", "m", i) for i in range(4)]
+    assert [t.status for t in tks] == ["shed", "shed", "queued", "queued"]
+    assert tks[0].done()                   # victims resolve immediately
+    eng.drain()
+    assert fx.calls[0][1] == [2, 3]        # only the survivors executed
+    assert eng.metrics.snapshot()["requests"]["shed"] == 2
+
+
+def test_engine_deadline_expired_never_executed():
+    eng, clock, fx = _fake_engine()
+    t_dead = eng.submit("a", "m", "late", deadline_s=1.0)
+    clock.advance(2.0)
+    t_ok = eng.submit("a", "m", "fresh")
+    eng.drain()
+    assert t_dead.status == "expired" and t_ok.ok
+    assert all("late" not in call[1] for call in fx.calls)
+    with pytest.raises(RuntimeError, match="deadline"):
+        t_dead.result(timeout=0)
+    assert eng.metrics.snapshot()["requests"]["expired"] == 1
+
+
+def test_engine_metrics_timing_from_fake_clock():
+    eng, clock, _ = _fake_engine(exec_s=0.25, buckets=(4,))
+    for i in range(3):
+        eng.submit("a", "m", i)
+    clock.advance(0.5)                     # queue wait before serving starts
+    eng.drain()
+    snap = eng.metrics.snapshot()
+    assert snap["latency_s"]["p50"] == pytest.approx(0.75)
+    assert snap["queue_wait_s"]["p50"] == pytest.approx(0.5)
+    assert snap["images_per_sec"] == pytest.approx(3 / 0.75)
+
+
+def test_engine_drain_releases_heldback_batch():
+    eng, _, fx = _fake_engine(max_wait_s=1.0, buckets=(1, 2, 4))
+    eng.submit("a", "m", "solo")
+    assert eng.step() is False             # held back, waiting for fill
+    assert eng.drain() == 1                # drain advances past the window
+    assert fx.calls[0][2] == 1
+
+
+def test_engine_unknown_model_raises():
+    m = served_model("resnet18", "tiny")
+    eng = VTAServeEngine({"resnet18": m}, backend="numpy", clock=FakeClock())
+    with pytest.raises(KeyError, match="unknown served model"):
+        eng.submit("a", "nope", m.random_images(1)[0])
+
+
+# ---------------------------------------------------------------------------
+# end-to-end over the real served models: bit-exactness + compile reuse
+# ---------------------------------------------------------------------------
+
+
+def _reference_outputs(model_name, images):
+    m = served_model(model_name, "tiny")
+    return [m.run_single(img, backend="numpy") for img in images]
+
+
+def test_engine_numpy_end_to_end_bit_exact():
+    models = {n: served_model(n, "tiny") for n in list_served_models()}
+    eng = VTAServeEngine(models, backend="numpy", clock=FakeClock(),
+                         buckets=(1, 2, 4))
+    eng.add_tenant("t0", weight=2.0)
+    eng.add_tenant("t1", weight=1.0)
+    subs = []
+    for i in range(7):
+        name = list_served_models()[i % 2]
+        img = models[name].random_images(1, seed=100 + i)[0]
+        subs.append((name, img, eng.submit(f"t{i % 2}", name, img)))
+    eng.drain()
+    for name, img, tk in subs:
+        ref = models[name].run_single(img, backend="numpy")
+        assert np.array_equal(tk.result(), ref)
+        assert np.any(ref), f"{name}: degenerate all-zero reference output"
+
+
+_MIX = st.lists(
+    st.tuples(st.integers(0, 2),          # tenant index
+              st.sampled_from(sorted(["resnet18", "mobilenet"])),
+              st.integers(0, 7)),         # image index
+    min_size=1, max_size=10)
+
+
+@settings(max_examples=8, deadline=None)
+@given(mix=_MIX)
+def test_batch_assembly_bit_identical_to_batch1(mix):
+    """Property: ANY request mix through the batch assembler yields per-
+    request outputs bit-identical to batch-1 numpy execution — padding,
+    bucketing, and cross-tenant interleaving must never leak between
+    requests."""
+    models = {n: served_model(n, "tiny") for n in list_served_models()}
+    pool = {n: m.random_images(8, seed=7) for n, m in models.items()}
+    eng = VTAServeEngine(models, backend="numpy", clock=FakeClock())
+    tickets = [(name, idx, eng.submit(f"t{t}", name, pool[name][idx]))
+               for t, name, idx in mix]
+    eng.drain()
+    for name, idx, tk in tickets:
+        ref = models[name].run_single(pool[name][idx], backend="numpy")
+        assert np.array_equal(tk.result(), ref)
+
+
+def test_compile_reuse_across_buckets():
+    """N requests spread across two bucket sizes trigger at most one XLA
+    trace per (chunk-spec, bucket) — counted by the fsim_jax trace log, not
+    wall-clock. A second identical wave must trigger zero new traces."""
+    from repro.vta import fsim_jax
+
+    m = served_model("mobilenet", "tiny")
+    # bucket sizes 3 and 5 are unused anywhere else in the test session, so
+    # the jit cache cannot have been pre-warmed for them
+    eng = VTAServeEngine({"mobilenet": m}, backend="jax", clock=FakeClock(),
+                         buckets=(3, 5))
+    imgs = m.random_images(8, seed=11)
+
+    fsim_jax.reset_xla_trace_log()
+    for i in range(5):                     # wave 1a: one full 5-bucket
+        eng.submit("a", "mobilenet", imgs[i])
+    eng.drain()
+    for i in range(5, 8):                  # wave 1b: one 3-bucket
+        eng.submit("a", "mobilenet", imgs[i])
+    eng.drain()
+    log = fsim_jax.xla_trace_log()
+    assert log, "expected at least one XLA trace"
+    assert all(count == 1 for count in log.values()), log
+    assert {sig[2] for sig in log} == {3, 5}
+
+    before = sum(log.values())
+    tks = [eng.submit("b", "mobilenet", imgs[i]) for i in range(8)]
+    eng.drain()                            # wave 2: same buckets again
+    assert sum(fsim_jax.xla_trace_log().values()) == before, \
+        "second wave re-traced an already-compiled (chunk-spec, bucket)"
+    ref = m.run_single(imgs[0], backend="numpy")
+    assert np.array_equal(tks[0].result(), ref)
