@@ -1,3 +1,10 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Custom-kernel layer: the registry plus the Pallas kernels behind it.
+
+The registry (kernels/registry.py) is the only coupling point between the
+execution backends and the kernel implementations — see its docstring for
+the kernel contracts ("gemm", "alu_chain") and their implementations.
+"""
+from repro.kernels.registry import (available_impls, get_kernel,
+                                    register_kernel)
+
+__all__ = ["available_impls", "get_kernel", "register_kernel"]

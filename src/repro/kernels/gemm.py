@@ -1,93 +1,26 @@
 """TPS-tiled Pallas matmul with fused VTA-style epilogue (bias/act/clip).
 
-This is the MXU analogue of the paper's pipelined GEMM core (§IV.A.1):
-  * BlockSpec tiles (bm, bn, bk) chosen by core/tile_search.py — the paper's
-    TPS constrained-byte-minimization applied to VMEM instead of scratchpads;
-  * grid order (m, n, k) with k innermost: the f32 accumulator tile stays
-    resident in VMEM across the reduction (output-stationary), and Pallas's
-    automatic grid pipelining provides the double buffering the paper's
-    virtual threads implement by hand;
-  * the epilogue fuses the paper's new `clip` instruction (+ bias/activation)
-    into the final reduction step — one pass instead of separate ALU ops.
+Entry point over the shared blocked kernel in ``kernels/vta_gemm.py`` — the
+same kernel the VTA execution backend uses for its GEMM instructions
+(``vta/fsim_jax.pallas_gemm``); this module adds nothing but the epilogue
+defaults. See vta_gemm's docstring for the blocking derivation (TPS tile
+math on VMEM), the padded-tail handling of odd shapes, and the exactness
+argument.
 
 Validated in interpret mode on CPU against kernels/ref.py::matmul_ref; on a
 real TPU pass interpret=False.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import jax.experimental.pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-from repro.core.tile_search import GemmTile, select_gemm_tile
-
-
-def _gemm_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k: int,
-                 act: Optional[str], clip: Optional[float], has_bias: bool):
-    k = pl.program_id(2)
-
-    @pl.when(k == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32),
-                            w_ref[...].astype(jnp.float32),
-                            preferred_element_type=jnp.float32)
-
-    @pl.when(k == n_k - 1)
-    def _epilogue():
-        out = acc_ref[...]
-        if has_bias:
-            out = out + b_ref[...].astype(jnp.float32)
-        if act == "relu":
-            out = jax.nn.relu(out)
-        elif act == "silu":
-            out = jax.nn.silu(out)
-        elif act == "gelu":
-            out = jax.nn.gelu(out, approximate=True)
-        if clip is not None:
-            out = jnp.clip(out, -clip, clip)
-        o_ref[...] = out.astype(o_ref.dtype)
+from repro.core.tile_search import GemmTile
+from repro.kernels.vta_gemm import blocked_gemm
 
 
 def gemm(x, w, bias=None, *, act: Optional[str] = None,
          clip: Optional[float] = None, tile: Optional[GemmTile] = None,
          interpret: bool = True):
     """x (M,K) @ w (K,N) -> (M,N) with fused epilogue."""
-    M, K = x.shape
-    K2, N = w.shape
-    assert K == K2, (x.shape, w.shape)
-    if tile is None:
-        tile = select_gemm_tile(M, N, K, in_bytes=x.dtype.itemsize)
-    bm, bn, bk = min(tile.bm, M), min(tile.bn, N), min(tile.bk, K)
-    # exact coverage in validation mode: shrink to divisors for odd shapes
-    while M % bm:
-        bm //= 2
-    while N % bn:
-        bn //= 2
-    while K % bk:
-        bk //= 2
-    bm, bn, bk = max(bm, 1), max(bn, 1), max(bk, 1)
-    n_m, n_n, n_k = M // bm, N // bn, K // bk
-    has_bias = bias is not None
-    b = bias if has_bias else jnp.zeros((N,), x.dtype)
-
-    kernel = functools.partial(_gemm_kernel, n_k=n_k, act=act, clip=clip,
-                               has_bias=has_bias)
-    return pl.pallas_call(
-        kernel,
-        grid=(n_m, n_n, n_k),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        interpret=interpret,
-    )(x, w, b)
+    return blocked_gemm(x, w, bias, act=act, clip=clip, tile=tile,
+                        interpret=interpret)

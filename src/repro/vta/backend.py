@@ -12,8 +12,13 @@ Built-ins:
     program order. The oracle everything else is judged against.
   * ``"jax"``  — loaded lazily from vta/fsim_jax.py: ``jax.jit``-compiled
     XLA execution of the same trace, ``vmap``-batched over N input images
-    (one compiled program verifies a whole calibration batch), with a
-    Pallas GEMM kernel on accelerator backends.
+    (one compiled program verifies a whole calibration batch), with fused
+    ALU-chain kernels and whole-segment launches (repro.kernels registry);
+    Pallas kernels on accelerator backends.
+  * ``"jax-pallas"`` — the jax backend with the Pallas GEMM and ALU-chain
+    kernels forced on: compiled on accelerators, interpret mode on CPU
+    (slow — validation, not performance; equivalent to running under
+    REPRO_FSIM_PALLAS=1).
 
 Pick ``"numpy"`` for debugging (trace hooks, per-instruction digests — see
 vta/trace.py) and small one-off runs; pick ``"jax"`` when the same program
@@ -130,5 +135,15 @@ def _jax_factory() -> Backend:
     return JaxBackend()
 
 
+def _jax_pallas_factory() -> Backend:
+    import jax
+    from repro.vta.fsim_jax import JaxBackend
+    impl = "pallas" if jax.default_backend() != "cpu" else "pallas_interpret"
+    be = JaxBackend(gemm_impl=impl, alu_impl=impl)
+    be.name = "jax-pallas"
+    return be
+
+
 register_backend("numpy", NumpyBackend)
 register_backend("jax", _jax_factory)
+register_backend("jax-pallas", _jax_pallas_factory)

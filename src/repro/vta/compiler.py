@@ -283,6 +283,11 @@ def _build_segment(chain: list, fused_add: Optional[Node], graph: Graph,
 
     prog = finalize(tasks, hw, n_ctx=n_ctx)
     prog.uop_mem = alloc.mem
+    # whole-segment fusion marker: the compiler guarantees this program is
+    # one self-contained layer pipeline (conv -> fused add -> clip, resident
+    # spill chains), so the JAX backend may execute its entire trace as a
+    # single kernel launch (fsim_jax segment fusion)
+    prog.fused_segment = True
     nodes = list(chain) + ([fused_add] if fused_add is not None else [])
     return Segment(nodes=nodes, program=prog, n_ctx=n_ctx,
                    fused_adds=(fused_add.name,) if fused_add is not None else (),

@@ -15,14 +15,26 @@ same layer — and repeat layers across a network — reuse one compilation
 instead of paying XLA per program, and a persistent on-disk XLA cache
 (``enable_persistent_cache``) carries executables across processes.
 
-The GEMM inner op (gathered int8 operand tiles -> int32 accumulation) has
-two implementations selected by ``gemm_impl``:
+Compute ops resolve through the kernel registry (repro.kernels):
 
-  * ``"einsum"`` — jnp.einsum, the default on CPU;
-  * ``"pallas"`` — a Pallas kernel (``pallas_gemm``) gridded over the
-    gathered tile axis, for accelerator backends (validated in interpret
-    mode on CPU, like kernels/gemm.py; set REPRO_FSIM_PALLAS=1 to force it
-    with interpretation).
+  * ``gemm_impl`` picks the GEMM kernel — ``"einsum"`` (jnp.dot, CPU
+    default) or ``"pallas"`` / ``"pallas_interpret"`` (the TPS-blocked
+    kernel in kernels/vta_gemm.py, shared with kernels/gemm.py);
+  * ``alu_impl`` picks the fused ALU-chain kernel — ``"lax"`` (jnp
+    composite, CPU default) or ``"pallas"`` / ``"pallas_interpret"``
+    (kernels/alu_sweep.py). Chains are the >= 2-op AluSweep runs lowering
+    proves fusable (``Trace.alu_chains``); each executes as ONE gather ->
+    reduce -> scatter instead of a per-op scatter sequence.
+
+Two fusion levels beyond the per-op spec (both on by default, both
+bit-exact by the lowering-time legality proofs):
+
+  * ``alu_fusion`` — fused ALU chains as above;
+  * ``segment_fusion`` — compiler-marked segment programs
+    (``Program.fused_segment``: one conv -> add -> clip pipeline, resident
+    spill chains) execute their whole trace as a single kernel launch
+    instead of a chunk sequence, keeping scratchpads out of HBM between
+    ops. ``kernel_launch_log()`` counts dispatches for tests/benchmarks.
 
 Integer semantics match numpy bit for bit: int32 wraparound, arithmetic
 right shift, scatter-add with duplicate indices.
@@ -38,59 +50,35 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.registry import get_kernel
 from repro.vta.isa import AluOp, Buffer, VTAConfig
 from repro.vta.lowering import (F32_EXACT_TERMS, AluSweep, GatherLoad,
                                 GemmOp, ScatterStore, SpillStore, Trace,
-                                UopLoad, lower_cached)
+                                UopLoad, lower_cached, scatter_hints)
 from repro.vta.runtime import Program
 
-try:
-    import jax.experimental.pallas as pl
-except ImportError:                                  # pragma: no cover
-    pl = None
+_scatter_hints = scatter_hints       # lowering owns the static index proofs
 
 
 # ---------------------------------------------------------------------------
-# Pallas GEMM kernel (one gathered tile pair per grid step)
+# Pallas GEMM entry point (the shared TPS-blocked kernel)
 # ---------------------------------------------------------------------------
-def _pallas_gemm_kernel(x_ref, w_ref, o_ref):
-    o_ref[...] = jax.lax.dot_general(
-        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-
-
 def pallas_gemm(x, w, *, interpret: bool = True):
-    """f32 matmul x (M, K) @ w (K, N) -> (M, N), gridded over M.
+    """f32 matmul x (M, K) @ w (K, N) -> (M, N).
 
     The MXU form of one GEMM instruction's contraction (operands are
-    gathered int8 tiles widened to f32 — exact, see ``_gemm_product``). On
-    CPU run with ``interpret=True`` (numerical validation); on TPU/GPU pass
-    False.
+    gathered int8 tiles widened to f32 — exact, see ``_gemm_product``).
+    Delegates to the scratchpad-blocked kernel in kernels/vta_gemm.py:
+    blocking from the TPS tile math, odd/prime shapes zero-padded to the
+    block multiple (masked tail) instead of degrading the grid. On CPU run
+    with ``interpret=True`` (numerical validation); on TPU/GPU pass False.
     """
-    assert pl is not None, "jax.experimental.pallas unavailable"
-    M, K = x.shape
-    _, N = w.shape
-    bm = min(256, M)
-    while M % bm:
-        bm //= 2
-    bm = max(bm, 1)
-    return pl.pallas_call(
-        _pallas_gemm_kernel,
-        grid=(M // bm,),
-        in_specs=[pl.BlockSpec((bm, K), lambda i: (i, 0)),
-                  pl.BlockSpec((K, N), lambda i: (0, 0))],
-        out_specs=pl.BlockSpec((bm, N), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
-        interpret=interpret,
-    )(x, w)
+    from repro.kernels.vta_gemm import blocked_gemm
+    return blocked_gemm(x, w, interpret=interpret)
 
 
 def _matmul(x, w, gemm_impl: str):
-    if gemm_impl == "pallas":
-        return pallas_gemm(x, w, interpret=False)
-    if gemm_impl == "pallas_interpret":
-        return pallas_gemm(x, w, interpret=True)
-    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+    return get_kernel("gemm", gemm_impl)(x, w)
 
 
 def _gemm_product(x, w, g: int, R: int, w_d: int, gemm_impl: str):
@@ -131,6 +119,13 @@ def default_gemm_impl() -> str:
     return "einsum" if jax.default_backend() == "cpu" else "pallas"
 
 
+def default_alu_impl() -> str:
+    if os.environ.get("REPRO_FSIM_PALLAS") == "1":
+        return "pallas" if jax.default_backend() != "cpu" else \
+            "pallas_interpret"
+    return "lax" if jax.default_backend() == "cpu" else "pallas"
+
+
 _CACHE_READY = False
 
 
@@ -162,7 +157,7 @@ def enable_persistent_cache() -> None:
 # ---------------------------------------------------------------------------
 # Trace -> (static spec, dynamic index arrays)
 # ---------------------------------------------------------------------------
-def _spec_of(trace: Trace):
+def _spec_of(trace: Trace, *, alu_fusion: bool = True):
     """Per-op (hashable entry, dynamic arrays) pairs.
 
     The entry captures only execution-relevant structure (no step numbers),
@@ -170,11 +165,68 @@ def _spec_of(trace: Trace):
     layers across programs — hash equal and share XLA compilations. Bool
     masks and int32 index maps ride as traced arguments, never as embedded
     constants.
+
+    With ``alu_fusion`` (the default), every fusable AluSweep run lowering
+    marked (``Trace.alu_chains``) collapses to one ``"aluchain"`` entry at
+    its head op — the members it covers emit nothing.
     """
+    heads: dict = {}
+    members: set = set()
+    elided: frozenset = frozenset()
+    if alu_fusion:
+        for c in trace.alu_chains:
+            heads[c.members[0]] = c
+            members.update(c.members)
+        elided = trace.elided
     pairs: list = []
-    for op in trace.ops:
+    for i, op in enumerate(trace.ops):
         if op is None or isinstance(op, UopLoad):
             continue                      # uops are resolved at lowering
+        if i in elided:
+            continue     # feeder gather / absorbed store of a direct sweep
+        if i in members:
+            c = heads.get(i)
+            if c is None:
+                continue              # executed by the head's chain kernel
+            if c.store is not None or c.slabs:
+                # DRAM-direct sweep: the feeder gathers replay inside the
+                # kernel as local slabs, optional absorbed store
+                sldesc = tuple((t.tensor, t.mask is not None, t.fill)
+                               for t in c.slabs)
+                a: list = [c.dst]
+                for t in c.slabs:
+                    a.append(t.index)
+                    if t.mask is not None:
+                        a.append(t.mask)
+                kinds = []
+                for src, arr in zip(c.arg_src, c.args):
+                    if isinstance(src, str):
+                        kinds.append("acc")
+                        a.append(arr)
+                    else:
+                        kinds.append("local")
+                        a.append(src[1])
+                sdesc = None
+                if c.store is not None:
+                    st = c.store
+                    aff = None
+                    if st.affine is not None:
+                        view_shape, perm, sizes, starts = st.affine
+                        aff = (view_shape, perm, sizes)
+                        a.append(np.asarray(starts, np.int32))
+                    else:
+                        a.append(st.index)
+                        if st.mask is not None:
+                            a.append(st.mask)
+                    sdesc = (st.tensor, st.mask is not None, st.unique,
+                             st.sorted, aff)
+                e = ("alusweep", c.stages, sldesc, tuple(kinds), sdesc,
+                     c.write_acc, c.unique, c.sorted)
+                pairs.append((e, tuple(a)))
+                continue
+            e = ("aluchain", c.stages, len(c.args), c.unique, c.sorted)
+            pairs.append((e, (c.dst,) + c.args))
+            continue
         if isinstance(op, GatherLoad):
             e = ("gather", int(op.buffer), op.tensor,
                  op.mask is not None, op.fill)
@@ -300,30 +352,40 @@ def _reduction_run(acc_idx: np.ndarray) -> int:
     return R if bool((rows == rows[:, :1]).all()) else 1
 
 
-def _scatter_hints(idx: np.ndarray) -> tuple:
-    """(unique, sorted) flags for XLA scatter fast paths, proven statically
-    at spec-build time from the concrete index vector."""
-    if len(idx) <= 1:
-        return True, True
-    d = np.diff(idx)
-    srt = bool((d >= 0).all())
-    if srt:
-        return bool((d > 0).all()), True
-    s = np.sort(idx)                 # ~3x cheaper than np.unique
-    return bool((np.diff(s) > 0).all()), False
+# Whole-segment fusion emits the entire trace as ONE jit chunk. XLA compile
+# time grows superlinearly in entry count, so very long segment programs
+# (large real-net tilings) fall back to the capped chunk sequence; the bound
+# comfortably covers the fused conv->add->clip and resident-spill segments
+# the graph compiler actually builds at test/serve scales.
+SEGMENT_FUSION_MAX_OPS = 256
 
 
-def _spec_chunks(trace: Trace, cap: int) -> list:
+def _spec_chunks(trace: Trace, cap: int, *, alu_fusion: bool = True,
+                 fuse_segment: bool = False) -> list:
     """Chunked (spec, args) blocks for a trace, memoized on the Trace.
 
     Serving replays one lowered trace per dispatch; spec construction is
     pure numpy bookkeeping but shows up at high request rates, so cache the
-    chunk list alongside the trace (keyed by cap — backends may differ).
+    chunk list alongside the trace (keyed by the backend knobs — backends
+    may differ).
+
+    ``fuse_segment``: emit the whole trace as one chunk (one kernel launch)
+    when it is compiler-marked fused and small enough
+    (``SEGMENT_FUSION_MAX_OPS``); otherwise the capped chunk split.
     """
+    fuse_all = fuse_segment and trace.fused_segment
     memo = trace.__dict__.setdefault("_spec_chunks", {})
-    hit = memo.get(cap)
+    key = (cap, alu_fusion, fuse_all)
+    hit = memo.get(key)
     if hit is None:
-        hit = memo[cap] = list(_chunks(_spec_of(trace), cap))
+        pairs = _spec_of(trace, alu_fusion=alu_fusion)
+        if fuse_all and len(pairs) <= SEGMENT_FUSION_MAX_OPS:
+            spec = tuple(e for e, _ in pairs)
+            args = tuple(x for _, a in pairs for x in a)
+            hit = [(spec, args)] if pairs else []
+        else:
+            hit = list(_chunks(pairs, cap))
+        memo[key] = hit
     return hit
 
 
@@ -362,7 +424,7 @@ _BUF_DTYPE = {int(Buffer.INP): jnp.int8, int(Buffer.WGT): jnp.int8,
 
 
 def _exec_entries(spec: tuple, args: tuple, state: dict,
-                  gemm_impl: str) -> None:
+                  gemm_impl: str, alu_impl: str = "lax") -> None:
     """Apply spec entries to ``state`` (scratchpads + tensors), consuming
     ``args`` positionally. Runs traced (inside the chunk jit, vmapped over
     the batch) and eagerly (the stepped divergence-debug path)."""
@@ -442,6 +504,41 @@ def _exec_entries(spec: tuple, args: tuple, state: dict,
                     raise ValueError(alu_op)
                 acc = put(r)
             state["acc"] = acc
+        elif kind == "aluchain":
+            _, stages, n_args, uniq, srt = e
+            dst = nxt()
+            cargs = [nxt() for _ in range(n_args)]
+            state["acc"] = get_kernel("alu_chain", alu_impl)(
+                state["acc"], dst, stages, cargs,
+                unique=uniq, sorted_=srt)
+        elif kind == "alusweep":
+            _, stages, sldesc, kinds, sdesc, write_acc, uniq, srt = e
+            dst = nxt()
+            slabs = []
+            for tname, has_mask, fill in sldesc:
+                flat = state["tensors"][tname].reshape(-1)
+                idx = nxt()
+                mask = nxt() if has_mask else None
+                slabs.append((flat, idx, mask, fill))
+            oa = [(k, nxt()) for k in kinds]
+            of = sidx = smask = s_aff = None
+            s_uniq = s_srt = False
+            if sdesc is not None:
+                stname, s_has_mask, s_uniq, s_srt, s_aff = sdesc
+                of = state["tensors"][stname].reshape(-1)
+                sidx = nxt()                 # block starts when affine
+                smask = nxt() if s_has_mask and s_aff is None else None
+            acc2, out2 = get_kernel("alu_sweep", alu_impl)(
+                state["acc"], dst, stages, oa, slabs=slabs,
+                write_acc=write_acc,
+                unique=uniq, sorted_=srt, out_flat=of, store_idx=sidx,
+                store_mask=smask, store_unique=s_uniq, store_sorted=s_srt,
+                store_affine=s_aff)
+            if write_acc:
+                state["acc"] = acc2
+            if sdesc is not None:
+                arr = state["tensors"][sdesc[0]]
+                state["tensors"][sdesc[0]] = out2.reshape(arr.shape)
         elif kind == "alufused":
             _, alu_op, T, uniq, srt = e
             dst = nxt()
@@ -512,8 +609,25 @@ def xla_trace_log() -> dict:
     return dict(_XLA_TRACES)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(3,))
-def _run_chunk(spec, gemm_impl, args, state):
+# Kernel-launch accounting: every ``_run_chunk`` dispatch is one launch
+# (one jit'd XLA computation hitting the device queue). Unlike _XLA_TRACES
+# this counts *dispatches*, not compiles — the hook the segment-fusion tests
+# use to assert a fused conv->add->clip segment really is ONE launch.
+_LAUNCH_COUNT = 0
+
+
+def reset_kernel_launch_log() -> None:
+    global _LAUNCH_COUNT
+    _LAUNCH_COUNT = 0
+
+
+def kernel_launch_log() -> int:
+    """Chunk dispatches since the last ``reset_kernel_launch_log``."""
+    return _LAUNCH_COUNT
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2), donate_argnums=(4,))
+def _run_chunk(spec, gemm_impl, alu_impl, args, state):
     """One jit-compiled block, vmapped over the leading batch axis of the
     scratchpads and per-image tensors. ``state["shared"]`` (weights/biases)
     rides through with ``in_axes=None`` — vmap keeps gathers from unmapped
@@ -527,7 +641,7 @@ def _run_chunk(spec, gemm_impl, args, state):
     def body(st):
         inner = {"inp": st["inp"], "wgt": st["wgt"], "acc": st["acc"],
                  "tensors": {**st["tensors"], **st["shared"]}}
-        _exec_entries(spec, args, inner, gemm_impl)
+        _exec_entries(spec, args, inner, gemm_impl, alu_impl)
         return {"inp": inner["inp"], "wgt": inner["wgt"],
                 "acc": inner["acc"], "shared": st["shared"],
                 "tensors": {k: inner["tensors"][k] for k in st["tensors"]}}
@@ -544,13 +658,23 @@ class JaxBackend:
 
     ``gemm_impl``: None -> ``default_gemm_impl()`` (einsum on CPU, Pallas on
     accelerators, REPRO_FSIM_PALLAS=1 forces Pallas-interpret on CPU).
+    ``alu_impl``: None -> ``default_alu_impl()`` (same policy with "lax" as
+    the CPU composite). ``alu_fusion`` / ``segment_fusion`` toggle the fused
+    ALU-chain and whole-segment-launch paths (both on; turning both off
+    reproduces the per-op chunked execution exactly — the benchmark
+    baseline).
     """
 
     name = "jax"
 
-    def __init__(self, gemm_impl: Optional[str] = None, chunk_cap: int = 24):
+    def __init__(self, gemm_impl: Optional[str] = None,
+                 alu_impl: Optional[str] = None, chunk_cap: int = 24,
+                 alu_fusion: bool = True, segment_fusion: bool = True):
         self.gemm_impl = gemm_impl or default_gemm_impl()
+        self.alu_impl = alu_impl or default_alu_impl()
         self.chunk_cap = chunk_cap
+        self.alu_fusion = alu_fusion
+        self.segment_fusion = segment_fusion
         enable_persistent_cache()
 
     # -- core loop ---------------------------------------------------------
@@ -558,6 +682,7 @@ class JaxBackend:
                  shared: dict = None) -> dict:
         """``batched``: DRAM tensors with a leading batch axis N; ``shared``:
         single arrays every image reads (never stores into)."""
+        global _LAUNCH_COUNT
         shared = shared or {}
         assert not (set(trace.tensors_written) & set(shared)), \
             "programs must not store into shared tensors"
@@ -572,8 +697,12 @@ class JaxBackend:
                  "acc": jnp.zeros((n, acc_depth, BV, BO), jnp.int32),
                  "tensors": {k: jnp.array(v) for k, v in batched.items()},
                  "shared": {k: jnp.array(v) for k, v in shared.items()}}
-        for cspec, cargs in _spec_chunks(trace, self.chunk_cap):
-            state = _run_chunk(cspec, self.gemm_impl, cargs, state)
+        for cspec, cargs in _spec_chunks(trace, self.chunk_cap,
+                                         alu_fusion=self.alu_fusion,
+                                         fuse_segment=self.segment_fusion):
+            _LAUNCH_COUNT += 1
+            state = _run_chunk(cspec, self.gemm_impl, self.alu_impl,
+                               cargs, state)
         return {t: state["tensors"][t] for t in trace.tensors_written}
 
     # -- Backend protocol --------------------------------------------------
@@ -621,7 +750,8 @@ class JaxBackend:
             elif op is not None:
                 mini = Trace(hw=hw, insns=[insn], ops=[op], touches=[])
                 for cspec, cargs in _chunks(_spec_of(mini), self.chunk_cap):
-                    state = _run_chunk(cspec, self.gemm_impl, cargs, state)
+                    state = _run_chunk(cspec, self.gemm_impl, self.alu_impl,
+                                       cargs, state)
             if hook is not None:
                 view = _View()
                 view.inp = np.asarray(state["inp"])[0]

@@ -31,6 +31,7 @@ stated exactly once.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -153,6 +154,86 @@ class Touch:
 
 
 @dataclass
+class DirectSlab:
+    """One feeder GatherLoad re-executed INSIDE the fused sweep kernel:
+    ``index``/``mask`` are the gather's own (n, BV, BO) maps, so the DRAM
+    gather volume is byte-for-byte what the original load moved — the win
+    is that the slab value stays local to the kernel (registers / one XLA
+    fusion) instead of round-tripping through the acc scratchpad, whose
+    update-slice write and row-gather reads dominate bandwidth-bound
+    depthwise/pool layers. A chain's slabs concatenate along rows in
+    order; ``("local", rows)`` operand slots index the concatenation."""
+    tensor: str
+    index: np.ndarray
+    mask: Optional[np.ndarray]
+    fill: int
+
+
+@dataclass
+class DirectStore:
+    """A ScatterStore absorbed into the chain: the kernel clips the chain
+    value to int8 and scatters it straight into the DRAM tensor. ``index``
+    (g, BV, BO) is the store's index map permuted into chain-dst order.
+
+    ``affine`` is set when the index map decomposes into a constant-stride
+    block (``_affine_block``): ``(view_shape, perm, sizes, starts)`` such
+    that reshaping the flat tensor to ``view_shape`` and writing the value
+    block (axes permuted by ``perm``, reshaped to ``sizes``) at ``starts``
+    is elementwise-identical to the scatter — the kernel then uses a
+    contiguous ``dynamic_update_slice`` instead of an elementwise scatter,
+    which XLA's CPU backend serializes."""
+    tensor: str
+    index: np.ndarray
+    mask: Optional[np.ndarray]
+    unique: bool
+    sorted: bool
+    affine: Optional[tuple] = None
+
+
+@dataclass
+class AluChain:
+    """A run of >= 2 consecutive AluSweep ops proven legal to execute as ONE
+    fused gather -> reduce -> scatter kernel (kernels/alu_sweep.py).
+
+    Legality (checked by ``_mark_alu_chains``): every step of every member
+    writes the SAME unique-indexed destination rows ``dst``; every source
+    row (and MAC latched operand) is disjoint from ``dst``, so no stage
+    observes a row the chain writes — deferring the single scatter to the
+    end is observationally identical to the sequential per-op scatters. An
+    overwrite op is legal only as the chain seed (single step); a
+    non-overwrite seed reads the destination first (``read_dst``).
+
+    ``stages``/``args`` follow the kernels/alu_sweep.py stage encoding:
+    stages are hashable tuples (they ride in the jit static spec), args are
+    the index arrays the stages consume positionally.
+
+    ``_mark_direct`` may additionally prove the chain *DRAM-direct*: the
+    feeder GatherLoads that produced its operand rows move into the kernel
+    as ``slabs`` (gathered once each — same DRAM volume as the loads they
+    replace — then concatenated into a kernel-local buffer); each entry of
+    ``arg_src`` is either ``"acc"`` (read the scratchpad, as before) or
+    ``("local", rows)`` (row-index the local slab buffer); ``store``
+    absorbs the following ScatterStore so the sweep writes its output
+    tensor directly; ``write_acc`` is False when nothing reads the chain's
+    acc rows afterwards, making the whole sweep a pure
+    DRAM -> reduce -> DRAM kernel with no scratchpad traffic at all.
+    ``covers`` is the op-index span (lo, hi) including any elided feeder
+    gathers and the absorbed store, used for divergence attribution.
+    """
+    members: tuple                   # op indices of the member AluSweeps
+    dst: np.ndarray                  # (g,) int32 destination acc rows
+    stages: tuple
+    args: tuple                      # np.ndarray operands, in stage order
+    unique: bool = True              # scatter hints for dst
+    sorted: bool = False
+    slabs: tuple = ()                # (DirectSlab, ...) in local-row order
+    arg_src: tuple = ()              # per args entry: "acc"|("local", rows)
+    store: Optional[DirectStore] = None
+    write_acc: bool = True
+    covers: Optional[tuple] = None   # (lo, hi) attribution span
+
+
+@dataclass
 class Trace:
     hw: VTAConfig
     insns: list                      # Program.order (parallel to ops)
@@ -160,6 +241,435 @@ class Trace:
     touches: list                    # Touch per instruction
     tensors_read: tuple = ()
     tensors_written: tuple = ()
+    alu_chains: tuple = ()           # (AluChain, ...) fusable sweep runs
+    fused_segment: bool = False      # compiler marked prog whole-segment
+    elided: frozenset = frozenset()  # op idxs subsumed by direct chains
+
+
+def scatter_hints(idx: np.ndarray) -> tuple:
+    """(unique, sorted) flags for XLA scatter fast paths, proven statically
+    from the concrete index vector (all index maps are lowering-time
+    constants)."""
+    if len(idx) <= 1:
+        return True, True
+    d = np.diff(idx)
+    srt = bool((d >= 0).all())
+    if srt:
+        return bool((d > 0).all()), True
+    s = np.sort(idx)                 # ~3x cheaper than np.unique
+    return bool((np.diff(s) > 0).all()), False
+
+
+_ALU_NAME = {AluOp.ADD: "add", AluOp.MAX: "max", AluOp.MIN: "min",
+             AluOp.SHR: "shr", AluOp.MUL: "mul"}
+
+
+def _chain_contrib(op: AluSweep, dset: set):
+    """(stages, args) this non-overwrite AluSweep adds to a chain whose
+    destination set is ``dset``, or None when fusing it would change the
+    sequential semantics."""
+    T = len(op.steps)
+    if op.alu_op == AluOp.MAC:
+        if op.use_imm:
+            return None
+        for s in op.steps:
+            if s.src is None or dset.intersection(s.src.tolist()) \
+                    or s.src2 < 0 or s.src2 in dset:
+                return None
+        srcs = np.stack([s.src for s in op.steps])
+        src2 = np.array([s.src2 for s in op.steps], np.int32)
+        return (("mac", T),), (srcs, src2)
+    if op.alu_op == AluOp.CLIP:      # imm-bound clamp; src is never read
+        return (("imm", "clip", int(op.imm)),) * T, ()
+    name = _ALU_NAME.get(op.alu_op)
+    if name is None:
+        return None
+    if op.use_imm:
+        return (("imm", name, int(op.imm)),) * T, ()
+    for s in op.steps:
+        if s.src is None or dset.intersection(s.src.tolist()):
+            return None
+    if name in ("add", "max", "min") and T >= 2:
+        return (("red", name, T),), (np.stack([s.src for s in op.steps]),)
+    # order-sensitive ops (shr/mul) and singleton reduces: one stage per step
+    return (("src", name),) * T, tuple(s.src for s in op.steps)
+
+
+def _chain_start(i: int, op: AluSweep):
+    """Open a chain at op index ``i``, or None when the op can't seed one."""
+    if not op.steps:
+        return None
+    dst = op.steps[0].dst
+    for s in op.steps:
+        if not np.array_equal(s.dst, dst):
+            return None
+    uniq, srt = scatter_hints(dst)
+    if not uniq:                     # duplicate dst rows: keep sequential
+        return None
+    dset = set(dst.tolist())
+    if op.overwrite:
+        if len(op.steps) != 1:
+            return None
+        s = op.steps[0]
+        if op.alu_op == AluOp.MAC:
+            if s.src is None or dset.intersection(s.src.tolist()) \
+                    or s.src2 < 0 or s.src2 in dset:
+                return None
+            stages = (("seed_mac",),)
+            args = [s.src, np.array([s.src2], np.int32)]
+        elif op.use_imm or op.alu_op == AluOp.CLIP:
+            stages = (("seed_imm", int(op.imm)),)
+            args = []
+        else:
+            if s.src is None or dset.intersection(s.src.tolist()):
+                return None
+            stages = (("seed_copy",),)
+            args = [s.src]
+    else:
+        contrib = _chain_contrib(op, dset)
+        if contrib is None:
+            return None
+        stages = (("read_dst",),) + contrib[0]
+        args = list(contrib[1])
+    return {"members": [i], "dst": dst, "dset": dset,
+            "stages": list(stages), "args": args, "uniq": uniq, "srt": srt}
+
+
+def _mark_alu_chains(ops: list) -> tuple:
+    """Scan the op stream for fusable AluSweep runs (see ``AluChain``).
+
+    UopLoads and FINISH are neutral (they never touch acc, and the spec
+    skips them anyway); every other op kind closes the open chain. Runs of
+    fewer than 2 member ops are dropped — single sweeps stay on the
+    per-op path (fsim_jax fuses their steps internally where legal).
+    """
+    chains: list = []
+    cur = None
+
+    def close():
+        nonlocal cur
+        if cur is not None and len(cur["members"]) >= 2:
+            chains.append(AluChain(
+                members=tuple(cur["members"]), dst=cur["dst"],
+                stages=tuple(cur["stages"]), args=tuple(cur["args"]),
+                unique=cur["uniq"], sorted=cur["srt"]))
+        cur = None
+
+    for i, op in enumerate(ops):
+        if op is None or isinstance(op, UopLoad):
+            continue
+        if not isinstance(op, AluSweep):
+            close()
+            continue
+        if cur is not None and not op.overwrite and op.steps and \
+                all(np.array_equal(s.dst, cur["dst"]) for s in op.steps):
+            contrib = _chain_contrib(op, cur["dset"])
+            if contrib is not None:
+                cur["members"].append(i)
+                cur["stages"].extend(contrib[0])
+                cur["args"].extend(contrib[1])
+                continue
+        close()
+        cur = _chain_start(i, op)
+    close()
+    return tuple(chains)
+
+
+# ---------------------------------------------------------------------------
+# DRAM-direct sweep proving (the "fused gather -> reduce -> scatter" half of
+# the chain story): a chain whose operand rows were produced by plain
+# GatherLoads can read the source tensors directly through the composed
+# index maps, and a chain whose destination rows feed exactly one following
+# ScatterStore can write that tensor directly — eliding the scratchpad
+# round-trip that dominates bandwidth-bound depthwise/pool layers.
+# ---------------------------------------------------------------------------
+def _op_touch(op):
+    """(reads, writes) acc-row sets of one op in the per-op (unfused) view."""
+    if isinstance(op, GatherLoad):
+        if op.buffer == Buffer.ACC:
+            return set(), set(range(op.base, op.base + op.index.shape[0]))
+        return set(), set()
+    if isinstance(op, GemmOp):
+        rows = set(op.acc_idx.tolist())
+        return (set() if op.reset else set(rows)), rows
+    if isinstance(op, AluSweep):
+        r, w = set(), set()
+        for s in op.steps:
+            if s.src is not None:
+                r |= set(s.src.tolist())
+            if s.src2 >= 0:
+                r.add(int(s.src2))
+            if not op.overwrite:
+                r |= set(s.dst.tolist())
+            w |= set(s.dst.tolist())
+        return r, w
+    if isinstance(op, ScatterStore):
+        return set(range(op.base, op.base + op.index.shape[0])), set()
+    if isinstance(op, SpillStore):
+        return set(op.src.tolist()), set()
+    return set(), set()
+
+
+def _resolve_rows(rows: np.ndarray, ops: list, writer: np.ndarray,
+                  ver: dict, ver_at: dict, slab_off: dict):
+    """Remap ``rows`` (acc row indices, any shape) into the chain's local
+    slab space: every producing gather becomes a slab (registered in
+    ``slab_off``, gather op idx -> local row offset, extended here in
+    first-use order) and each row maps to ``offset + (row - gather.base)``.
+    Returns ``(("local", rows_local), source op idxs)`` or None when any
+    row's producer is not a still-valid plain ACC gather."""
+    ws = np.unique(writer[rows])
+    if len(ws) == 0 or int(ws[0]) < 0:
+        return None
+    gs = {int(w): ops[int(w)] for w in ws}
+    if not all(isinstance(g, GatherLoad) and g.buffer == Buffer.ACC
+               for g in gs.values()):
+        return None
+    for w, g in gs.items():          # tensor rewritten since the load?
+        if ver_at[w] != ver.get(g.tensor, 0):
+            return None
+    rl = np.zeros(rows.shape, np.int32)
+    rw = writer[rows]
+    for w, g in gs.items():
+        if w not in slab_off:
+            slab_off[w] = sum(ops[k].index.shape[0] for k in slab_off)
+        sel = rw == w
+        rl[sel] = slab_off[w] + (rows[sel] - g.base)
+    return ("local", rl), set(gs)
+
+
+def _absorb_store(ops: list, mk: int, dset: set):
+    """The ScatterStore a chain ending at op ``mk`` may absorb: the first
+    one whose slab is exactly the chain's dst rows, with nothing in between
+    touching those rows or the store's tensor. Returns (store idx, write_acc)
+    or (None, True)."""
+    touched = set()
+    j = mk + 1
+    absorb = None
+    while j < len(ops):
+        op = ops[j]
+        if op is None or isinstance(op, UopLoad):
+            j += 1
+            continue
+        if isinstance(op, ScatterStore) and \
+                set(range(op.base, op.base + op.index.shape[0])) == dset:
+            if op.tensor not in touched:
+                absorb = j
+            break
+        r, w = _op_touch(op)
+        if (r | w) & dset:
+            break
+        if isinstance(op, (GatherLoad, ScatterStore)):
+            touched.add(op.tensor)
+        j += 1
+    if absorb is None:
+        return None, True
+    # acc write still needed iff someone reads dst before it's overwritten
+    remaining = set(dset)
+    for k in range(absorb + 1, len(ops)):
+        op = ops[k]
+        if op is None or isinstance(op, UopLoad):
+            continue
+        r, w = _op_touch(op)
+        if r & remaining:
+            return absorb, True
+        remaining -= w
+        if not remaining:
+            break
+    return absorb, False
+
+
+def _affine_block(idx: np.ndarray, n: int):
+    """Decompose a constant index map into a strided block of the flat
+    tensor: returns ``(view_shape, perm, sizes, starts)`` — reshape the
+    flat (n,) tensor to ``view_shape`` and the block lands contiguously at
+    ``starts`` — or None when the map is not constant-stride per axis, the
+    strides don't nest (each must divide the next-coarser one, innermost
+    1), or the block crosses an axis boundary. All inputs are lowering-time
+    constants, so the proof is exact, not heuristic."""
+    axes = []
+    for ax in range(idx.ndim):
+        if idx.shape[ax] == 1:
+            continue
+        d = np.diff(idx, axis=ax)
+        s = int(d.flat[0])
+        if s <= 0 or not (d == s).all():
+            return None
+        axes.append((s, idx.shape[ax], ax))
+    if not axes or sorted(s for s, _, _ in axes)[0] != 1:
+        return None
+    axes.sort(key=lambda t: -t[0])
+    view, starts, sizes, perm = [], [], [], []
+    prev, t = n, int(idx.flat[0])
+    for s, sz, ax in axes:
+        if prev % s:
+            return None
+        dim = prev // s
+        st_i = t // s
+        t -= st_i * s
+        if st_i + sz > dim:
+            return None
+        view.append(dim)
+        starts.append(st_i)
+        sizes.append(sz)
+        perm.append(ax)
+        prev = s
+    perm += [ax for ax in range(idx.ndim) if idx.shape[ax] == 1]
+    return tuple(view), tuple(perm), tuple(sizes), tuple(starts)
+
+
+def _mark_direct(ops: list, chains: tuple, acc_depth: int,
+                 shapes: dict) -> tuple:
+    """Annotate chains with DRAM-direct operands/stores and compute the op
+    indices (feeder gathers, absorbed stores) the fused path elides.
+
+    Three passes: (1) forward, resolving each chain's operand rows through
+    the last-writer map while tracking tensor versions (a store to the
+    source tensor between gather and chain invalidates composition);
+    (2) per resolved chain, absorb the following store when legal;
+    (3) forward liveness — a feeder gather is elided only when *every*
+    acc read of its rows happens through a direct chain's composed map.
+    """
+    if not chains:
+        return chains, frozenset()
+    heads = {c.members[0]: c for c in chains}
+    member_set = {m for c in chains for m in c.members}
+
+    writer = np.full(acc_depth, -1, np.int64)
+    ver: dict = {}
+    ver_at: dict = {}
+    resolved: dict = {}
+    for i, op in enumerate(ops):
+        if op is None or isinstance(op, UopLoad):
+            continue
+        if i in heads:
+            c = heads[i]
+            if c.stages[0][0] != "read_dst":     # dst seeds read no acc
+                arg_src, sources, slab_off = [], set(), {}
+                for a in c.args:
+                    r = _resolve_rows(np.asarray(a), ops, writer, ver,
+                                      ver_at, slab_off)
+                    if r is None:
+                        arg_src.append("acc")
+                    else:
+                        arg_src.append(r[0])
+                        sources |= r[1]
+                if slab_off:
+                    resolved[i] = {"arg_src": tuple(arg_src),
+                                   "sources": sources,
+                                   "slab_ops": tuple(slab_off)}
+        if isinstance(op, GatherLoad) and op.buffer == Buffer.ACC:
+            writer[op.base:op.base + op.index.shape[0]] = i
+            ver_at[i] = ver.get(op.tensor, 0)
+        elif isinstance(op, GemmOp):
+            writer[op.acc_idx] = i
+        elif isinstance(op, AluSweep):
+            for s in op.steps:
+                writer[s.dst] = i
+        elif isinstance(op, ScatterStore):
+            ver[op.tensor] = ver.get(op.tensor, 0) + 1
+
+    absorbed: dict = {}                          # head -> store op idx
+    write_acc: dict = {}
+    for head, info in resolved.items():
+        c = heads[head]
+        dset = set(c.dst.tolist())
+        sidx, wacc = _absorb_store(ops, c.members[-1], dset)
+        if sidx is not None:
+            absorbed[head] = sidx
+        write_acc[head] = wacc
+
+    # liveness: which feeder gathers still have an acc reader
+    writer2 = np.full(acc_depth, -1, np.int64)
+    needed: set = set()
+
+    def note(rows):
+        for w in np.unique(writer2[np.asarray(rows, np.int64)]):
+            if w >= 0:
+                needed.add(int(w))
+
+    absorbed_stores = set(absorbed.values())
+    for i, op in enumerate(ops):
+        if op is None or isinstance(op, UopLoad):
+            continue
+        if i in member_set:
+            if i not in heads:
+                continue                         # reads happen at the head
+            c = heads[i]
+            info = resolved.get(i)
+            if c.stages[0][0] == "read_dst":
+                note(c.dst)
+            if info:
+                for a, s in zip(c.args, info["arg_src"]):
+                    if isinstance(s, str):
+                        note(np.asarray(a).ravel())
+            else:
+                for a in c.args:
+                    note(np.asarray(a).ravel())
+            writer2[c.dst] = i
+            continue
+        if isinstance(op, ScatterStore) and i in absorbed_stores:
+            continue                             # read via the chain kernel
+        r, w = _op_touch(op)
+        if r:
+            note(sorted(r))
+        if w:
+            writer2[sorted(w)] = i
+
+    sources_all = set()
+    for info in resolved.values():
+        sources_all |= info["sources"]
+    elided = (sources_all - needed) | absorbed_stores
+
+    out = []
+    for c in chains:
+        head = c.members[0]
+        info = resolved.get(head)
+        if info is None:
+            out.append(c)
+            continue
+        st = None
+        lo, hi = head, c.members[-1]
+        if head in absorbed:
+            s = ops[absorbed[head]]
+            loc = c.dst - s.base
+            sidx = s.index[loc]
+            smask = s.mask[loc] if s.mask is not None else None
+            uniq, srt = scatter_hints(sidx.reshape(-1))
+            aff = None
+            if smask is None and s.tensor in shapes:
+                aff = _affine_block(sidx, int(np.prod(shapes[s.tensor])))
+            st = DirectStore(tensor=s.tensor, index=sidx, mask=smask,
+                             unique=uniq, sorted=srt, affine=aff)
+            hi = max(hi, absorbed[head])
+        mine = info["sources"] & elided
+        if mine:
+            lo = min(lo, min(mine))
+        slabs = tuple(
+            DirectSlab(tensor=ops[w].tensor, index=ops[w].index,
+                       mask=ops[w].mask, fill=int(ops[w].fill))
+            for w in info["slab_ops"])
+        out.append(dataclasses.replace(
+            c, slabs=slabs, arg_src=info["arg_src"], store=st,
+            write_acc=write_acc.get(head, True), covers=(lo, hi)))
+    return tuple(out), frozenset(elided)
+
+
+def enclosing_kernel(trace: Trace, step: int):
+    """The fused kernel the JAX fast path would execute insn ``step``
+    inside: ``("aluchain", lo, hi)`` when the step falls in a fused ALU
+    chain (the span includes elided feeder gathers and an absorbed store),
+    ``("segment", 0, last)`` for a whole-segment-fused program, else None.
+    vta/trace.py uses this to localize a stepped-mode divergence to the
+    fused kernel that covers it."""
+    for c in trace.alu_chains:
+        lo, hi = c.covers if c.covers is not None \
+            else (c.members[0], c.members[-1])
+        if lo <= step <= hi:
+            return ("aluchain", lo, hi)
+    if trace.fused_segment:
+        return ("segment", 0, len(trace.ops) - 1)
+    return None
 
 
 # ---------------------------------------------------------------------------
@@ -483,8 +993,12 @@ def lower(prog: Program, hw: VTAConfig, shapes: dict) -> Trace:
         else:
             ops.append(None)         # FINISH
         touches.append(_touch_of(insn, hw, uops))
+    chains, elided = _mark_direct(ops, _mark_alu_chains(ops), hw.acc_depth,
+                                  shapes)
     return Trace(hw=hw, insns=list(prog.order), ops=ops, touches=touches,
-                 tensors_read=tuple(read), tensors_written=tuple(written))
+                 tensors_read=tuple(read), tensors_written=tuple(written),
+                 alu_chains=chains, elided=elided,
+                 fused_segment=bool(getattr(prog, "fused_segment", False)))
 
 
 def lower_cached(prog: Program, hw: VTAConfig, shapes: dict) -> Trace:

@@ -46,10 +46,21 @@ class Divergence:
     step: int
     insn: str
     buffers: tuple                   # buffer names that differ at `step`
+    # the fused kernel the JAX fast path executes this step inside, when
+    # any: ("aluchain", lo, hi) | ("segment", lo, hi). Stepped recording
+    # runs per-op, so the digests localize to one instruction even when the
+    # fast path would run it fused; this field maps the instruction back to
+    # the kernel to inspect (lowering.enclosing_kernel).
+    kernel: Optional[tuple] = None
 
     def describe(self) -> str:
-        return (f"first divergence at insn {self.step} ({self.insn}): "
-                f"{', '.join(self.buffers)} scratchpad state differs")
+        msg = (f"first divergence at insn {self.step} ({self.insn}): "
+               f"{', '.join(self.buffers)} scratchpad state differs")
+        if self.kernel is not None:
+            kind, lo, hi = self.kernel
+            msg += (f"; inside fused {kind} kernel covering insns "
+                    f"[{lo}, {hi}]")
+        return msg
 
 
 class TraceRecorder:
@@ -127,6 +138,11 @@ def diff_backends(prog: Program, hw: VTAConfig, dram: dict,
     traces = [record_trace(prog, hw, d, backend=b)
               for d, b in zip(drams, backends)]
     div = first_divergence(traces[0], traces[1])
+    if div is not None:
+        from repro.vta.lowering import enclosing_kernel, lower_cached
+        shapes = {k: np.asarray(v).shape for k, v in dram.items()}
+        div.kernel = enclosing_kernel(lower_cached(prog, hw, shapes),
+                                      div.step)
     outputs_equal = all(np.array_equal(drams[0][k], drams[1][k])
                         for k in dram)
     return TraceDiff(divergence=div, outputs_equal=outputs_equal,

@@ -256,6 +256,24 @@ def test_pallas_gemm_interpret_matches_einsum():
     np.testing.assert_array_equal(got, ref)
 
 
+@pytest.mark.parametrize("m,k,n", [(97, 130, 37), (1, 16, 1), (3, 5, 7)])
+def test_pallas_gemm_odd_shapes_exact(m, k, n):
+    """Prime/odd dims exercise the padded + masked tail path — the shapes
+    that used to collapse the grid to one degenerate block."""
+    import jax.numpy as jnp
+    from repro.kernels.vta_gemm import blocked_gemm, gemm_blocking
+    x = RNG.integers(-128, 128, (m, k)).astype(np.int8)
+    w = RNG.integers(-128, 128, (k, n)).astype(np.int8)
+    got = np.asarray(blocked_gemm(jnp.asarray(x, jnp.float32),
+                                  jnp.asarray(w, jnp.float32),
+                                  interpret=True))
+    ref = x.astype(np.float32) @ w.astype(np.float32)
+    np.testing.assert_array_equal(got, ref)
+    bm, bn, bk = gemm_blocking(m, n, k)
+    assert bm >= 1 and bn >= 8 and bk >= 8      # no degenerate 1-wide grid
+    assert bm % 8 == 0 or bm >= m               # sublane-aligned or covers M
+
+
 # ---------------------------------------------------------------------------
 # run_tsim(check_hazards=True)
 # ---------------------------------------------------------------------------

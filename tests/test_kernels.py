@@ -108,3 +108,62 @@ def test_flash_attention_decode_shape():
                           causal=True).transpose(0, 2, 1, 3)
     np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5,
                                rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Cross-oracle agreement: kernels/ref.py vs the VTA numpy fsim references.
+# On int8-valued data both sides are exact (f32 holds every partial sum),
+# so these asserts are array_equal, not allclose. Shift is deliberately
+# excluded: alu_ref scales by 2^-shift in f32, the VTA ALU does an
+# arithmetic shift — they differ on negative/odd values by design.
+# ---------------------------------------------------------------------------
+RNG = np.random.default_rng(29)
+
+
+def test_matmul_ref_matches_vta_conv_1x1():
+    from repro.vta.fsim import conv2d_ref
+    M, K, N = 24, 48, 16
+    x = RNG.integers(-128, 128, (M, K), dtype=np.int8)
+    w = RNG.integers(-8, 8, (N, K), dtype=np.int8)
+    got = np.asarray(ref.matmul_ref(jnp.asarray(x, jnp.float32),
+                                    jnp.asarray(w.T, jnp.float32)))
+    vta = conv2d_ref(x.reshape(M, K, 1, 1), w.reshape(N, K, 1, 1),
+                     (1, 1), (0, 0))[:, :, 0, 0]
+    np.testing.assert_array_equal(got, vta.astype(np.float32))
+
+
+def test_depthwise_ref_matches_vta_layout():
+    from repro.vta.fsim import depthwise_ref as vta_dw
+    B, C, H = 2, 16, 9
+    x = RNG.integers(-128, 128, (B, C, H, H), dtype=np.int8)
+    w = RNG.integers(-8, 8, (C, 3, 3), dtype=np.int8)
+    got = np.asarray(ref.depthwise_ref(
+        jnp.asarray(x.transpose(0, 2, 3, 1), jnp.float32),
+        jnp.asarray(w.transpose(1, 2, 0), jnp.float32), stride=2, pad=1))
+    vta = vta_dw(x, w, (2, 2), (1, 1)).transpose(0, 2, 3, 1)
+    np.testing.assert_array_equal(got, vta.astype(np.float32))
+
+
+def test_pool_ref_matches_vta_max():
+    from repro.vta.fsim import pool_ref
+    B, C, H = 1, 8, 14
+    x = RNG.integers(-128, 128, (B, C, H, H), dtype=np.int8)
+    got = np.asarray(ref.pool2d_ref(
+        jnp.asarray(x.transpose(0, 2, 3, 1), jnp.float32),
+        k=3, stride=2, pad=1, mode="max"))
+    vta = pool_ref(x, (3, 3), (2, 2), (1, 1), mode="max")
+    np.testing.assert_array_equal(got, vta.transpose(0, 2, 3, 1)
+                                  .astype(np.float32))
+
+
+@pytest.mark.parametrize("op", ["add", "max", "min", "mul"])
+def test_alu_ref_matches_vta_int_semantics(op):
+    x = RNG.integers(-128, 128, (64,), dtype=np.int8).astype(np.int32)
+    y = RNG.integers(-128, 128, (64,), dtype=np.int8).astype(np.int32)
+    got = np.asarray(ref.alu_ref(jnp.asarray(x, jnp.float32),
+                                 jnp.asarray(y, jnp.float32), op=op,
+                                 clip=127.0))
+    fn = {"add": np.add, "max": np.maximum, "min": np.minimum,
+          "mul": np.multiply}[op]
+    vta = np.clip(fn(x, y), -127, 127)          # VTA CLIP: symmetric bound
+    np.testing.assert_array_equal(got, vta.astype(np.float32))
