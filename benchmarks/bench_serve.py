@@ -1,6 +1,6 @@
 """Serving benchmark: continuous batching vs serialized batch-1 dispatch.
 
-Three phases over a mixed two-tenant workload (alice -> resnet18,
+Four phases over a mixed two-tenant workload (alice -> resnet18,
 bob -> mobilenet, weights 2:1):
 
   1. **throughput** — a request burst drained through the continuous-
@@ -14,30 +14,52 @@ bob -> mobilenet, weights 2:1):
   3. **verify** — a sample of served outputs compared bit-for-bit against
      batch-1 numpy execution (``ServedModel.run_single``), the oracle the
      engine must match by contract.
+  4. **chaos** — Poisson load on a FakeClock against a supervised engine
+     with a *seeded* ``FaultPlan`` (transient executor crashes, one
+     watchdog-tripping hang, a persistent top-rung kernel-impl fault,
+     poisoned payloads) running on the degradation ladder
+     (serve/breaker.py). Asserts total supervision: every ticket resolves,
+     the engine survives, poisoned requests are isolated by bisection, the
+     breaker demotes and recovers via a half-open probe, and every served
+     output stays bit-exact vs the numpy oracle. Entirely deterministic —
+     the injected clock and seeded faults make its counters a baseline CI
+     can diff exactly (``--json-out``/``--check-baseline``,
+     benchmarks/baselines/BENCH_serve.json).
 
 CLI:
 
   PYTHONPATH=src python -m benchmarks.bench_serve \
       --scale small --requests 64 --rate 100 --min-speedup 3 --verify 8
+  PYTHONPATH=src python -m benchmarks.bench_serve \
+      --phases chaos --seed 7 --json-out results/bench \
+      --check-baseline benchmarks/baselines
 
 CI smoke runs the tiny scale with ``--assert-no-drops --max-p99 5`` and
-uploads the ``--json`` report as an artifact (.github/workflows/ci.yml).
+uploads the ``--json`` report as an artifact; the ``chaos-smoke`` job runs
+``--phases chaos`` with a pinned seed and asserts zero unresolved tickets
+plus breaker recovery from the report (.github/workflows/ci.yml).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
+from collections import Counter
+from typing import Optional
 
 import numpy as np
 
+from repro.serve.clock import FakeClock
 from repro.serve.engine import VTAServeEngine
 from repro.serve.metrics import ServeMetrics
 from repro.serve.model import served_model
 
 TENANTS = (("alice", "resnet18", 2.0), ("bob", "mobilenet", 1.0))
 POOL = 16                        # distinct images per model
+DEFAULT_PHASES = ("throughput", "poisson", "verify", "chaos")
+CHAOS_EXEC_COST_S = 0.02         # modeled fake-clock cost per dispatch
 
 
 def _models(scale: str) -> dict:
@@ -136,60 +158,243 @@ def _verify_phase(models: dict, mix: list, tickets: list, k: int) -> dict:
     return {"checked": len(idxs), "mismatches": mismatches}
 
 
+def _chaos_fault_plan(seed: int, ladder: tuple):
+    """The benchmark's seeded fault mix: transient executor crashes, one
+    watchdog-tripping hang, a finite persistent fault on the top rung's
+    gemm implementation (trips the breaker, fails two half-open probes,
+    then exhausts so the third probe recovers), and two poisoned payloads
+    for bisection to isolate. Returns (plan, top-rung gemm fault key)."""
+    from repro.serve.faults import FaultPlan, FaultSpec
+    from repro.vta.backend import backend_kernel_impls
+
+    impls = dict(backend_kernel_impls(ladder[0]))
+    gemm_key = f"gemm:{impls['gemm']}" if "gemm" in impls else "*"
+    plan = FaultPlan(seed=seed, specs=(
+        FaultSpec("executor.raise", prob=0.12, times=4),
+        FaultSpec("executor.hang", times=1, after=6, hang_s=1.0),
+        FaultSpec("kernel.impl", key=gemm_key, times=5),
+        FaultSpec("payload.bitflip", prob=0.3, times=2, after=4, bits=2),
+    ))
+    return plan, gemm_key
+
+
+def _chaos_phase(n: int, rate: float, seed: int, ladder: tuple,
+                 verbose: bool = True) -> dict:
+    """Deterministic chaos: Poisson load on a FakeClock against a
+    supervised engine + degradation ladder under a seeded FaultPlan.
+    Always runs the tiny model scale — this phase measures reliability
+    invariants and deterministic counters, not throughput."""
+    from repro.serve.breaker import DegradingBackendExecutor
+    from repro.serve.faults import FaultInjector
+
+    models = _models("tiny")
+    clock = FakeClock()
+    metrics = ServeMetrics()
+    plan, gemm_key = _chaos_fault_plan(seed, ladder)
+    inj = FaultInjector(plan, clock=clock)
+    executor = DegradingBackendExecutor(models, ladder, clock=clock,
+                                        faults=inj, metrics=metrics,
+                                        fail_threshold=3, cooldown_s=0.08)
+    eng = VTAServeEngine(models, clock=clock, executor=executor,
+                         metrics=metrics, faults=inj,
+                         buckets=(1, 2, 4, 8), queue_capacity=n + 8,
+                         max_retries=2, retry_backoff_s=0.004,
+                         exec_timeout_s=0.5, requeue_budget=6)
+    for tenant, _, weight in TENANTS:
+        eng.add_tenant(tenant, weight=weight)
+
+    mix = _request_mix(models, n, seed)
+    gaps = np.random.default_rng(seed + 13).exponential(1.0 / rate, n)
+    t0 = time.perf_counter()
+    tickets = []
+    for k, (tenant, model, img, _) in enumerate(mix):
+        clock.advance(float(gaps[k]))
+        tickets.append(eng.submit(
+            tenant, model, img,
+            deadline_s=20.0 if k % 5 == 0 else None))
+        # step every few arrivals so poisoned requests co-batch with
+        # innocents (what bisection must untangle)
+        if k % 4 == 3 and eng.step():
+            clock.advance(CHAOS_EXEC_COST_S)
+    drained = 0
+    while eng.pending() > 0 and drained < 20 * n:
+        if eng.step():
+            clock.advance(CHAOS_EXEC_COST_S)
+        else:
+            clock.advance(0.002)
+        drained += 1
+    wall = time.perf_counter() - t0
+
+    unresolved = sum(1 for t in tickets if not t.done())
+    statuses = Counter(t.status for t in tickets)
+    poisoned_failed = sum(1 for t in tickets
+                          if inj.is_poisoned(t.request.id)
+                          and t.status == "failed")
+    checked = mismatches = 0
+    for t in tickets:
+        if not t.ok:
+            continue
+        ref = models[t.request.model].run_single(
+            np.asarray(t.request.payload), backend="numpy")
+        checked += 1
+        if not np.array_equal(t.request.result, ref):
+            mismatches += 1
+    snap = metrics.snapshot()
+    breaker = executor.breaker_log()
+    recovered = "half_open->closed" in breaker.get(ladder[0], [])
+    out = {
+        "requests": n, "rate": rate, "seed": seed, "ladder": list(ladder),
+        "gemm_fault_key": gemm_key,
+        "statuses": dict(sorted(statuses.items())),
+        "unresolved": unresolved,
+        "survived": True,                 # the drain loop returned
+        "poisoned": sorted(inj.poisoned),
+        "poisoned_failed": poisoned_failed,
+        "fault_sites": inj.summary(),
+        "fault_events": inj.events(),
+        "reliability": snap["reliability"],
+        "breaker": breaker,
+        "breaker_recovered": recovered,
+        "bitexact": {"checked": checked, "mismatches": mismatches},
+        "final_backend": executor.active_backend,
+        "wall_s": round(wall, 3),
+    }
+    if verbose:
+        rel = snap["reliability"]
+        print(f"  chaos    : {n} reqs, statuses {out['statuses']}, "
+              f"unresolved {unresolved}")
+        print(f"             faults {out['fault_sites']}, "
+              f"retries {rel['retries']} bisections {rel['bisections']} "
+              f"requeues {rel['requeues']} timeouts {rel['timeouts']}")
+        print(f"             breaker[{ladder[0]}] "
+              f"{' '.join(breaker.get(ladder[0], [])) or '(no transitions)'}"
+              f", recovered={recovered}, fallbacks {rel['fallbacks']}")
+        print(f"             bit-exact {checked} checked, "
+              f"{mismatches} mismatches")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# baseline ratchet (deterministic chaos counters only — never wall clock)
+# ---------------------------------------------------------------------------
+_CHAOS_BASELINE_FIELDS = ("statuses", "unresolved", "poisoned",
+                          "poisoned_failed", "fault_sites", "reliability",
+                          "breaker", "breaker_recovered", "bitexact")
+
+
+def write_json(out: dict, out_dir: str) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def check_baseline(out: dict, baseline_dir: str) -> list:
+    """Exact-compare the deterministic chaos fields against the checked-in
+    baseline. Wall-clock and fault-event timestamps are never compared;
+    a baseline recorded under different (seed, requests, ladder) knobs is
+    skipped with a note rather than failed."""
+    path = os.path.join(baseline_dir, "BENCH_serve.json")
+    if not os.path.exists(path):
+        return [f"no baseline at {path} (seed one with --json-out)"]
+    with open(path) as f:
+        base = json.load(f)
+    cur, ref = out.get("chaos"), base.get("chaos")
+    if cur is None or ref is None:
+        return ["baseline check needs the chaos phase on both sides"]
+    knobs = ("seed", "requests", "rate", "ladder")
+    if any(cur.get(k) != ref.get(k) for k in knobs):
+        print(f"  baseline : knob mismatch "
+              f"({ {k: ref.get(k) for k in knobs} } vs current), skipping")
+        return []
+    errors = []
+    for fieldname in _CHAOS_BASELINE_FIELDS:
+        if cur.get(fieldname) != ref.get(fieldname):
+            errors.append(
+                f"chaos.{fieldname} drifted from baseline: "
+                f"{ref.get(fieldname)!r} -> {cur.get(fieldname)!r}")
+    return errors
+
+
 def run(scale: str = "small", backend: str = "jax", requests: int = 96,
         poisson_requests: int = 48, rate: float = 100.0,
         buckets: tuple = (1, 2, 4, 8, 16), seed: int = 0,
-        verify: int = 8, passes: int = 4, verbose: bool = True) -> dict:
-    models = _models(scale)
-    mix = _request_mix(models, requests, seed)
+        verify: int = 8, passes: int = 4,
+        phases: tuple = DEFAULT_PHASES, chaos_requests: int = 48,
+        chaos_rate: float = 200.0, ladder: Optional[tuple] = None,
+        verbose: bool = True) -> dict:
+    phases = tuple(phases)
+    unknown = set(phases) - set(DEFAULT_PHASES)
+    if unknown:
+        raise ValueError(f"unknown phases {sorted(unknown)}; "
+                         f"known: {DEFAULT_PHASES}")
+    out: dict = {"scale": scale, "backend": backend,
+                 "buckets": list(buckets), "phases": list(phases)}
     if verbose:
         print(f"== bench_serve: scale={scale} backend={backend} "
-              f"{requests} burst + {poisson_requests} poisson "
-              f"@ {rate}/s ==")
+              f"phases={','.join(phases)} ==")
 
-    batched, tickets = _throughput_phase(models, mix, backend, buckets,
-                                         passes=passes)
-    serial, _ = _throughput_phase(models, mix, backend, (1,), passes=passes)
-    speedup = round(batched["images_per_sec"]
-                    / max(serial["images_per_sec"], 1e-9), 2)
-    if verbose:
-        print(f"  batched  : {batched['images_per_sec']:8.1f} img/s "
-              f"({batched['batches']} batches, occupancy "
-              f"{batched['batch_occupancy']:.2f})")
-        print(f"  batch-1  : {serial['images_per_sec']:8.1f} img/s "
-              f"({serial['batches']} dispatches)")
-        print(f"  -> continuous batching speedup {speedup}x")
+    need_burst = {"throughput", "verify"} & set(phases)
+    if need_burst:
+        models = _models(scale)
+        mix = _request_mix(models, requests, seed)
+        batched, tickets = _throughput_phase(models, mix, backend, buckets,
+                                             passes=passes)
+        if "throughput" in phases:
+            serial, _ = _throughput_phase(models, mix, backend, (1,),
+                                          passes=passes)
+            speedup = round(batched["images_per_sec"]
+                            / max(serial["images_per_sec"], 1e-9), 2)
+            out["throughput"] = {"batched": batched, "serialized": serial,
+                                 "speedup": speedup}
+            if verbose:
+                print(f"  batched  : {batched['images_per_sec']:8.1f} img/s "
+                      f"({batched['batches']} batches, occupancy "
+                      f"{batched['batch_occupancy']:.2f})")
+                print(f"  batch-1  : {serial['images_per_sec']:8.1f} img/s "
+                      f"({serial['batches']} dispatches)")
+                print(f"  -> continuous batching speedup {speedup}x")
+        if "verify" in phases:
+            out["verified"] = _verify_phase(models, mix, tickets, verify)
+            if verbose:
+                print(f"  verify   : {out['verified']['checked']} outputs "
+                      f"vs batch-1 numpy, "
+                      f"{out['verified']['mismatches']} mismatches")
 
-    poisson = _poisson_phase(models, backend, buckets, poisson_requests,
-                             rate, seed)
-    dropped = sum(poisson["requests"][k]
-                  for k in ("rejected", "shed", "expired"))
-    if verbose:
-        lat = poisson["latency_s"]
-        print(f"  poisson  : offered {rate}/s achieved "
-              f"{poisson['achieved_rate_rps']}/s, latency p50 "
-              f"{lat['p50'] * 1e3:.1f}ms p99 {lat['p99'] * 1e3:.1f}ms, "
-              f"occupancy {poisson['batch_occupancy']:.2f}, "
-              f"dropped {dropped}")
-        for tenant, t in sorted(poisson["per_tenant"].items()):
-            print(f"    {tenant:8s}: {t['completed']:4d} done, "
-                  f"p99 {t['latency_s']['p99'] * 1e3:.1f}ms")
+    if "poisson" in phases:
+        models = _models(scale)
+        poisson = _poisson_phase(models, backend, buckets, poisson_requests,
+                                 rate, seed)
+        dropped = sum(poisson["requests"][k]
+                      for k in ("rejected", "shed", "expired"))
+        out["poisson"], out["dropped"] = poisson, dropped
+        if verbose:
+            lat = poisson["latency_s"]
+            print(f"  poisson  : offered {rate}/s achieved "
+                  f"{poisson['achieved_rate_rps']}/s, latency p50 "
+                  f"{lat['p50'] * 1e3:.1f}ms p99 {lat['p99'] * 1e3:.1f}ms, "
+                  f"occupancy {poisson['batch_occupancy']:.2f}, "
+                  f"dropped {dropped}")
+            for tenant, t in sorted(poisson["per_tenant"].items()):
+                print(f"    {tenant:8s}: {t['completed']:4d} done, "
+                      f"p99 {t['latency_s']['p99'] * 1e3:.1f}ms")
 
-    verified = _verify_phase(models, mix, tickets, verify)
-    if verbose:
-        print(f"  verify   : {verified['checked']} outputs vs batch-1 "
-              f"numpy, {verified['mismatches']} mismatches")
-
-    return {"scale": scale, "backend": backend, "buckets": list(buckets),
-            "throughput": {"batched": batched, "serialized": serial,
-                           "speedup": speedup},
-            "poisson": poisson, "dropped": dropped, "verified": verified}
+    if "chaos" in phases:
+        from repro.vta.backend import DEGRADATION_LADDER
+        out["chaos"] = _chaos_phase(chaos_requests, chaos_rate, seed,
+                                    tuple(ladder or DEGRADATION_LADDER),
+                                    verbose=verbose)
+    return out
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m benchmarks.bench_serve")
     ap.add_argument("--scale", default="small", choices=("tiny", "small"))
     ap.add_argument("--backend", default="jax")
+    ap.add_argument("--phases", default=",".join(DEFAULT_PHASES),
+                    help="comma list from " + ",".join(DEFAULT_PHASES))
     ap.add_argument("--requests", type=int, default=96)
     ap.add_argument("--poisson-requests", type=int, default=48)
     ap.add_argument("--rate", type=float, default=100.0,
@@ -200,7 +405,18 @@ def main(argv=None) -> int:
                     help="outputs to check bit-exactly vs batch-1 numpy")
     ap.add_argument("--passes", type=int, default=4,
                     help="throughput passes; the fastest is reported")
+    ap.add_argument("--chaos-requests", type=int, default=48)
+    ap.add_argument("--chaos-rate", type=float, default=200.0)
+    ap.add_argument("--ladder", default=None,
+                    help="comma list of backends, best first "
+                         "(default: the registered degradation ladder)")
     ap.add_argument("--json", default=None, help="write the report here")
+    ap.add_argument("--json-out", default=None,
+                    help="directory for the baseline-shaped "
+                         "BENCH_serve.json")
+    ap.add_argument("--check-baseline", default=None,
+                    help="directory holding BENCH_serve.json to exact-"
+                         "compare deterministic chaos counters against")
     ap.add_argument("--min-speedup", type=float, default=None,
                     help="fail unless batched/serialized reaches this")
     ap.add_argument("--max-p99", type=float, default=None,
@@ -212,14 +428,20 @@ def main(argv=None) -> int:
               requests=args.requests,
               poisson_requests=args.poisson_requests, rate=args.rate,
               buckets=tuple(int(b) for b in args.buckets.split(",")),
-              seed=args.seed, verify=args.verify, passes=args.passes)
+              seed=args.seed, verify=args.verify, passes=args.passes,
+              phases=tuple(p for p in args.phases.split(",") if p),
+              chaos_requests=args.chaos_requests,
+              chaos_rate=args.chaos_rate,
+              ladder=tuple(args.ladder.split(",")) if args.ladder else None)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=2, sort_keys=True)
         print(f"  report -> {args.json}")
+    if args.json_out:
+        print(f"  baseline -> {write_json(out, args.json_out)}")
 
     failures = []
-    if out["verified"]["mismatches"]:
+    if out.get("verified", {}).get("mismatches"):
         failures.append(f"{out['verified']['mismatches']} outputs diverge "
                         f"from batch-1 numpy")
     if args.min_speedup is not None \
@@ -230,9 +452,26 @@ def main(argv=None) -> int:
             and out["poisson"]["latency_s"]["p99"] > args.max_p99:
         failures.append(f"poisson p99 {out['poisson']['latency_s']['p99']}s "
                         f"> bound {args.max_p99}s")
-    if args.assert_no_drops and out["dropped"]:
+    if args.assert_no_drops and out.get("dropped"):
         failures.append(f"{out['dropped']} requests dropped on an "
                         f"unsaturated load")
+    chaos = out.get("chaos")
+    if chaos is not None:
+        if chaos["unresolved"]:
+            failures.append(f"{chaos['unresolved']} tickets never resolved "
+                            f"under chaos")
+        if chaos["bitexact"]["mismatches"]:
+            failures.append(f"{chaos['bitexact']['mismatches']} chaos "
+                            f"outputs diverge from the numpy oracle")
+        if len(chaos["poisoned"]) != chaos["poisoned_failed"]:
+            failures.append(
+                f"poisoned requests not all isolated+failed: "
+                f"{chaos['poisoned_failed']}/{len(chaos['poisoned'])}")
+        if not chaos["breaker_recovered"]:
+            failures.append(f"breaker on {chaos['ladder'][0]} never "
+                            f"recovered through a half-open probe")
+    if args.check_baseline:
+        failures += check_baseline(out, args.check_baseline)
     for f in failures:
         print(f"FAIL: {f}", file=sys.stderr)
     return 1 if failures else 0

@@ -71,6 +71,17 @@ def get_kernel(name: str, impl: str) -> Callable:
     return impls[impl]
 
 
+def swap_kernel(name: str, impl: str, fn: Callable) -> Callable:
+    """Atomically replace implementation ``impl`` of kernel ``name`` and
+    return the previous callable so callers can restore it — the hook
+    fault-injection wrappers (serve/faults.py) and instrumented test
+    doubles use. KeyError (naming the alternatives) when the pair is
+    unknown: swapping never silently registers a new implementation."""
+    old = get_kernel(name, impl)
+    _KERNELS[name][impl] = fn
+    return old
+
+
 def available_impls(name: str) -> list:
     _ensure_builtins()
     return sorted(_KERNELS.get(name, {}))

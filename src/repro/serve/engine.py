@@ -18,16 +18,30 @@ executor — every fairness/backpressure/deadline decision replays exactly,
 with no JAX in the loop. Production wires the ``SystemClock`` and a
 ``BackendExecutor`` over the jax backend, optionally on a background
 thread (``start``/``stop``).
+
+Execution is *supervised* (docs/serving.md, "Failure semantics"): the
+serve loop never dies on an executor exception. A failing batch is
+retried with exponential backoff on the engine clock (``max_retries``),
+guarded by an optional watchdog (``exec_timeout_s``), and on repeated
+failure **bisected** — split in two and requeued ahead of fresh work so a
+poisoned request is isolated and failed alone while its innocent
+batch-mates complete. Requeues are budgeted per request and deadlines are
+re-checked at every requeue/dispatch, so supervision is total: every
+submitted ticket resolves. ``faults`` takes a seeded
+``serve/faults.FaultInjector`` for deterministic chaos testing; the
+default ``None`` keeps the fault machinery entirely off the hot path.
 """
 from __future__ import annotations
 
 import itertools
 import threading
+from collections import deque
 from typing import Callable, Optional, Union
 
 import numpy as np
 
 from repro.serve.clock import FakeClock, SystemClock
+from repro.serve.faults import ExecutorTimeout, FaultInjector
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queues import REJECT_NEW, Request
 from repro.serve.scheduler import DEFAULT_BUCKETS, BatchPlan, BatchScheduler
@@ -35,7 +49,8 @@ from repro.serve.session import (ServeSession, greedy_token,  # noqa: F401
                                  make_decode_step, make_prefill_step)
 
 __all__ = ["ServeSession", "make_prefill_step", "make_decode_step",
-           "greedy_token", "Ticket", "BackendExecutor", "VTAServeEngine"]
+           "greedy_token", "Ticket", "BackendExecutor", "VTAServeEngine",
+           "ExecutorTimeout"]
 
 
 class Ticket:
@@ -44,7 +59,7 @@ class Ticket:
     def __init__(self, request: Request):
         self.request = request
         self._done = threading.Event()
-        if request.status in ("rejected", "shed", "expired"):
+        if request.status in ("rejected", "shed", "expired", "failed"):
             self._done.set()
 
     @property
@@ -63,7 +78,9 @@ class Ticket:
 
     def result(self, timeout: Optional[float] = None):
         """Block until resolved; returns the output array or raises
-        ``RuntimeError`` naming the drop reason (queue_full / deadline)."""
+        ``RuntimeError`` naming the terminal reason (queue_full /
+        deadline_expired / the execution failure after supervision gave
+        up)."""
         if not self._done.wait(timeout):
             raise TimeoutError(f"request {self.request.id} still pending")
         if self.request.status != "done":
@@ -108,7 +125,12 @@ class VTAServeEngine:
                  queue_capacity: int = 64,
                  shed_policy: str = REJECT_NEW,
                  max_wait_s: float = 0.0,
-                 metrics: Optional[ServeMetrics] = None):
+                 metrics: Optional[ServeMetrics] = None,
+                 faults: Optional[FaultInjector] = None,
+                 max_retries: int = 2,
+                 retry_backoff_s: float = 0.005,
+                 exec_timeout_s: Optional[float] = None,
+                 requeue_budget: int = 6):
         self.models = models or {}
         self.clock = clock or SystemClock()
         self.executor = executor if executor is not None \
@@ -118,9 +140,20 @@ class VTAServeEngine:
                                         shed_policy=shed_policy,
                                         max_wait_s=max_wait_s)
         self.metrics = metrics or ServeMetrics()
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.exec_timeout_s = exec_timeout_s
+        self.requeue_budget = requeue_budget
+        self.faults = faults
+        if faults is not None:
+            if faults.clock is None:
+                faults.clock = self.clock
+            if faults.on_fire is None:
+                faults.on_fire = self.metrics.on_fault
         self._lock = threading.Lock()
         self._ids = itertools.count()
         self._tickets: dict = {}
+        self._retry_queue: deque = deque()   # bisected sub-batches, LIFO-ish
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
 
@@ -145,13 +178,19 @@ class VTAServeEngine:
                           payload=image, arrival_t=now,
                           deadline=None if deadline_s is None
                           else now + deadline_s)
+            if self.faults is not None:
+                self.faults.on_submit(req)     # may bit-flip the payload
             if self.metrics.started_at == 0.0:
                 self.metrics.started_at = now
             self.metrics.on_submit(tenant)
             adm = self.scheduler.submit(req, now)
             ticket = Ticket(req)
-            self._tickets[req.id] = ticket
-            if not adm.accepted:
+            if adm.accepted:
+                # only accepted requests are tracked: a rejected ticket is
+                # born resolved (status/error set at admission) and must
+                # not leak an entry that no later _finish will ever pop
+                self._tickets[req.id] = ticket
+            else:
                 self.metrics.on_reject(tenant)
             if adm.shed is not None:
                 self.metrics.on_shed(adm.shed.tenant)
@@ -160,7 +199,8 @@ class VTAServeEngine:
 
     def pending(self) -> int:
         with self._lock:
-            return self.scheduler.pending()
+            return self.scheduler.pending() \
+                + sum(len(p.requests) for p in self._retry_queue)
 
     # ------------------------------------------------------------------
     # the serving loop
@@ -170,14 +210,45 @@ class VTAServeEngine:
         if t is not None:
             t._resolve()
 
+    def _expire_locked(self, req: Request) -> None:
+        req.status = "expired"
+        req.error = "deadline_expired"
+        self.metrics.on_expire(req.tenant)
+        self._finish(req)
+
+    def _fail_locked(self, req: Request, err: Exception,
+                     note: str = "") -> None:
+        req.status = "failed"
+        req.error = repr(err) + (f" [{note}]" if note else "")
+        self.metrics.on_fail(req.tenant)
+        self._finish(req)
+
+    def _next_plan_locked(self) -> Optional[BatchPlan]:
+        """Bisected sub-batches first (isolation in progress beats fresh
+        work), then the scheduler; deadline-purges requeued requests."""
+        now = self.clock.now()
+        while self._retry_queue:
+            plan = self._retry_queue.popleft()
+            live = []
+            for r in plan.requests:
+                if r.deadline is not None and r.deadline <= now:
+                    self._expire_locked(r)
+                else:
+                    live.append(r)
+            if live:
+                plan.requests = live
+                plan.bucket = self.scheduler.bucket_for(len(live))
+                return plan
+        plan, expired = self.scheduler.next_batch(now)
+        for req in expired:
+            self._expire_locked(req)
+        return plan
+
     def step(self) -> bool:
         """Assemble and execute at most one batch; False when nothing was
         dispatchable (idle, or a partial batch is being held back)."""
         with self._lock:
-            plan, expired = self.scheduler.next_batch(self.clock.now())
-            for req in expired:
-                self.metrics.on_expire(req.tenant)
-                self._finish(req)
+            plan = self._next_plan_locked()
             if plan is None:
                 return False
             t0 = self.clock.now()
@@ -187,30 +258,127 @@ class VTAServeEngine:
         self._execute(plan, t0)
         return True
 
-    def _execute(self, plan: BatchPlan, t0: float) -> None:
-        try:
-            outs = self.executor(plan.model,
-                                 [r.payload for r in plan.requests],
-                                 plan.bucket)
-        except Exception as e:                       # noqa: BLE001
+    # ------------------------------------------------------------------
+    # supervised execution: retry -> watchdog -> bisection
+    # ------------------------------------------------------------------
+    def _call_executor(self, plan: BatchPlan) -> list:
+        if self.faults is not None:
+            self.faults.on_dispatch(plan.model, plan.requests)
+        return self.executor(plan.model,
+                             [r.payload for r in plan.requests],
+                             plan.bucket)
+
+    def _dispatch(self, plan: BatchPlan, t0: float) -> list:
+        """One executor attempt, watchdog-guarded when ``exec_timeout_s``
+        is set: the call runs on a disposable worker thread joined with a
+        real-time bound (a truly hung executor is abandoned — daemon
+        thread, results discarded), and elapsed *engine-clock* time is
+        checked afterwards so FakeClock-driven hangs trip the watchdog
+        deterministically without any real waiting."""
+        if self.exec_timeout_s is None:
+            return self._call_executor(plan)
+        box: dict = {}
+
+        def work():
+            try:
+                box["out"] = self._call_executor(plan)
+            except BaseException as e:               # noqa: BLE001
+                box["err"] = e
+
+        th = threading.Thread(target=work, daemon=True, name="vta-exec")
+        th.start()
+        th.join(None if isinstance(self.clock, FakeClock)
+                else self.exec_timeout_s)
+        if th.is_alive():
+            raise ExecutorTimeout(
+                f"executor still running after {self.exec_timeout_s}s "
+                f"(batch of {plan.filled} for {plan.model!r} abandoned)")
+        # budget expiry preempts whatever the call did afterwards — under a
+        # real clock join(timeout) would have fired before any late error
+        # or result was observed, so the FakeClock path must classify the
+        # same way for the two clocks to replay identically
+        elapsed = self.clock.now() - t0
+        if elapsed > self.exec_timeout_s:
+            raise ExecutorTimeout(
+                f"executor took {elapsed:.3f}s on the engine clock "
+                f"(> {self.exec_timeout_s}s watchdog budget)")
+        if "err" in box:
+            raise box["err"]
+        return box["out"]
+
+    def _attempt(self, plan: BatchPlan) -> Optional[Exception]:
+        """Run ``plan`` with bounded retry + exponential backoff on the
+        engine clock. Returns None on success (requests resolved), else
+        the last failure."""
+        last: Optional[Exception] = None
+        for attempt in range(self.max_retries + 1):
+            if attempt:
+                with self._lock:
+                    self.metrics.on_retry()
+                    for r in plan.requests:
+                        r.status = "retrying"
+                self.clock.sleep(self.retry_backoff_s * (2 ** (attempt - 1)))
+                with self._lock:
+                    for r in plan.requests:
+                        r.status = "dispatched"
+            t_a = self.clock.now()
+            try:
+                outs = self._dispatch(plan, t_a)
+            except Exception as e:                   # noqa: BLE001
+                if isinstance(e, ExecutorTimeout):
+                    with self._lock:
+                        self.metrics.on_timeout()
+                last = e
+                continue
+            t1 = self.clock.now()
             with self._lock:
-                for req in plan.requests:
-                    req.status = "failed"
-                    req.error = repr(e)
+                self.metrics.on_batch(plan.filled, plan.bucket, t1 - t_a)
+                for req, out in zip(plan.requests, outs):
+                    req.status = "done"
+                    req.done_t = t1
+                    req.result = out
+                    self.metrics.on_complete(req.tenant,
+                                             req.dispatch_t - req.arrival_t,
+                                             t1 - req.arrival_t)
+                    self.metrics.finished_at = t1
                     self._finish(req)
-            raise
-        t1 = self.clock.now()
+            return None
+        return last
+
+    def _execute(self, plan: BatchPlan, t0: float) -> None:
+        """Supervised execution: never raises. After retries are exhausted
+        a multi-request batch is bisected — both halves requeued ahead of
+        fresh work (budgeted, deadline-checked) — so a poisoned request is
+        eventually isolated in a batch of one and failed alone."""
+        err = self._attempt(plan)
+        if err is None:
+            return
         with self._lock:
-            self.metrics.on_batch(plan.filled, plan.bucket, t1 - t0)
-            for req, out in zip(plan.requests, outs):
-                req.status = "done"
-                req.done_t = t1
-                req.result = out
-                self.metrics.on_complete(req.tenant,
-                                         req.dispatch_t - req.arrival_t,
-                                         t1 - req.arrival_t)
-                self.metrics.finished_at = t1
-                self._finish(req)
+            reqs = list(plan.requests)
+            if len(reqs) == 1:
+                self._fail_locked(reqs[0], err)
+                return
+            self.metrics.on_bisection()
+            now = self.clock.now()
+            mid = len(reqs) // 2
+            for half in (reqs[:mid], reqs[mid:]):
+                keep = []
+                for r in half:
+                    if r.deadline is not None and r.deadline <= now:
+                        self._expire_locked(r)
+                    elif r.requeues >= self.requeue_budget:
+                        self._fail_locked(r, err, note="requeue budget "
+                                          f"{self.requeue_budget} exhausted")
+                    else:
+                        r.requeues += 1
+                        r.status = "queued"
+                        keep.append(r)
+                if keep:
+                    self.metrics.on_requeue(len(keep))
+                    self._retry_queue.append(BatchPlan(
+                        model=plan.model, requests=keep,
+                        bucket=self.scheduler.bucket_for(len(keep)),
+                        origin="bisect"))
 
     def drain(self, max_batches: int = 10_000) -> int:
         """Serve until idle (or the safety cap); returns batches run. With
@@ -235,8 +403,17 @@ class VTAServeEngine:
         self._stop.clear()
 
         def loop():
+            # supervised: _execute never raises, and even an unexpected
+            # scheduler/metrics bug must not kill serving — count it,
+            # back off one poll interval, keep going
             while not self._stop.is_set():
-                if not self.step():
+                try:
+                    busy = self.step()
+                except Exception:                    # noqa: BLE001
+                    with self._lock:
+                        self.metrics.on_loop_error()
+                    busy = False
+                if not busy:
                     self.clock.sleep(poll_interval_s)
 
         self._thread = threading.Thread(target=loop, name="vta-serve",

@@ -51,13 +51,14 @@ class TenantMetrics:
     rejected: int = 0            # bounded-queue admission refusals
     shed: int = 0                # evicted by the shed_oldest policy
     expired: int = 0             # deadline passed before dispatch
+    failed: int = 0              # execution failed after retry + bisection
     queue_wait: Histogram = field(default_factory=Histogram)
     latency: Histogram = field(default_factory=Histogram)
 
     def to_dict(self) -> dict:
         return {"submitted": self.submitted, "completed": self.completed,
                 "rejected": self.rejected, "shed": self.shed,
-                "expired": self.expired,
+                "expired": self.expired, "failed": self.failed,
                 "queue_wait_s": self.queue_wait.summary(),
                 "latency_s": self.latency.summary()}
 
@@ -73,6 +74,15 @@ class ServeMetrics:
     batch_exec_s: Histogram = field(default_factory=Histogram)
     started_at: float = 0.0
     finished_at: float = 0.0
+    # -- reliability (supervised execution, serve/faults.py + breaker.py) --
+    retries: int = 0             # batch re-attempts after an executor failure
+    bisections: int = 0          # failed multi-request batches split in two
+    requeues: int = 0            # requests re-enqueued by bisection
+    timeouts: int = 0            # executor watchdog trips
+    loop_errors: int = 0         # unexpected serve-loop exceptions survived
+    fallbacks: dict = field(default_factory=dict)   # backend -> executions
+    breaker_log: list = field(default_factory=list)  # (key, old, new)
+    faults: dict = field(default_factory=dict)       # fault site -> fires
 
     def tenant(self, name: str) -> TenantMetrics:
         if name not in self.tenants:
@@ -106,6 +116,34 @@ class ServeMetrics:
         t.queue_wait.record(queue_wait_s)
         t.latency.record(latency_s)
 
+    # -- reliability hooks -------------------------------------------------
+    def on_fail(self, tenant: str) -> None:
+        self.tenant(tenant).failed += 1
+
+    def on_retry(self) -> None:
+        self.retries += 1
+
+    def on_bisection(self) -> None:
+        self.bisections += 1
+
+    def on_requeue(self, n: int = 1) -> None:
+        self.requeues += n
+
+    def on_timeout(self) -> None:
+        self.timeouts += 1
+
+    def on_loop_error(self) -> None:
+        self.loop_errors += 1
+
+    def on_fallback(self, backend: str) -> None:
+        self.fallbacks[backend] = self.fallbacks.get(backend, 0) + 1
+
+    def on_breaker(self, key: str, old: str, new: str) -> None:
+        self.breaker_log.append((key, old, new))
+
+    def on_fault(self, site: str) -> None:
+        self.faults[site] = self.faults.get(site, 0) + 1
+
     # -- reduction ---------------------------------------------------------
     def _all(self, attr: str) -> list:
         out: list = []
@@ -125,6 +163,17 @@ class ServeMetrics:
                 "rejected": sum(t.rejected for t in self.tenants.values()),
                 "shed": sum(t.shed for t in self.tenants.values()),
                 "expired": sum(t.expired for t in self.tenants.values()),
+                "failed": sum(t.failed for t in self.tenants.values()),
+            },
+            "reliability": {
+                "retries": self.retries,
+                "bisections": self.bisections,
+                "requeues": self.requeues,
+                "timeouts": self.timeouts,
+                "loop_errors": self.loop_errors,
+                "fallbacks": dict(sorted(self.fallbacks.items())),
+                "breaker_transitions": [list(t) for t in self.breaker_log],
+                "faults": dict(sorted(self.faults.items())),
             },
             "latency_s": {"p50": round(percentile(lat, 50), 6),
                           "p99": round(percentile(lat, 99), 6),

@@ -28,12 +28,16 @@ class Request:
     payload: object              # (1, C, H, W) int8 image
     arrival_t: float = 0.0
     deadline: Optional[float] = None   # absolute engine-clock time
-    # engine-stamped lifecycle
-    status: str = "queued"       # queued|dispatched|done|rejected|shed|expired
+    # engine-stamped lifecycle (full state machine in docs/serving.md):
+    # queued -> dispatched -> done, with supervision detours through
+    # retrying (backoff between attempts) and back to queued (bisection
+    # requeue); terminal: done|failed|rejected|shed|expired
+    status: str = "queued"
     dispatch_t: float = -1.0
     done_t: float = -1.0
     result: object = None
     error: Optional[str] = None
+    requeues: int = 0            # bisection requeues consumed (budgeted)
 
 
 @dataclass

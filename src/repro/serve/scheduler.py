@@ -54,10 +54,13 @@ class TenantLane:
 @dataclass
 class BatchPlan:
     """One assembled dispatch: ``len(requests) <= bucket``; the pad slots
-    (``bucket - len(requests)``) are dead weight the executor fills."""
+    (``bucket - len(requests)``) are dead weight the executor fills.
+    ``origin`` distinguishes scheduler-assembled batches from the halves
+    the engine's failure bisection requeues (engine.py)."""
     model: str
     requests: list
     bucket: int
+    origin: str = "scheduler"    # "scheduler" | "bisect"
 
     @property
     def filled(self) -> int:

@@ -147,3 +147,27 @@ def _jax_pallas_factory() -> Backend:
 register_backend("numpy", NumpyBackend)
 register_backend("jax", _jax_factory)
 register_backend("jax-pallas", _jax_pallas_factory)
+
+
+# ---------------------------------------------------------------------------
+# Degradation ladder (serving reliability, serve/breaker.py)
+# ---------------------------------------------------------------------------
+# Best-first order for fault degradation. Because every backend executes
+# the identical lowered trace bit-for-bit, stepping down the ladder under
+# faults trades throughput only — result fidelity is preserved by
+# construction (asserted in tests/test_faults.py).
+DEGRADATION_LADDER = ("jax-pallas", "jax", "numpy")
+
+
+def backend_kernel_impls(backend: Union[str, Backend]) -> tuple:
+    """The registry (kernel, impl) pairs the resolved backend instance
+    routes compute through — the coordinates per-(backend, kernel-impl)
+    circuit breakers and ``kernel.impl`` fault specs are scoped by. The
+    numpy reference resolves no registry kernels: ``()``."""
+    be = get_backend(backend)
+    pairs = []
+    for kernel, attr in (("gemm", "gemm_impl"), ("alu_chain", "alu_impl")):
+        impl = getattr(be, attr, None)
+        if impl is not None:
+            pairs.append((kernel, impl))
+    return tuple(pairs)

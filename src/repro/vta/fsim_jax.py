@@ -44,6 +44,7 @@ from __future__ import annotations
 import collections
 import functools
 import os
+import warnings
 from typing import Optional
 
 import jax
@@ -150,8 +151,14 @@ def enable_persistent_cache() -> None:
         os.makedirs(path, exist_ok=True)
         jax.config.update("jax_compilation_cache_dir", path)
         jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.1)
-    except Exception:                                # pragma: no cover
-        pass                 # cache is an optimization, never a requirement
+    except Exception as e:                           # pragma: no cover
+        # the cache is an optimization, never a requirement — but a silent
+        # failure here makes degraded cold-start perf undiagnosable, so
+        # name the path and error once (_CACHE_READY gates re-entry)
+        warnings.warn(
+            f"persistent XLA compile cache disabled: setup failed for "
+            f"{path!r} ({e!r}); every process will re-pay XLA compilation "
+            f"on cold start", RuntimeWarning, stacklevel=2)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,329 @@
+"""Fault injection + supervised serving tests.
+
+Layers, cheapest first:
+
+* injector unit tests (no engine): plan validation, deterministic replay
+  of the fault log, registry kernel wrapping;
+* supervised-engine tests with a FakeClock and throwaway executors:
+  bounded retry, the watchdog, batch bisection isolating a poisoned
+  request, requeue-budget termination, deadlines honored mid-bisection;
+* breaker/ladder tests: CircuitBreaker state machine, and the degradation
+  ladder serving bit-exact results through demotion and half-open
+  recovery on the real served models;
+* a mini chaos-determinism check: same seed -> identical fault log and
+  metrics snapshot, the property the CI chaos baseline relies on.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.breaker import (CLOSED, HALF_OPEN, OPEN, AllBackendsFailed,
+                                 CircuitBreaker, DegradingBackendExecutor)
+from repro.serve.clock import FakeClock
+from repro.serve.engine import VTAServeEngine
+from repro.serve.faults import (FaultInjector, FaultPlan, FaultSpec,
+                                InjectedFault, PoisonedPayload)
+from repro.serve.model import served_model
+
+
+def _img(i, shape=(4,)):
+    return np.full(shape, i % 100, np.int8)
+
+
+class EchoExecutor:
+    """Returns each payload unchanged; optionally burns fake time or fails
+    the first ``fail_first`` calls."""
+
+    def __init__(self, clock=None, exec_s=0.0, fail_first=0):
+        self.clock, self.exec_s = clock, exec_s
+        self.fail_first = fail_first
+        self.calls = []
+
+    def __call__(self, model, images, bucket):
+        self.calls.append((model, [np.array(p) for p in images], bucket))
+        if self.clock is not None and self.exec_s:
+            self.clock.advance(self.exec_s)
+        if len(self.calls) <= self.fail_first:
+            raise RuntimeError(f"synthetic failure #{len(self.calls)}")
+        return [np.array(p) for p in images]
+
+
+def _engine(executor=None, plan=None, **kw):
+    fx = executor if executor is not None else EchoExecutor()
+    clock = getattr(fx, "clock", None) or FakeClock()
+    fx.clock = clock                       # one clock for engine + executor
+    faults = FaultInjector(plan, clock=clock) if plan is not None else None
+    kw.setdefault("buckets", (1, 2, 4, 8))
+    eng = VTAServeEngine(clock=clock, executor=fx, faults=faults, **kw)
+    eng.add_tenant("a")
+    return eng, clock, fx
+
+
+# ---------------------------------------------------------------------------
+# injector unit tests
+# ---------------------------------------------------------------------------
+
+
+def test_plan_validation_rejects_bad_specs():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan(specs=(FaultSpec("executor.explode"),)).validate()
+    with pytest.raises(ValueError, match="prob"):
+        FaultPlan(specs=(FaultSpec("executor.raise", prob=1.5),)).validate()
+    with pytest.raises(KeyError, match="no impl"):
+        FaultPlan(specs=(
+            FaultSpec("kernel.impl", key="gemm:nope"),)).validate()
+    with pytest.raises(KeyError, match="unknown kernel"):
+        FaultPlan(specs=(
+            FaultSpec("kernel.impl", key="nope:einsum"),)).validate()
+
+
+def test_fire_honors_after_times_and_key():
+    inj = FaultInjector(FaultPlan(seed=3, specs=(
+        FaultSpec("executor.raise", key="m", after=2, times=2),)))
+    fired = [inj.fire("executor.raise", "m") is not None for _ in range(6)]
+    assert fired == [False, False, True, True, False, False]
+    assert inj.fire("executor.raise", "other") is None   # key mismatch
+    assert inj.summary() == {"executor.raise": 2}
+    assert [e["seq"] for e in inj.events()] == [0, 1]
+
+
+def test_fault_log_replays_identically():
+    plan = FaultPlan(seed=11, specs=(
+        FaultSpec("executor.raise", prob=0.4, times=5),
+        FaultSpec("executor.raise", key="n", prob=0.7),))
+
+    def run():
+        inj = FaultInjector(plan)
+        hits = [(site, key, inj.fire(site, key) is not None)
+                for i in range(40)
+                for site, key in [("executor.raise", "mn"[i % 2])]]
+        return hits, inj.events()
+
+    assert run() == run()
+
+
+def test_bitflip_poisons_a_private_copy():
+    class Req:
+        id, model = 9, "m"
+        payload = np.zeros((8,), np.int8)
+
+    original = Req.payload
+    inj = FaultInjector(FaultPlan(seed=5, specs=(
+        FaultSpec("payload.bitflip", bits=3, times=1),)))
+    inj.on_submit(Req)
+    assert inj.is_poisoned(9)
+    assert not np.array_equal(Req.payload, original)   # corrupted copy
+    assert not original.any()                          # caller array intact
+    with pytest.raises(PoisonedPayload):
+        inj.on_dispatch("m", [Req])
+
+
+def test_install_kernel_faults_wraps_registry():
+    from repro.kernels.registry import get_kernel
+
+    pytest.importorskip("jax")
+    inj = FaultInjector(FaultPlan(specs=(
+        FaultSpec("kernel.impl", key="gemm:einsum", times=1),)))
+    before = get_kernel("gemm", "einsum")
+    inj.install_kernel_faults()
+    try:
+        a = np.arange(6, dtype=np.float32).reshape(2, 3)
+        b = np.ones((3, 2), np.float32)
+        with pytest.raises(InjectedFault, match="gemm:einsum"):
+            get_kernel("gemm", "einsum")(a, b)
+        out = get_kernel("gemm", "einsum")(a, b)       # fault exhausted
+        np.testing.assert_allclose(np.asarray(out), a @ b)
+    finally:
+        inj.restore_kernels()
+    assert get_kernel("gemm", "einsum") is before
+
+
+# ---------------------------------------------------------------------------
+# supervised engine: retry, watchdog, bisection
+# ---------------------------------------------------------------------------
+
+
+def test_retry_absorbs_transient_failures():
+    clock = FakeClock()
+    fx = EchoExecutor(clock, fail_first=2)
+    eng, clock, _ = _engine(executor=fx, max_retries=2,
+                            retry_backoff_s=0.01)
+    t = eng.submit("a", "m", _img(1))
+    eng.drain()
+    assert t.ok and np.array_equal(t.result(), _img(1))
+    assert eng.metrics.retries == 2
+    assert len(fx.calls) == 3
+    # exponential backoff on the engine clock: 0.01 + 0.02
+    assert clock.now() == pytest.approx(0.03)
+
+
+def test_exhausted_retries_fail_the_request():
+    eng, _, fx = _engine(executor=EchoExecutor(fail_first=99),
+                         max_retries=1)
+    t = eng.submit("a", "m", _img(2))
+    eng.drain()
+    assert t.status == "failed" and not t.ok
+    with pytest.raises(RuntimeError, match="synthetic failure"):
+        t.result(timeout=0)
+    assert eng.metrics.snapshot()["requests"]["failed"] == 1
+
+
+def test_watchdog_trips_on_injected_hang():
+    plan = FaultPlan(seed=1, specs=(
+        FaultSpec("executor.hang", times=1, hang_s=1.0),))
+    eng, _, _ = _engine(plan=plan, max_retries=1, exec_timeout_s=0.5)
+    t = eng.submit("a", "m", _img(3))
+    eng.drain()
+    assert t.ok                            # retry succeeded after the hang
+    assert eng.metrics.timeouts == 1 and eng.metrics.retries == 1
+    assert eng.faults.summary() == {"executor.hang": 1}
+
+
+def test_bisection_isolates_poisoned_request():
+    # poison exactly the 3rd submission; innocents must all complete
+    plan = FaultPlan(seed=2, specs=(
+        FaultSpec("payload.bitflip", after=2, times=1),))
+    eng, _, fx = _engine(plan=plan, max_retries=0)
+    tks = [eng.submit("a", "m", _img(i)) for i in range(8)]
+    eng.drain()
+    assert eng.faults.poisoned == {2}
+    assert tks[2].status == "failed"
+    with pytest.raises(RuntimeError, match="poisoned"):
+        tks[2].result(timeout=0)
+    for i, t in enumerate(tks):
+        if i != 2:
+            assert t.ok and np.array_equal(t.result(), _img(i))
+    assert eng.metrics.bisections >= 1 and eng.metrics.requeues >= 2
+    # the poisoned (bit-flipped, so non-constant) payload never reached the
+    # executor: bisection failed it without executing it
+    for _, images, _ in fx.calls:
+        assert all(len(set(img.tolist())) == 1 for img in images)
+    assert eng.pending() == 0
+
+
+def test_requeue_budget_bounds_bisection():
+    eng, _, _ = _engine(executor=EchoExecutor(fail_first=10 ** 6),
+                        max_retries=0, requeue_budget=1)
+    tks = [eng.submit("a", "m", _img(i)) for i in range(4)]
+    assert eng.drain() < 50                # terminates, no infinite requeue
+    assert all(t.status == "failed" for t in tks)
+    assert any("requeue budget" in t.request.error for t in tks)
+
+
+def test_deadlines_respected_during_bisection():
+    clock = FakeClock()
+    fx = EchoExecutor(clock, exec_s=0.2, fail_first=10 ** 6)
+    eng, clock, _ = _engine(executor=fx, max_retries=0, requeue_budget=20)
+    tks = [eng.submit("a", "m", _img(i), deadline_s=0.3) for i in range(4)]
+    eng.drain()
+    assert all(t.done() for t in tks)
+    assert all(t.status in ("failed", "expired") for t in tks)
+    assert any(t.status == "expired" for t in tks)
+    assert eng.metrics.snapshot()["requests"]["expired"] >= 1
+
+
+def test_faultless_engine_keeps_fault_machinery_off():
+    eng, _, _ = _engine()
+    assert eng.faults is None
+    t = eng.submit("a", "m", _img(7))
+    eng.drain()
+    assert t.ok and eng.metrics.snapshot()["reliability"]["faults"] == {}
+
+
+# ---------------------------------------------------------------------------
+# breaker + degradation ladder
+# ---------------------------------------------------------------------------
+
+
+def test_circuit_breaker_state_machine():
+    br = CircuitBreaker("k", fail_threshold=2, cooldown_s=1.0)
+    assert br.allow(0.0) and br.state == CLOSED
+    br.on_failure(0.0)
+    assert br.state == CLOSED              # below threshold
+    br.on_failure(0.1)
+    assert br.state == OPEN                # tripped
+    assert not br.allow(0.5)               # still cooling
+    assert br.allow(1.2) and br.state == HALF_OPEN   # probe admitted
+    br.on_failure(1.2)
+    assert br.state == OPEN                # probe failed: re-armed
+    assert not br.allow(1.5)               # cooldown restarted at 1.2
+    assert br.allow(2.3) and br.state == HALF_OPEN
+    br.on_success(2.3)
+    assert br.state == CLOSED and br.consecutive_failures == 0
+    assert br.transitions == [(CLOSED, OPEN), (OPEN, HALF_OPEN),
+                              (HALF_OPEN, OPEN), (OPEN, HALF_OPEN),
+                              (HALF_OPEN, CLOSED)]
+
+
+def test_ladder_degrades_and_recovers_bit_exact():
+    pytest.importorskip("jax")
+    from repro.vta.backend import backend_kernel_impls
+
+    m = served_model("mobilenet", "tiny")
+    models = {"mobilenet": m}
+    img = m.random_images(1, seed=21)[0]
+    ref = m.run_single(img, backend="numpy")
+
+    impls = dict(backend_kernel_impls("jax"))
+    clock = FakeClock()
+    inj = FaultInjector(FaultPlan(seed=4, specs=(
+        FaultSpec("kernel.impl", key=f"gemm:{impls['gemm']}", times=3),)),
+        clock=clock)
+    ladder = DegradingBackendExecutor(models, ("jax", "numpy"), clock=clock,
+                                      faults=inj, fail_threshold=2,
+                                      cooldown_s=0.5)
+    outs = []
+    for _ in range(6):
+        outs.append(ladder("mobilenet", [img], 1)[0])
+        clock.advance(0.3)
+    # every output — degraded or not — is bit-exact vs the numpy oracle
+    for out in outs:
+        assert np.array_equal(out, ref)
+    log = ladder.breaker_log()["jax"]
+    assert log[:2] == ["closed->open", "open->half_open"]
+    assert "half_open->closed" in log      # probe recovery after exhaustion
+    assert ladder.breaker_states()["jax"] == CLOSED
+    assert ladder.active_backend == "jax"
+
+
+def test_ladder_all_rungs_failing_raises():
+    m = served_model("mobilenet", "tiny")
+    inj = FaultInjector(FaultPlan(specs=(
+        FaultSpec("kernel.impl", key="*"),)), clock=FakeClock())
+
+    class Broken:
+        def __call__(self, *a):
+            raise RuntimeError("down")
+
+    ladder = DegradingBackendExecutor({"mobilenet": m}, ("numpy",),
+                                      clock=FakeClock(), faults=inj)
+    ladder.rungs[0].executor = Broken()
+    with pytest.raises(AllBackendsFailed):
+        ladder("mobilenet", [m.random_images(1)[0]], 1)
+
+
+# ---------------------------------------------------------------------------
+# chaos determinism (the property the CI baseline diffs rely on)
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_replays_identically():
+    plan = FaultPlan(seed=9, specs=(
+        FaultSpec("executor.raise", prob=0.3, times=3),
+        FaultSpec("payload.bitflip", prob=0.25, times=2),
+        FaultSpec("executor.hang", times=1, after=3, hang_s=0.4),))
+
+    def run():
+        eng, clock, _ = _engine(plan=plan, max_retries=1,
+                                retry_backoff_s=0.01, exec_timeout_s=0.2)
+        tks = []
+        for i in range(24):
+            clock.advance(0.003)
+            tks.append(eng.submit("a", "mn"[i % 2] * 2, _img(i)))
+            if i % 3 == 2:
+                eng.step()
+        eng.drain()
+        assert all(t.done() for t in tks)
+        return ([t.status for t in tks], eng.faults.events(),
+                eng.metrics.snapshot())
+
+    assert run() == run()

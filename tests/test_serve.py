@@ -220,6 +220,48 @@ def test_engine_backpressure_surfaces_to_callers():
     assert snap["rejected"] == 2 and snap["completed"] == 2
 
 
+def test_engine_rejected_ticket_resolves_and_never_leaks():
+    """A rejected ticket is born resolved — ``result()`` raises immediately
+    instead of hanging to TimeoutError — and leaves no ``_tickets`` entry
+    behind (nothing will ever pop one for a request that never enters the
+    scheduler)."""
+    eng, _, _ = _fake_engine(queue_capacity=1, shed_policy=REJECT_NEW)
+    ok, rej = eng.submit("a", "m", "x"), eng.submit("a", "m", "y")
+    assert rej.done() and rej.status == "rejected"
+    with pytest.raises(RuntimeError, match="queue_full"):
+        rej.result()                       # no timeout: must not block
+    assert set(eng._tickets) == {ok.request.id}
+    eng.drain()
+    assert eng._tickets == {}              # fully reclaimed after serving
+
+
+def test_serve_loop_survives_executor_exceptions():
+    """start()-driven serving continues past an executor exception: the
+    failed batch's tickets resolve as failed and later work completes."""
+    class FlakyExecutor:
+        def __call__(self, model, images, bucket):
+            if model == "bad":
+                raise RuntimeError("boom")
+            return [f"out:{p}" for p in images]
+
+    eng = VTAServeEngine(clock=FakeClock(), executor=FlakyExecutor(),
+                         buckets=(1, 2, 4), max_retries=0)
+    eng.start(poll_interval_s=0.0)
+    try:
+        bad = [eng.submit("a", "bad", f"b{i}") for i in range(3)]
+        good = [eng.submit("a", "good", f"g{i}") for i in range(3)]
+        assert all(t._done.wait(5) for t in bad + good), \
+            "serve loop died: tickets never resolved"
+    finally:
+        eng.stop(drain=False)
+    assert all(t.status == "failed" for t in bad)
+    with pytest.raises(RuntimeError, match="boom"):
+        bad[0].result(timeout=0)
+    assert [t.result(timeout=0) for t in good] == \
+        [f"out:g{i}" for i in range(3)]
+    assert eng.metrics.snapshot()["requests"]["failed"] == 3
+
+
 def test_engine_shed_oldest_resolves_victims():
     eng, _, fx = _fake_engine(queue_capacity=2, shed_policy=SHED_OLDEST)
     tks = [eng.submit("a", "m", i) for i in range(4)]
