@@ -26,6 +26,18 @@ bob -> mobilenet, weights 2:1):
      can diff exactly (``--json-out``/``--check-baseline``,
      benchmarks/baselines/BENCH_serve.json).
 
+  5. **scaleout** — horizontal scaling over the worker pool
+     (serve/workers.py, docs/scaling.md). Two parts: a burst drained at 1
+     worker vs ``--workers`` N over the thread transport, each worker a
+     modeled accelerator instance (real compute + a fixed device service
+     floor, ``--device-latency``) so dispatch-path concurrency is what is
+     measured on a shared CPU runner; and a deterministic *death drill* —
+     FakeClock + inline transport + a seeded ``worker.die``/``worker.stall``
+     plan — asserting the failure contract (dead worker's batches requeue
+     whole onto survivors, zero unresolved tickets, surviving outputs
+     bit-exact) and that two same-seed runs produce byte-identical
+     fault/metric logs. Always runs the tiny model scale.
+
 CLI:
 
   PYTHONPATH=src python -m benchmarks.bench_serve \
@@ -33,11 +45,14 @@ CLI:
   PYTHONPATH=src python -m benchmarks.bench_serve \
       --phases chaos --seed 7 --json-out results/bench \
       --check-baseline benchmarks/baselines
+  PYTHONPATH=src python -m benchmarks.bench_serve \
+      --phases scaleout --workers 2 --min-scaleout-speedup 1.8
 
 CI smoke runs the tiny scale with ``--assert-no-drops --max-p99 5`` and
 uploads the ``--json`` report as an artifact; the ``chaos-smoke`` job runs
 ``--phases chaos`` with a pinned seed and asserts zero unresolved tickets
-plus breaker recovery from the report (.github/workflows/ci.yml).
+plus breaker recovery from the report; both also run the scaleout phase
+with ``--workers 2`` (.github/workflows/ci.yml).
 """
 from __future__ import annotations
 
@@ -58,8 +73,9 @@ from repro.serve.model import served_model
 
 TENANTS = (("alice", "resnet18", 2.0), ("bob", "mobilenet", 1.0))
 POOL = 16                        # distinct images per model
-DEFAULT_PHASES = ("throughput", "poisson", "verify", "chaos")
+DEFAULT_PHASES = ("throughput", "poisson", "verify", "chaos", "scaleout")
 CHAOS_EXEC_COST_S = 0.02         # modeled fake-clock cost per dispatch
+DEVICE_LATENCY_S = 0.05          # modeled per-dispatch device service time
 
 
 def _models(scale: str) -> dict:
@@ -96,7 +112,7 @@ def _warmup(eng: VTAServeEngine, models: dict) -> None:
             for img in models[model].random_images(b, seed=99):
                 eng.submit(tenant, model, img)
             eng.drain()
-    eng.metrics = ServeMetrics()
+    eng.reset_metrics()
 
 
 def _throughput_phase(models: dict, mix: list, backend: str, buckets: tuple,
@@ -109,7 +125,7 @@ def _throughput_phase(models: dict, mix: list, backend: str, buckets: tuple,
     _warmup(eng, models)
     best = None
     for _ in range(passes):
-        eng.metrics = ServeMetrics()
+        eng.reset_metrics()
         tickets = []
         t0 = time.perf_counter()
         for tenant, model, img, _ in mix:
@@ -274,6 +290,223 @@ def _chaos_phase(n: int, rate: float, seed: int, ladder: tuple,
     return out
 
 
+class _DeviceExecutor:
+    """One modeled accelerator instance: the batch is computed for real on
+    the configured backend (outputs stay bit-exact by construction), then
+    the dispatch is padded with a GIL-releasing sleep up to a fixed device
+    service time. This is the scale-out analog of ``CHAOS_EXEC_COST_S``:
+    on a shared CPU runner the workers' *compute* serializes on the GIL,
+    but real deployments give each worker its own accelerator — a fixed
+    service floor per dispatch — and it is that dispatch-path concurrency
+    (placement, inboxes, supervision) the phase measures."""
+
+    def __init__(self, models: dict, backend: str, service_s: float):
+        from repro.serve.engine import BackendExecutor
+        self.inner = BackendExecutor(models, backend)
+        self.service_s = service_s
+
+    def __call__(self, model_key: str, images: list, bucket: int) -> list:
+        t0 = time.perf_counter()
+        outs = self.inner(model_key, images, bucket)
+        rest = self.service_s - (time.perf_counter() - t0)
+        if rest > 0:
+            time.sleep(rest)
+        return outs
+
+
+def _scaleout_endpoints() -> dict:
+    """The burst's served-endpoint map: two logical endpoints per tiny
+    model family, sharing one compiled ``ServedModel`` each. Scale-out is
+    a many-endpoints-few-workers problem — placement keys on the endpoint
+    name, so four keys is the smallest map that lets the sticky affinity
+    layer balance two workers instead of pinning one whole family (and
+    its entire traffic share) to a single worker."""
+    base = _models("tiny")
+    return {f"{name}-{suffix}": m
+            for name, m in base.items() for suffix in ("a", "b")}
+
+
+def _scaleout_mix(endpoints: dict, n: int, seed: int) -> list:
+    """Balanced deterministic round-robin over the endpoints (images drawn
+    from each endpoint's seeded pool), one tenant per endpoint: equal
+    per-endpoint counts make the ideal N-worker speedup actually reachable
+    (a skewed mix would measure the skew, not the pool), and per-endpoint
+    lanes keep each tenant queue single-model so the scheduler can
+    assemble full buckets from interleaved arrivals."""
+    names = sorted(endpoints)
+    pools = {ep: endpoints[ep].random_images(POOL, seed=seed + 1)
+             for ep in names}
+    mix = []
+    for i in range(n):
+        ep = names[i % len(names)]
+        mix.append((ep, ep, pools[ep][i % POOL], i % POOL))
+    return mix
+
+
+def _scaleout_burst(endpoints: dict, mix: list, backend: str,
+                    buckets: tuple, n_workers: int, device_latency: float,
+                    passes: int = 2) -> dict:
+    """Drain the burst through a thread-transport pool of ``n_workers``
+    ``_DeviceExecutor`` workers; best-of-``passes`` wall time. A fresh
+    engine+pool per call — XLA compiles stay warm in-process, so pass 1 of
+    the first call pays them and the warmup burst below absorbs that."""
+    from repro.serve.workers import WorkerPool
+
+    pool = WorkerPool(
+        endpoints, n_workers, backend=backend, transport="thread",
+        executor_factory=lambda wid: _DeviceExecutor(endpoints, backend,
+                                                     device_latency))
+    eng = VTAServeEngine(endpoints, backend=backend, buckets=buckets,
+                         queue_capacity=len(mix) + 8, workers=pool)
+    for ep in sorted(endpoints):
+        eng.add_tenant(ep, weight=1.0)
+    # warmup: every (endpoint, bucket) pair once — pays the XLA compiles
+    # and seeds the affinity map outside the measurement
+    for ep in sorted(endpoints):
+        for b in eng.scheduler.buckets:
+            for img in endpoints[ep].random_images(b, seed=99):
+                eng.submit(ep, ep, img)
+            eng.drain()
+    eng.reset_metrics()
+    best_wall = None
+    for _ in range(passes):
+        tickets = []
+        t0 = time.perf_counter()
+        for tenant, model, img, _ in mix:
+            tickets.append(eng.submit(tenant, model, img))
+        eng.drain()
+        while eng.pending():
+            time.sleep(1e-4)
+        wall = time.perf_counter() - t0
+        assert all(t.ok for t in tickets), \
+            Counter(t.status for t in tickets)
+        if best_wall is None or wall < best_wall:
+            best_wall = wall
+    snap = eng.metrics.snapshot()
+    eng.close()
+    return {"workers": n_workers, "images": len(mix),
+            "wall_s": round(best_wall, 4),
+            "images_per_sec": round(len(mix) / best_wall, 2),
+            "batches": snap["batches"],
+            "per_worker": snap["workers"]["per_worker"],
+            "affinity": snap["workers"]["affinity"],
+            "placement_skips": snap["workers"]["placement_skips"]}
+
+
+def _scaleout_death_drill(n: int, rate: float, seed: int,
+                          n_workers: int) -> dict:
+    """Deterministic worker-death drill: Poisson load on a FakeClock
+    against an inline-transport pool (each worker its own degradation
+    ladder + breaker) with a seeded ``worker.die`` on worker 0 and one
+    ``worker.stall`` watchdog trip on worker 1. Asserts the scale-out
+    failure contract: the in-flight batch of the dead worker requeues
+    whole onto survivors, every ticket resolves, and every served output
+    stays bit-exact vs the numpy oracle. Everything reported is a pure
+    function of (seed, n, rate, n_workers) — run it twice and diff."""
+    from repro.serve.faults import FaultInjector, FaultPlan, FaultSpec
+    from repro.serve.workers import WorkerPool
+
+    models = _models("tiny")
+    clock = FakeClock()
+    metrics = ServeMetrics()
+    plan = FaultPlan(seed=seed, specs=(
+        FaultSpec("worker.die", key="0", after=5, times=1),
+        FaultSpec("worker.stall", key="1", after=8, times=1, hang_s=1.0),
+    ))
+    inj = FaultInjector(plan, clock=clock)
+    pool = WorkerPool(models, n_workers, transport="inline", clock=clock,
+                      faults=inj, metrics=metrics,
+                      fail_threshold=3, cooldown_s=0.08)
+    eng = VTAServeEngine(models, clock=clock, metrics=metrics, faults=inj,
+                         buckets=(1, 2, 4, 8), queue_capacity=n + 8,
+                         max_retries=2, retry_backoff_s=0.004,
+                         exec_timeout_s=0.5, requeue_budget=6,
+                         workers=pool)
+    for tenant, _, weight in TENANTS:
+        eng.add_tenant(tenant, weight=weight)
+
+    mix = _request_mix(models, n, seed)
+    gaps = np.random.default_rng(seed + 13).exponential(1.0 / rate, n)
+    tickets = []
+    for k, (tenant, model, img, _) in enumerate(mix):
+        clock.advance(float(gaps[k]))
+        tickets.append(eng.submit(tenant, model, img))
+        if k % 4 == 3 and eng.step():
+            clock.advance(CHAOS_EXEC_COST_S)
+    drained = 0
+    while eng.pending() > 0 and drained < 20 * n:
+        if eng.step():
+            clock.advance(CHAOS_EXEC_COST_S)
+        else:
+            clock.advance(0.002)
+        drained += 1
+
+    unresolved = sum(1 for t in tickets if not t.done())
+    checked = mismatches = 0
+    for t in tickets:
+        if not t.ok:
+            continue
+        ref = models[t.request.model].run_single(
+            np.asarray(t.request.payload), backend="numpy")
+        checked += 1
+        if not np.array_equal(t.request.result, ref):
+            mismatches += 1
+    snap = metrics.snapshot()
+    return {
+        "requests": n, "rate": rate, "seed": seed, "workers": n_workers,
+        "statuses": dict(sorted(Counter(t.status for t in tickets).items())),
+        "unresolved": unresolved,
+        "survivors": pool.live_count(),
+        "fault_sites": inj.summary(),
+        "fault_events": inj.events(),
+        "per_worker": snap["workers"]["per_worker"],
+        "affinity": snap["workers"]["affinity"],
+        "placement_skips": snap["workers"]["placement_skips"],
+        "worker_breakers": pool.breaker_log(),
+        "reliability": snap["reliability"],
+        "bitexact": {"checked": checked, "mismatches": mismatches},
+    }
+
+
+def _scaleout_phase(backend: str, buckets: tuple, n: int,
+                    n_workers: int, device_latency: float, seed: int,
+                    passes: int = 2, verbose: bool = True) -> dict:
+    """Scale-out phase: (a) burst throughput at 1 worker vs ``n_workers``
+    modeled accelerator instances over the thread transport — the speedup
+    is the headline; (b) the deterministic death drill, run twice to prove
+    same-seed byte-identical fault/metric logs."""
+    endpoints = _scaleout_endpoints()
+    mix = _scaleout_mix(endpoints, n, seed + 29)
+    single = _scaleout_burst(endpoints, mix, backend, buckets, 1,
+                             device_latency, passes)
+    scaled = _scaleout_burst(endpoints, mix, backend, buckets, n_workers,
+                             device_latency, passes)
+    speedup = round(scaled["images_per_sec"]
+                    / max(single["images_per_sec"], 1e-9), 2)
+    drill = _scaleout_death_drill(n, 200.0, seed, n_workers)
+    replay = _scaleout_death_drill(n, 200.0, seed, n_workers)
+    deterministic = (json.dumps(drill, sort_keys=True)
+                     == json.dumps(replay, sort_keys=True))
+    out = {"workers": n_workers, "device_latency_s": device_latency,
+           "burst": {"single": single, "scaled": scaled, "speedup": speedup},
+           "death_drill": drill, "deterministic": deterministic}
+    if verbose:
+        print(f"  scaleout : 1 worker {single['images_per_sec']:7.1f} img/s"
+              f" -> {n_workers} workers {scaled['images_per_sec']:7.1f}"
+              f" img/s ({speedup}x), affinity hit-rate "
+              f"{scaled['affinity']['hit_rate']}")
+        print(f"             death drill: statuses {drill['statuses']}, "
+              f"unresolved {drill['unresolved']}, survivors "
+              f"{drill['survivors']}/{n_workers}, faults "
+              f"{drill['fault_sites']}")
+        print(f"             requeues {drill['reliability']['requeues']} "
+              f"timeouts {drill['reliability']['timeouts']}, bit-exact "
+              f"{drill['bitexact']['checked']} checked "
+              f"{drill['bitexact']['mismatches']} mismatches, "
+              f"replay-deterministic={deterministic}")
+    return out
+
+
 # ---------------------------------------------------------------------------
 # baseline ratchet (deterministic chaos counters only — never wall clock)
 # ---------------------------------------------------------------------------
@@ -324,6 +557,7 @@ def run(scale: str = "small", backend: str = "jax", requests: int = 96,
         verify: int = 8, passes: int = 4,
         phases: tuple = DEFAULT_PHASES, chaos_requests: int = 48,
         chaos_rate: float = 200.0, ladder: Optional[tuple] = None,
+        workers: int = 2, device_latency: float = DEVICE_LATENCY_S,
         verbose: bool = True) -> dict:
     phases = tuple(phases)
     unknown = set(phases) - set(DEFAULT_PHASES)
@@ -386,6 +620,13 @@ def run(scale: str = "small", backend: str = "jax", requests: int = 96,
         out["chaos"] = _chaos_phase(chaos_requests, chaos_rate, seed,
                                     tuple(ladder or DEGRADATION_LADDER),
                                     verbose=verbose)
+
+    if "scaleout" in phases:
+        # tiny scale always: per-dispatch compute must stay under the
+        # modeled device service floor for the scaling signal to be clean
+        out["scaleout"] = _scaleout_phase(
+            backend, buckets, requests, workers, device_latency, seed,
+            passes=min(passes, 2), verbose=verbose)
     return out
 
 
@@ -410,6 +651,12 @@ def main(argv=None) -> int:
     ap.add_argument("--ladder", default=None,
                     help="comma list of backends, best first "
                          "(default: the registered degradation ladder)")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="pool size for the scaleout phase")
+    ap.add_argument("--device-latency", type=float,
+                    default=DEVICE_LATENCY_S,
+                    help="modeled per-dispatch device service time (s) "
+                         "for the scaleout burst")
     ap.add_argument("--json", default=None, help="write the report here")
     ap.add_argument("--json-out", default=None,
                     help="directory for the baseline-shaped "
@@ -419,6 +666,9 @@ def main(argv=None) -> int:
                          "compare deterministic chaos counters against")
     ap.add_argument("--min-speedup", type=float, default=None,
                     help="fail unless batched/serialized reaches this")
+    ap.add_argument("--min-scaleout-speedup", type=float, default=None,
+                    help="fail unless the scaleout burst reaches this "
+                         "N-worker/1-worker throughput ratio")
     ap.add_argument("--max-p99", type=float, default=None,
                     help="fail if poisson p99 latency exceeds this (s)")
     ap.add_argument("--assert-no-drops", action="store_true",
@@ -432,7 +682,8 @@ def main(argv=None) -> int:
               phases=tuple(p for p in args.phases.split(",") if p),
               chaos_requests=args.chaos_requests,
               chaos_rate=args.chaos_rate,
-              ladder=tuple(args.ladder.split(",")) if args.ladder else None)
+              ladder=tuple(args.ladder.split(",")) if args.ladder else None,
+              workers=args.workers, device_latency=args.device_latency)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=2, sort_keys=True)
@@ -470,6 +721,24 @@ def main(argv=None) -> int:
         if not chaos["breaker_recovered"]:
             failures.append(f"breaker on {chaos['ladder'][0]} never "
                             f"recovered through a half-open probe")
+    scaleout = out.get("scaleout")
+    if scaleout is not None:
+        drill = scaleout["death_drill"]
+        if drill["unresolved"]:
+            failures.append(f"{drill['unresolved']} tickets never resolved "
+                            f"in the worker-death drill")
+        if drill["bitexact"]["mismatches"]:
+            failures.append(f"{drill['bitexact']['mismatches']} death-drill "
+                            f"outputs diverge from the numpy oracle")
+        if not scaleout["deterministic"]:
+            failures.append("scaleout death drill is not replay-"
+                            "deterministic (same-seed runs diverged)")
+        if args.min_scaleout_speedup is not None \
+                and scaleout["burst"]["speedup"] < args.min_scaleout_speedup:
+            failures.append(
+                f"scaleout speedup {scaleout['burst']['speedup']}x < "
+                f"required {args.min_scaleout_speedup}x at "
+                f"{scaleout['workers']} workers")
     if args.check_baseline:
         failures += check_baseline(out, args.check_baseline)
     for f in failures:

@@ -25,8 +25,17 @@ layer that does the stepping:
   rung fails does the call raise ``AllBackendsFailed`` — at which point
   the engine's retry/bisection supervision takes over.
 
+``CircuitBreaker`` is also the health primitive at the *worker* axis:
+serve/workers.py gives every pool worker one breaker (keyed ``worker<id>``)
+whose state feeds placement — an open worker is skipped, a half-open worker
+gets only the probe batch — while each worker additionally carries its own
+``DegradingBackendExecutor`` so rung-level and worker-level health stay
+independent. ``key_prefix`` namespaces the rung breakers per worker
+(``w0:jax-pallas[...]``) so a shared ``ServeMetrics`` log stays unambiguous.
+
 Not thread-safe beyond the engine's serialization: the serve loop issues
-one dispatch at a time, which is the breaker's consistency model.
+one dispatch at a time per executor instance (the pool serializes per
+worker), which is the breaker's consistency model.
 """
 from __future__ import annotations
 
@@ -111,7 +120,8 @@ class DegradingBackendExecutor:
 
     def __init__(self, models: dict, ladder: tuple = DEGRADATION_LADDER, *,
                  clock=None, faults=None, metrics=None,
-                 fail_threshold: int = 3, cooldown_s: float = 1.0):
+                 fail_threshold: int = 3, cooldown_s: float = 1.0,
+                 key_prefix: str = ""):
         assert ladder, "need at least one backend in the ladder"
         self.clock = clock or SystemClock()
         self.faults = faults
@@ -125,7 +135,7 @@ class DegradingBackendExecutor:
                 executor=BackendExecutor(models, backend=name),
                 impls=impls,
                 breaker=CircuitBreaker(
-                    key=f"{name}[{sig}]",
+                    key=f"{key_prefix}{name}[{sig}]",
                     fail_threshold=fail_threshold, cooldown_s=cooldown_s,
                     on_transition=self._on_transition)))
 

@@ -40,6 +40,18 @@ Sites (the engine / degradation ladder consult these at fixed points):
                        every dispatch of a batch containing it raises
                        ``PoisonedPayload``, which is what the engine's
                        batch bisection isolates. Key: model name.
+  ``worker.die``       an executor worker (serve/workers.py) dies
+                       permanently at the top of a dispatch: the pool
+                       marks it dead (its affinity keys get *reassigned*
+                       to survivors at next placement) and the engine
+                       requeues the in-flight batch whole (no bisection —
+                       the batch is innocent, the worker is not). Key:
+                       the worker id as a string (``"0"``).
+  ``worker.stall``     a worker stalls ``hang_s`` seconds on the injected
+                       clock before executing — watchdog fodder, exactly
+                       like ``executor.hang`` but scoped to one worker so
+                       per-worker breakers (not the rung breakers) absorb
+                       the failures. Key: worker id string.
 
 ``times=None`` makes a fault persistent (fires on every matching
 opportunity); a finite ``times`` makes it transient — it exhausts, which
@@ -53,7 +65,8 @@ from typing import Callable, List, Optional, Set
 
 import numpy as np
 
-SITES = ("executor.raise", "executor.hang", "kernel.impl", "payload.bitflip")
+SITES = ("executor.raise", "executor.hang", "kernel.impl", "payload.bitflip",
+         "worker.die", "worker.stall")
 
 
 class InjectedFault(RuntimeError):
@@ -244,6 +257,21 @@ class FaultInjector:
             self.clock.sleep(spec.hang_s)
         if self.fire("executor.raise", model) is not None:
             raise InjectedFault("executor.raise", model)
+
+    def on_worker(self, worker_id) -> bool:
+        """Consulted by the worker pool (serve/workers.py) at the top of
+        every dispatch a worker runs. Fires ``worker.stall`` first (stalls
+        ``hang_s`` on the injected clock — the engine watchdog is what
+        turns the stall into a failure), then ``worker.die``; returns True
+        when the worker must die. Keys are worker ids as strings, so one
+        plan can fault workers independently and replay-deterministically:
+        opportunity counters advance per dispatch in dispatch order, which
+        the inline transport keeps identical across same-seed runs."""
+        key = str(worker_id)
+        spec = self.fire("worker.stall", key)
+        if spec is not None and self.clock is not None:
+            self.clock.sleep(spec.hang_s)
+        return self.fire("worker.die", key) is not None
 
     def check_kernel(self, kernel: str, impl: str) -> None:
         """Consulted by the degradation ladder for each registry (kernel,

@@ -64,6 +64,21 @@ class TenantMetrics:
 
 
 @dataclass
+class WorkerMetrics:
+    """One pool worker's share of the serve traffic (serve/workers.py)."""
+    dispatches: int = 0          # batches this worker executed successfully
+    images: int = 0              # real requests in those batches
+    failures: int = 0            # failed attempts (raises + watchdog trips)
+    busy_s: float = 0.0          # engine-clock execution time accumulated
+    deaths: int = 0              # worker.die events (0 or 1 per worker)
+
+    def to_dict(self) -> dict:
+        return {"dispatches": self.dispatches, "images": self.images,
+                "failures": self.failures, "busy_s": round(self.busy_s, 6),
+                "deaths": self.deaths}
+
+
+@dataclass
 class ServeMetrics:
     """The engine-wide registry. All times in seconds on the engine clock."""
     tenants: dict = field(default_factory=dict)    # name -> TenantMetrics
@@ -77,12 +92,18 @@ class ServeMetrics:
     # -- reliability (supervised execution, serve/faults.py + breaker.py) --
     retries: int = 0             # batch re-attempts after an executor failure
     bisections: int = 0          # failed multi-request batches split in two
-    requeues: int = 0            # requests re-enqueued by bisection
+    requeues: int = 0            # requests re-enqueued by bisection/death
     timeouts: int = 0            # executor watchdog trips
     loop_errors: int = 0         # unexpected serve-loop exceptions survived
     fallbacks: dict = field(default_factory=dict)   # backend -> executions
     breaker_log: list = field(default_factory=list)  # (key, old, new)
     faults: dict = field(default_factory=dict)       # fault site -> fires
+    # -- scale-out (worker pool, serve/workers.py) -------------------------
+    workers: dict = field(default_factory=dict)      # id -> WorkerMetrics
+    affinity_hits: int = 0       # placements routed to the key's owner
+    affinity_cold: int = 0       # first placement of a key (unavoidable)
+    affinity_reassigned: int = 0  # owner dead/open -> key moved (cache cold)
+    placement_skips: int = 0     # dispatch deferred: no admissible worker
 
     def tenant(self, name: str) -> TenantMetrics:
         if name not in self.tenants:
@@ -144,6 +165,47 @@ class ServeMetrics:
     def on_fault(self, site: str) -> None:
         self.faults[site] = self.faults.get(site, 0) + 1
 
+    # -- worker-pool hooks (serve/workers.py) ------------------------------
+    def worker(self, wid: int) -> WorkerMetrics:
+        if wid not in self.workers:
+            self.workers[wid] = WorkerMetrics()
+        return self.workers[wid]
+
+    def on_worker_batch(self, wid: int, filled: int, exec_s: float) -> None:
+        w = self.worker(wid)
+        w.dispatches += 1
+        w.images += filled
+        w.busy_s += exec_s
+
+    def on_worker_failure(self, wid: int, exec_s: float = 0.0) -> None:
+        w = self.worker(wid)
+        w.failures += 1
+        w.busy_s += exec_s
+
+    def on_worker_death(self, wid: int) -> None:
+        self.worker(wid).deaths += 1
+
+    def on_affinity(self, kind: str) -> None:
+        assert kind in ("hit", "cold", "reassigned"), kind
+        if kind == "hit":
+            self.affinity_hits += 1
+        elif kind == "cold":
+            self.affinity_cold += 1
+        else:
+            self.affinity_reassigned += 1
+
+    def on_placement_skip(self) -> None:
+        self.placement_skips += 1
+
+    @property
+    def affinity_hit_rate(self) -> float:
+        """Stickiness of warm placements: hits over (hits + reassignments).
+        Cold first placements are excluded — a key must be compiled
+        *somewhere* once; what the rate measures is how rarely a warm key
+        is torn off its owner (1.0 = perfect stickiness)."""
+        denom = self.affinity_hits + self.affinity_reassigned
+        return self.affinity_hits / denom if denom else 1.0
+
     # -- reduction ---------------------------------------------------------
     def _all(self, attr: str) -> list:
         out: list = []
@@ -152,6 +214,27 @@ class ServeMetrics:
         return out
 
     def snapshot(self) -> dict:
+        """Reduce everything recorded to one JSON-serializable report.
+
+        The ``"reliability"`` key (asserted by the CI chaos baseline) has a
+        stable schema::
+
+            {"retries": int,        # batch re-attempts after a failure
+             "bisections": int,     # failed multi-request batches split
+             "requeues": int,       # requests re-enqueued (bisection halves
+                                    #  + whole batches off a dead worker)
+             "timeouts": int,       # executor watchdog trips
+             "loop_errors": int,    # serve-loop exceptions survived
+             "fallbacks": {backend: dispatches served off-top-rung},
+             "breaker_transitions": [[key, old_state, new_state], ...],
+             "faults": {fault_site: fires}}
+
+        ``"workers"`` is the scale-out section (all-zero without a pool):
+        per-worker dispatch/failure/busy-time counters keyed by worker id,
+        the affinity counters behind ``affinity_hit_rate``, and
+        ``placement_skips`` (dispatches deferred because no worker was
+        admissible — the placement analog of backpressure).
+        """
         lat = self._all("latency")
         wait = self._all("queue_wait")
         wall = max(self.finished_at - self.started_at, 0.0)
@@ -180,6 +263,17 @@ class ServeMetrics:
                           "mean": round(sum(lat) / len(lat), 6) if lat else 0.0},
             "queue_wait_s": {"p50": round(percentile(wait, 50), 6),
                              "p99": round(percentile(wait, 99), 6)},
+            "workers": {
+                "per_worker": {str(k): v.to_dict()
+                               for k, v in sorted(self.workers.items())},
+                "affinity": {
+                    "hits": self.affinity_hits,
+                    "cold": self.affinity_cold,
+                    "reassigned": self.affinity_reassigned,
+                    "hit_rate": round(self.affinity_hit_rate, 4),
+                },
+                "placement_skips": self.placement_skips,
+            },
             "batches": self.batches,
             "images": self.images,
             "padded_slots": self.padded_slots,

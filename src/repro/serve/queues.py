@@ -38,6 +38,7 @@ class Request:
     result: object = None
     error: Optional[str] = None
     requeues: int = 0            # bisection requeues consumed (budgeted)
+    worker: Optional[int] = None  # pool worker that dispatched it (if any)
 
 
 @dataclass

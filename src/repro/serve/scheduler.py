@@ -55,12 +55,16 @@ class TenantLane:
 class BatchPlan:
     """One assembled dispatch: ``len(requests) <= bucket``; the pad slots
     (``bucket - len(requests)``) are dead weight the executor fills.
-    ``origin`` distinguishes scheduler-assembled batches from the halves
-    the engine's failure bisection requeues (engine.py)."""
+    ``origin`` distinguishes scheduler-assembled batches from the requeued
+    kinds: ``"bisect"`` halves from failure bisection and
+    ``"worker-requeue"`` whole batches handed back by a dead pool worker
+    (engine.py). ``worker`` is stamped at placement when a worker pool is
+    active (serve/workers.py); None under the single-executor engine."""
     model: str
     requests: list
     bucket: int
-    origin: str = "scheduler"    # "scheduler" | "bisect"
+    origin: str = "scheduler"    # "scheduler" | "bisect" | "worker-requeue"
+    worker: Optional[int] = None
 
     @property
     def filled(self) -> int:

@@ -39,7 +39,16 @@ def greedy_token(logits):
 
 @dataclasses.dataclass
 class ServeSession:
-    """Minimal batched generation loop over the jitted steps (CPU-testable)."""
+    """Minimal batched generation loop over the jitted steps (CPU-testable).
+
+    .. note:: For accelerator-stack inference serving, ``ServeSession`` is
+       the legacy entry point: it predates the production serving engine
+       and offers no queuing, batching policy, supervision, or scale-out.
+       New serving code should target ``serve.engine.VTAServeEngine``
+       (continuous batching, supervised execution, worker pools — see
+       docs/serving.md and docs/scaling.md). ``ServeSession`` remains the
+       supported loop for *LM token generation* only, which the engine
+       does not cover."""
     model: Model
     params: object
     max_context: int = 256

@@ -44,6 +44,7 @@ from __future__ import annotations
 import collections
 import functools
 import os
+import threading
 import warnings
 from typing import Optional
 
@@ -598,10 +599,33 @@ def _exec_entries(spec: tuple, args: tuple, state: dict,
 # ---------------------------------------------------------------------------
 _XLA_TRACES: collections.Counter = collections.Counter()
 
+# Trace *scope*: a thread-local label stamped into every trace signature so
+# multi-worker serving (serve/workers.py) can attribute each compile to the
+# worker that paid it. Each pool worker brackets its dispatches with
+# ``set_xla_trace_scope(f"worker{id}")`` — jit tracing runs synchronously on
+# the dispatching thread, so the label is exact. With sticky (model, bucket)
+# -> worker affinity, every trace-log key must carry the scope of the key's
+# *owning* worker and appear exactly once per owner (tests/test_workers.py);
+# a key traced under two scopes means placement broke affinity.
+_TRACE_TLS = threading.local()
+
+
+def set_xla_trace_scope(label: Optional[str]) -> Optional[str]:
+    """Set this thread's trace-scope label; returns the previous label so
+    callers can restore it (``None`` = unscoped, the default)."""
+    prev = getattr(_TRACE_TLS, "scope", None)
+    _TRACE_TLS.scope = label
+    return prev
+
+
+def xla_trace_scope() -> Optional[str]:
+    return getattr(_TRACE_TLS, "scope", None)
+
 
 def _note_trace(spec, args, state) -> None:
     n = state["acc"].shape[0]
-    sig = (hash(spec), tuple(np.shape(a) for a in args), int(n))
+    sig = (hash(spec), tuple(np.shape(a) for a in args), int(n),
+           xla_trace_scope())
     _XLA_TRACES[sig] += 1
 
 
@@ -610,9 +634,11 @@ def reset_xla_trace_log() -> None:
 
 
 def xla_trace_log() -> dict:
-    """{(chunk-spec hash, arg shapes, batch): traces} since the last
+    """{(chunk-spec hash, arg shapes, batch, scope): traces} since the last
     ``reset_xla_trace_log``. Any value above 1 means a structurally known
-    chunk was re-traced — a compile-cache regression."""
+    chunk was re-traced — a compile-cache regression. ``scope`` is the
+    dispatching thread's trace-scope label (the owning worker id under the
+    serving pool, ``None`` everywhere else)."""
     return dict(_XLA_TRACES)
 
 

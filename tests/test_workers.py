@@ -1,0 +1,305 @@
+"""Worker-pool tests: placement determinism, sticky-affinity compile
+reuse, worker-death supervision, and replay determinism (serve/workers.py
++ the engine integration in serve/engine.py). Everything below a marked
+line runs on a FakeClock with recording executors — no JAX in the loop;
+the compile-reuse test drives the real jax backend through the trace log,
+and one smoke test exercises the process transport end to end."""
+import json
+
+import numpy as np
+
+from repro.serve.breaker import CLOSED, HALF_OPEN, OPEN
+from repro.serve.clock import FakeClock
+from repro.serve.engine import VTAServeEngine
+from repro.serve.faults import FaultInjector, FaultPlan, FaultSpec
+from repro.serve.scheduler import BatchPlan
+from repro.serve.workers import WorkerPool
+
+
+class RecordingFactory:
+    """Per-worker recording executors sharing one call log."""
+
+    def __init__(self, fail_for=()):
+        self.calls = []              # (worker id, model, n images, bucket)
+        self.fail_for = set(fail_for)
+
+    def __call__(self, wid):
+        def ex(model, images, bucket):
+            self.calls.append((wid, model, len(images), bucket))
+            if wid in self.fail_for:
+                raise RuntimeError(f"worker{wid} injected failure")
+            return [f"out:{p}" for p in images]
+        return ex
+
+    def workers_used(self, model=None):
+        return {w for (w, m, _, _) in self.calls
+                if model is None or m == model}
+
+
+def _pool_engine(n=2, *, factory=None, faults=None, **kw):
+    clock = FakeClock()
+    factory = factory or RecordingFactory()
+    pool = WorkerPool(n=n, transport="inline", clock=clock, faults=faults,
+                      executor_factory=factory)
+    eng = VTAServeEngine(clock=clock, faults=faults, workers=pool, **kw)
+    eng.add_tenant("a")
+    return eng, pool, factory, clock
+
+
+def _plan(model, bucket=1):
+    return BatchPlan(model=model, requests=[], bucket=bucket)
+
+
+# ---------------------------------------------------------------------------
+# placement unit tests (pool.place driven directly, no engine)
+# ---------------------------------------------------------------------------
+
+
+def test_cold_placement_least_loaded_lowest_id():
+    """Cold keys go to the admissible worker owning the fewest keys, ties
+    to the lowest id — a pure function of pool state, so two identical
+    sequences place identically."""
+    def run():
+        pool = WorkerPool(n=3, transport="inline", clock=FakeClock(),
+                          executor_factory=RecordingFactory())
+        return [pool.place(_plan(m), now=0.0).id
+                for m in ("m1", "m2", "m3", "m4", "m1", "m2")]
+
+    first, second = run(), run()
+    assert first == second
+    # 3 cold keys round-robin by load, m4 wraps to lowest id, then hits
+    assert first == [0, 1, 2, 0, 0, 1]
+
+
+def test_open_worker_skipped_and_half_open_gets_only_probe():
+    pool = WorkerPool(n=2, transport="inline", clock=FakeClock(),
+                      executor_factory=RecordingFactory(), cooldown_s=1.0)
+    w0, w1 = pool.workers
+    assert pool.place(_plan("m"), now=0.0) is w0          # cold -> w0
+    for _ in range(3):
+        w0.breaker.on_failure(0.0)                        # trips OPEN
+    assert w0.breaker.state == OPEN
+    # open owner: the key is torn off w0 (reassigned), not deferred
+    assert pool.place(_plan("m"), now=0.5) is w1
+    assert pool.affinity_map()[("m", 1)] == 1
+    # cooldown elapsed: w0 is admissible again for a cold key — placing
+    # consumes the half-open probe admission
+    assert pool.place(_plan("m2"), now=1.5) is w0
+    assert w0.breaker.state == HALF_OPEN
+    # probe in flight: w0 admits nothing else until it resolves
+    assert pool.place(_plan("m3"), now=1.5) is w1
+    w0.breaker.on_success(1.6)
+    assert w0.breaker.state == CLOSED
+    assert pool.place(_plan("m4"), now=1.7) is w0
+
+
+def test_busy_sticky_owner_defers_rather_than_reassigns():
+    """A live, closed-breaker owner whose inbox is full means *wait* —
+    tearing a warm key off its worker would pay a compile for a transient
+    queue blip."""
+    pool = WorkerPool(n=2, transport="inline", clock=FakeClock(),
+                      executor_factory=RecordingFactory())
+    w0 = pool.workers[0]
+    assert pool.place(_plan("m"), now=0.0) is w0
+    import queue
+    w0.inbox = queue.Queue(maxsize=1)
+    w0.inbox.put_nowait(("x", 0.0))                       # full
+    assert pool.place(_plan("m"), now=0.1) is None        # defer, no move
+    assert pool.affinity_map()[("m", 1)] == 0
+
+
+# ---------------------------------------------------------------------------
+# engine integration on the inline transport (FakeClock, no JAX)
+# ---------------------------------------------------------------------------
+
+
+def test_sticky_affinity_and_per_worker_metrics():
+    eng, pool, fx, _ = _pool_engine(buckets=(1, 2, 4))
+    tks = []
+    for i in range(12):
+        tks.append(eng.submit("a", "mA" if i % 2 else "mB", f"img{i}"))
+    eng.drain()
+    assert all(t.ok for t in tks)
+    # each model key sticks to exactly one worker
+    assert len(fx.workers_used("mA")) == 1
+    assert len(fx.workers_used("mB")) == 1
+    assert fx.workers_used() == {0, 1}
+    snap = eng.metrics.snapshot()["workers"]
+    assert snap["affinity"]["cold"] == 2
+    assert snap["affinity"]["reassigned"] == 0
+    assert snap["affinity"]["hit_rate"] == 1.0
+    per = snap["per_worker"]
+    assert sum(w["images"] for w in per.values()) == 12
+    assert all(w["failures"] == 0 and w["deaths"] == 0
+               for w in per.values())
+
+
+def test_worker_death_requeues_whole_batch_innocents_complete():
+    """A seeded worker.die mid-batch: the in-flight batch requeues *whole*
+    (no bisection — the batch is innocent) and completes on the survivor;
+    the dead worker's keys get reassigned."""
+    plan = FaultPlan(seed=3, specs=(
+        FaultSpec("worker.die", key="0", times=1),))
+    inj = FaultInjector(plan)
+    eng, pool, fx, _ = _pool_engine(faults=inj, buckets=(1, 2, 4, 8))
+    tks = [eng.submit("a", "m", f"img{i}") for i in range(6)]
+    eng.drain()
+    assert all(t.ok for t in tks), [t.status for t in tks]
+    rel = eng.metrics.snapshot()["reliability"]
+    assert rel["requeues"] == 6 and rel["bisections"] == 0
+    snap = eng.metrics.snapshot()["workers"]
+    assert snap["per_worker"]["0"]["deaths"] == 1
+    assert snap["affinity"]["reassigned"] == 1
+    # the completed dispatch (all six requests, one batch) ran on the
+    # survivor; worker 0 never completed anything
+    assert (1, "m", 6, 8) in fx.calls
+    assert not any(w == 0 for (w, _, _, _) in fx.calls)
+    assert pool.live_count() == 1
+    assert eng.pending() == 0
+
+
+def test_all_workers_dead_fails_clean():
+    plan = FaultPlan(seed=3, specs=(FaultSpec("worker.die"),))
+    inj = FaultInjector(plan)
+    eng, pool, _, _ = _pool_engine(faults=inj, buckets=(1, 2, 4))
+    tks = [eng.submit("a", "m", f"img{i}") for i in range(4)]
+    eng.drain()
+    assert pool.live_count() == 0
+    assert all(t.status == "failed" for t in tks)
+    assert all("AllWorkersDead" in t.request.error
+               or "WorkerDied" in t.request.error for t in tks)
+    assert eng.pending() == 0
+
+
+def test_worker_stall_trips_watchdog_then_recovers():
+    """worker.stall burns injected-clock time inside the worker's dispatch;
+    the engine watchdog classifies it as ExecutorTimeout (one worker-level
+    breaker failure), and the bounded retry completes the batch."""
+    plan = FaultPlan(seed=5, specs=(
+        FaultSpec("worker.stall", key="0", times=1, hang_s=2.0),))
+    inj = FaultInjector(plan)
+    eng, pool, _, _ = _pool_engine(
+        faults=inj, buckets=(1, 2), exec_timeout_s=0.5, max_retries=2)
+    tks = [eng.submit("a", "m", f"img{i}") for i in range(2)]
+    eng.drain()
+    assert all(t.ok for t in tks)
+    snap = eng.metrics.snapshot()
+    assert snap["reliability"]["timeouts"] == 1
+    assert snap["workers"]["per_worker"]["0"]["failures"] == 1
+    assert pool.workers[0].breaker.state == CLOSED   # 1 failure < threshold
+
+
+def test_same_seed_chaos_runs_byte_identical():
+    """Two runs of the same seeded worker-fault plan against the same
+    request stream produce byte-identical fault logs and metric sections —
+    the replay-determinism contract for worker.* sites."""
+    def run(seed):
+        plan = FaultPlan(seed=seed, specs=(
+            FaultSpec("worker.die", key="0", after=3, times=1),
+            FaultSpec("worker.stall", key="1", prob=0.4, times=2,
+                      hang_s=1.0),
+        ))
+        inj = FaultInjector(plan)
+        eng, pool, _, clock = _pool_engine(
+            faults=inj, buckets=(1, 2, 4), exec_timeout_s=0.5)
+        tks = []
+        for i in range(16):
+            clock.advance(0.003)
+            tks.append(eng.submit("a", f"m{i % 2}", f"img{i}"))
+            if i % 3 == 2:
+                eng.step()
+        eng.drain()
+        snap = eng.metrics.snapshot()
+        return json.dumps({
+            "events": inj.events(),
+            "statuses": sorted(t.status for t in tks),
+            "workers": snap["workers"],
+            "reliability": snap["reliability"],
+            "breakers": pool.breaker_log(),
+        }, sort_keys=True)
+
+    assert run(11) == run(11)
+    assert run(11) != run(12)    # the seed is load-bearing
+
+
+# ---------------------------------------------------------------------------
+# real backend: sticky affinity is what keeps compiles per-worker-warm
+# ---------------------------------------------------------------------------
+
+
+def test_affinity_compile_reuse_traces_once_per_owning_worker():
+    """Each (chunk-spec, bucket) XLA-traces exactly once, attributed (via
+    the thread-local trace scope) to the worker owning that key — and a
+    second identical wave traces nothing. Buckets 6 and 10 are unused by
+    any other test in the session, so the jit cache cannot be pre-warmed
+    for them."""
+    from repro.serve.engine import BackendExecutor
+    from repro.serve.model import served_model
+    from repro.vta import fsim_jax
+
+    models = {"resnet18": served_model("resnet18", "tiny"),
+              "mobilenet": served_model("mobilenet", "tiny")}
+    clock = FakeClock()
+    pool = WorkerPool(n=2, transport="inline", clock=clock,
+                      executor_factory=lambda wid: BackendExecutor(
+                          models, "jax"))
+    eng = VTAServeEngine(models, clock=clock, buckets=(6, 10), workers=pool)
+    eng.add_tenant("a")
+
+    def wave():
+        for model in ("resnet18", "mobilenet"):
+            for b in (6, 10):
+                for img in models[model].random_images(b, seed=21):
+                    eng.submit("a", model, img)
+                eng.drain()
+
+    fsim_jax.reset_xla_trace_log()
+    wave()
+    # cold placement alternates by load: bucket-6 keys land on worker 0,
+    # bucket-10 keys on worker 1
+    assert pool.affinity_map() == {("resnet18", 6): 0, ("resnet18", 10): 1,
+                                   ("mobilenet", 6): 0, ("mobilenet", 10): 1}
+    log = fsim_jax.xla_trace_log()
+    assert log, "expected XLA traces on the first wave"
+    assert all(count == 1 for count in log.values()), log
+    # sig = (spec hash, arg shapes, batch, scope): every compile carries
+    # the scope of the worker that owns its (model, bucket) key
+    assert {(sig[2], sig[3]) for sig in log} \
+        == {(6, "worker0"), (10, "worker1")}
+
+    before = sum(log.values())
+    wave()
+    assert sum(fsim_jax.xla_trace_log().values()) == before, \
+        "second wave re-traced an already-compiled (chunk-spec, bucket)"
+    snap = eng.metrics.snapshot()["workers"]
+    assert snap["affinity"]["reassigned"] == 0
+    assert snap["affinity"]["hit_rate"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# process transport: config over objects, child-owned compile caches
+# ---------------------------------------------------------------------------
+
+
+def test_process_transport_smoke():
+    from repro.serve.model import served_model
+
+    m = served_model("mobilenet", "tiny")
+    pool = WorkerPool(n=1, transport="process", backend="numpy",
+                      process_specs={"mobilenet": ("mobilenet", "tiny")})
+    eng = VTAServeEngine({"mobilenet": m}, workers=pool)
+    eng.add_tenant("a")
+    imgs = m.random_images(2, seed=9)
+    tks = [eng.submit("a", "mobilenet", img) for img in imgs]
+    try:
+        eng.drain()
+        import time
+        deadline = time.time() + 120
+        while eng.pending() and time.time() < deadline:
+            time.sleep(0.01)
+        assert all(t.ok for t in tks), [t.status for t in tks]
+        for img, tk in zip(imgs, tks):
+            ref = m.run_single(img, backend="numpy")
+            assert np.array_equal(np.asarray(tk.result()), ref)
+    finally:
+        eng.close()
