@@ -7,13 +7,37 @@ point (paper: ~11.5x fewer cycles at ~12x area vs the pipelined default).
 
 Pass `cache_dir` to make repeat runs incremental (the engine's
 content-addressed cache); the default is a fresh in-memory sweep.
+
+`--staging` (implied by `--json-out` / `--check-baseline`) instead
+benchmarks the *sweep engine itself* on a reduced joint grid: cold- and
+warm-cache wall time, the per-stage breakdown (schedule / autotune /
+tsim-cost / fsim-verify), schedule-store sharing counters and a
+content digest over every produced point record. The digest plus the
+deterministic counters are what ``--check-baseline`` ratchets against
+``benchmarks/baselines/BENCH_dse.json`` — wall clock is recorded but
+never compared (machine-dependent):
+
+  PYTHONPATH=src python -m benchmarks.bench_pareto \
+      --json-out results/bench --check-baseline benchmarks/baselines
 """
 from __future__ import annotations
 
+import argparse
+import hashlib
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
 from typing import Optional
 
 from repro.core.dse import run_sweep
 from repro.vta.workloads import resolve_network
+
+STAGING_GRID = {"networks": ["resnet18"], "log_blocks": [4, 6],
+                "mem_widths": [8, 16, 32, 64], "spad_scales": [1],
+                "pipelined": [1, 0], "tune": "cached", "workers": 1}
 
 
 def run(verbose: bool = True, spad_scales=(1, 2, 4), batch_logs=(0,),
@@ -49,5 +73,175 @@ def run(verbose: bool = True, spad_scales=(1, 2, 4), batch_logs=(0,),
     return out
 
 
+# ---------------------------------------------------------------------------
+# Sweep-engine staging bench (--staging / --json-out / --check-baseline)
+# ---------------------------------------------------------------------------
+def points_digest(records: list) -> str:
+    """Order-independent content digest over point records.
+
+    ``label`` is presentation (unpipelined points grew a ``/np`` suffix)
+    and ``schema`` is a cache stamp; everything else — cycles, DRAM
+    bytes, per-layer breakdowns, configs — must be byte-identical for
+    the digest to match, which is exactly the staged-caching contract.
+    """
+    norm = [{k: v for k, v in r.items() if k not in ("label", "schema")}
+            for r in records]
+    norm.sort(key=lambda r: json.dumps(r, sort_keys=True))
+    return hashlib.sha256(
+        json.dumps(norm, sort_keys=True).encode()).hexdigest()
+
+
+def _collect_records(out_dir: str) -> list:
+    cdir = os.path.join(out_dir, "cache")
+    recs = []
+    for n in sorted(os.listdir(cdir)):
+        if n.endswith(".json"):
+            with open(os.path.join(cdir, n)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def run_staging(verbose: bool = True,
+                out_dir: Optional[str] = None) -> dict:
+    """Cold + warm engine run on the reduced joint grid (STAGING_GRID)."""
+    grid = STAGING_GRID
+    kw = dict(log_blocks=tuple(grid["log_blocks"]),
+              mem_widths=tuple(grid["mem_widths"]),
+              spad_scales=tuple(grid["spad_scales"]),
+              pipelined=tuple(bool(p) for p in grid["pipelined"]),
+              tune=grid["tune"], workers=grid["workers"])
+    work = out_dir or tempfile.mkdtemp(prefix="bench_dse_")
+    try:
+        shutil.rmtree(work, ignore_errors=True)
+        t0 = time.perf_counter()
+        cold = run_sweep(grid["networks"], out_dir=work, profile=True, **kw)
+        cold_wall = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        run_sweep(grid["networks"], out_dir=work, **kw)
+        warm_wall = time.perf_counter() - t0
+        records = _collect_records(work)
+    finally:
+        if out_dir is None:
+            shutil.rmtree(work, ignore_errors=True)
+    prof = cold.profile or {}
+    store = prof.get("schedule_store", {})
+    out = {
+        "grid": grid,
+        "cold_wall_s": round(cold_wall, 2),
+        "warm_wall_s": round(warm_wall, 2),
+        "stages_s": prof.get("stages", {}),
+        "n_records": len(records),
+        "n_feasible": sum(1 for r in records if r.get("feasible")),
+        "points_digest": points_digest(records),
+        # deterministic engine counters (what the baseline ratchets):
+        # misses = programs actually scheduled, hits = cost-model replays
+        "programs_scheduled": store.get("misses", 0),
+        "cost_replays": store.get("hits", 0),
+        "store_evictions": store.get("evictions", 0),
+    }
+    if verbose:
+        print("== bench_pareto --staging (sweep-engine wall time) ==")
+        print(f"  grid: {len(grid['log_blocks'])} geometries x "
+              f"{len(grid['mem_widths'])} mem widths x "
+              f"{len(grid['pipelined'])} pipelining settings "
+              f"({out['n_records']} points, {out['n_feasible']} feasible)")
+        print(f"  cold {out['cold_wall_s']:.1f}s / warm "
+              f"{out['warm_wall_s']:.2f}s")
+        br = "  ".join(f"{k} {v:.1f}s"
+                       for k, v in sorted(out["stages_s"].items()))
+        print(f"  stages: {br}")
+        print(f"  schedule store: {out['programs_scheduled']} programs "
+              f"scheduled, {out['cost_replays']} cost replays, "
+              f"{out['store_evictions']} evictions")
+        print(f"  points digest: {out['points_digest'][:16]}…")
+    return out
+
+
+def write_json(out: dict, dirpath: str) -> str:
+    os.makedirs(dirpath, exist_ok=True)
+    path = os.path.join(dirpath, "BENCH_dse.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    return path
+
+
+def check_baseline(out: dict, baseline_dir: str) -> list:
+    """Ratchet vs the checked-in BENCH_dse.json (deterministic facts only).
+
+    * ``points_digest`` must match exactly: the staged engine must keep
+      every DSEPoint byte-identical to the recorded sweep;
+    * ``programs_scheduled`` may not grow: a regression here means
+      cost-variant sharing broke and the engine went back to
+      re-scheduling per variant;
+    * point counts must match. Wall-clock fields are informational.
+    A baseline recorded under a different grid is skipped.
+    """
+    path = os.path.join(baseline_dir, "BENCH_dse.json")
+    if not os.path.exists(path):
+        return [f"no baseline at {path} (seed one with --json-out)"]
+    with open(path) as f:
+        base = json.load(f)
+    if base.get("grid") != out["grid"]:
+        print(f"  (baseline grid differs — skipping ratchet: {path})")
+        return []
+    errs = []
+    if out["points_digest"] != base["points_digest"]:
+        errs.append(f"points digest changed: {base['points_digest']} -> "
+                    f"{out['points_digest']} (sweep output is no longer "
+                    f"byte-identical)")
+    if out["n_feasible"] != base["n_feasible"]:
+        errs.append(f"feasible points changed: {base['n_feasible']} -> "
+                    f"{out['n_feasible']}")
+    if out["programs_scheduled"] > base["programs_scheduled"]:
+        errs.append(f"programs scheduled regressed: "
+                    f"{base['programs_scheduled']} -> "
+                    f"{out['programs_scheduled']} (schedule sharing across "
+                    f"cost variants degraded)")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.bench_pareto")
+    ap.add_argument("--staging", action="store_true",
+                    help="benchmark the sweep engine (cold/warm wall, stage "
+                         "breakdown) instead of reporting Fig-13 numbers")
+    ap.add_argument("--json-out", default=None,
+                    help="directory to write BENCH_dse.json into "
+                         "(implies --staging)")
+    ap.add_argument("--check-baseline", default=None,
+                    help="directory holding the checked-in BENCH_dse.json "
+                         "(implies --staging)")
+    ap.add_argument("--out", default=None,
+                    help="work dir for the staging sweep (default: a "
+                         "scratch dir, removed afterwards)")
+    args = ap.parse_args(argv)
+
+    if not (args.staging or args.json_out or args.check_baseline):
+        run()
+        return 0
+    out = run_staging(out_dir=args.out)
+    rc = 0
+    if args.check_baseline:
+        base_path = os.path.join(args.check_baseline, "BENCH_dse.json")
+        if os.path.exists(base_path):
+            with open(base_path) as f:
+                base = json.load(f)
+            ref = base.get("pre_staging_cold_wall_s")
+            if ref:
+                out["pre_staging_cold_wall_s"] = ref
+                out["speedup_vs_pre_staging"] = round(
+                    ref / max(out["cold_wall_s"], 1e-9), 2)
+                print(f"  vs pre-staging engine: "
+                      f"{out['speedup_vs_pre_staging']}x faster cold "
+                      f"({ref}s -> {out['cold_wall_s']}s)")
+        errs = check_baseline(out, args.check_baseline)
+        for e in errs:
+            print(f"BASELINE VIOLATION: {e}", file=sys.stderr)
+        rc = 1 if errs else 0
+    if args.json_out:
+        print(f"wrote {write_json(out, args.json_out)}")
+    return rc
+
+
 if __name__ == "__main__":
-    run()
+    sys.exit(main())

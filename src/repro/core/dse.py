@@ -30,15 +30,19 @@ import hashlib
 import json
 import math
 import os
+import pickle
 import sys
 import time
+from collections import OrderedDict
 from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
+from repro.core import stages
 from repro.core.area_model import scaled_area
 from repro.vta.isa import VTAConfig
 from repro.vta.network import run_network
+from repro.vta.schedule_cache import ScheduleStore
 from repro.vta.workloads import (network_fingerprint, network_graph,
                                  resolve_network)
 
@@ -164,8 +168,12 @@ class DSEJob:
 
     @property
     def config_label(self) -> str:
-        return (f"b{1 << self.batch_log}x{1 << self.log_block}"
-                f"x{1 << self.log_block}/mw{self.mem_width}/sp{self.spad_scale}")
+        base = (f"b{1 << self.batch_log}x{1 << self.log_block}"
+                f"x{1 << self.log_block}/mw{self.mem_width}"
+                f"/sp{self.spad_scale}")
+        # unpipelined points need their own label: joint_points dedups by
+        # label, and a joint pipelined+unpipelined sweep would collide
+        return base if self.pipelined else base + "/np"
 
     @property
     def label(self) -> str:
@@ -192,14 +200,17 @@ class DSEJob:
 
 def make_jobs(networks, *, log_blocks=DEFAULT_LOG_BLOCKS,
               mem_widths=DEFAULT_MEM_WIDTHS, spad_scales=DEFAULT_SPAD_SCALES,
-              batch_logs=(0,), pipelined: bool = True,
+              batch_logs=(0,), pipelined=True,
               per_layer: bool = True, residency: bool = True,
               tune: str = "cached", backend: str = "numpy") -> list[DSEJob]:
+    """``pipelined`` is a bool or a tuple of bools (joint on/off sweeps)."""
+    pls = tuple(pipelined) if isinstance(pipelined, (tuple, list)) \
+        else (pipelined,)
     return [DSEJob(network=n, log_block=lb, mem_width=mw, spad_scale=ss,
-                   batch_log=bl, pipelined=pipelined, per_layer=per_layer,
+                   batch_log=bl, pipelined=pl, per_layer=per_layer,
                    residency=residency, tune=tune, backend=backend)
             for n in networks for lb in log_blocks for mw in mem_widths
-            for ss in spad_scales for bl in batch_logs]
+            for ss in spad_scales for bl in batch_logs for pl in pls]
 
 
 # ---------------------------------------------------------------------------
@@ -253,26 +264,118 @@ class ResultCache:
         return sum(1 for n in os.listdir(self.root) if n.endswith(".json"))
 
 
+class ScheduleBlobCache:
+    """On-disk pickle store for shared schedule entries (``<out>/schedules``).
+
+    Keys are the structural build identities from ``vta/schedule_cache``
+    (layer shape + schedule knobs + ``hw.schedule_key()`` + tile); the
+    filename is sha256 over the engine/schema stamp plus the key repr. The
+    blob stores ``(key, entry)`` and ``get`` requires the stored key to
+    compare equal, so a filename collision or stale file can never surface
+    the wrong program. Corrupt or unreadable blobs count as misses.
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+
+    def path(self, key) -> str:
+        stamp = repr((ENGINE_VERSION, CACHE_SCHEMA_VERSION)) + repr(key)
+        return os.path.join(
+            self.root, hashlib.sha256(stamp.encode()).hexdigest() + ".pkl")
+
+    def get(self, key):
+        try:
+            with open(self.path(key), "rb") as f:
+                stored_key, ent = pickle.load(f)
+        except Exception:
+            self.misses += 1
+            return None
+        if stored_key != key:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return ent
+
+    def put(self, key, ent) -> None:
+        p = self.path(key)
+        # pid-unique tmp name: pool workers may race on identical content
+        tmp = f"{p}.{os.getpid()}.tmp"
+        with open(tmp, "wb") as f:
+            pickle.dump((key, ent), f, protocol=pickle.HIGHEST_PROTOCOL)
+        os.replace(tmp, p)
+
+
 # ---------------------------------------------------------------------------
 # Job evaluation (runs inside pool workers)
 # ---------------------------------------------------------------------------
-_LAYER_CACHE: dict = {}     # per-process: repeated shapes share tsim runs
-_TUNERS: dict = {}          # per-process: (mode, dir, knobs) -> LayerTuner
+class LRUCache:
+    """Bounded mapping with the subset of the dict API the layer cache
+    uses (``get`` / ``[]=`` / ``len``). Unbounded growth matters now that
+    one sweep process hosts many (network x geometry) groups."""
+
+    def __init__(self, maxsize: int = 4096):
+        self.maxsize = maxsize
+        self.evictions = 0
+        self._d: OrderedDict = OrderedDict()
+
+    def get(self, key, default=None):
+        try:
+            val = self._d[key]
+        except KeyError:
+            return default
+        self._d.move_to_end(key)
+        return val
+
+    def __setitem__(self, key, val) -> None:
+        self._d[key] = val
+        self._d.move_to_end(key)
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def clear(self) -> None:
+        self._d.clear()
+
+    def stats(self) -> dict:
+        return {"len": len(self._d), "maxsize": self.maxsize,
+                "evictions": self.evictions}
 
 
-def _tuner_for(job: DSEJob, tune_dir: Optional[str]):
+_LAYER_CACHE = LRUCache()   # per-process: repeated shapes share tsim runs
+_TUNERS: dict = {}          # per-process: (mode, dirs) -> LayerTuner
+_SCHEDULE_STORES: dict = {}  # per-process: schedule_dir -> ScheduleStore
+
+
+def _schedule_store(schedule_dir: Optional[str]) -> ScheduleStore:
+    """Per-process ScheduleStore, disk-backed when a dir is given."""
+    if schedule_dir not in _SCHEDULE_STORES:
+        backing = ScheduleBlobCache(schedule_dir) if schedule_dir else None
+        _SCHEDULE_STORES[schedule_dir] = ScheduleStore(backing=backing)
+    return _SCHEDULE_STORES[schedule_dir]
+
+
+def _tuner_for(job: DSEJob, tune_dir: Optional[str],
+               schedule_dir: Optional[str] = None):
     """Per-process LayerTuner (memo of searched tiles survives across jobs;
     the persistent cache at ``tune_dir`` survives across runs)."""
     if job.tune == "off":
         return None
     from repro.vta.autotune import make_tuner
-    key = (job.tune, tune_dir)
+    key = (job.tune, tune_dir, schedule_dir)
     if key not in _TUNERS:
-        _TUNERS[key] = make_tuner(job.tune, tune_dir)
+        _TUNERS[key] = make_tuner(job.tune, tune_dir,
+                                  schedules=_schedule_store(schedule_dir))
     return _TUNERS[key]
 
 
-def eval_job(job: DSEJob, tune_dir: Optional[str] = None) -> dict:
+def eval_job(job: DSEJob, tune_dir: Optional[str] = None,
+             schedule_dir: Optional[str] = None) -> dict:
     """Evaluate one job to its cache record (feasible point or reason)."""
     hw = job.config()
     base = {"network": job.network, "label": job.config_label,
@@ -287,8 +390,9 @@ def eval_job(job: DSEJob, tune_dir: Optional[str] = None) -> dict:
         rep = run_network(job.network, graph, hw, layer_cache=_LAYER_CACHE,
                           dedup_loads=True,
                           fusion=job.residency, residency=job.residency,
-                          tuner=_tuner_for(job, tune_dir),
-                          backend=job.backend)
+                          tuner=_tuner_for(job, tune_dir, schedule_dir),
+                          backend=job.backend,
+                          schedules=_schedule_store(schedule_dir))
     except (AssertionError, RuntimeError, ValueError) as e:
         # infeasible point (sparse design space, §V)
         return {**base, "feasible": False,
@@ -305,8 +409,44 @@ def eval_job(job: DSEJob, tune_dir: Optional[str] = None) -> dict:
     return pt.to_dict()
 
 
-def _pool_eval(job: DSEJob, tune_dir: Optional[str] = None) -> dict:
-    return eval_job(job, tune_dir)
+def _group_jobs(jobs: list[DSEJob]) -> list[list[DSEJob]]:
+    """Bucket jobs that differ only in *cost* knobs (mem width, pipelining).
+
+    Members of one bucket schedule byte-identical programs — evaluating
+    them on the same worker turns all but the first into cost-model
+    replays against the shared ScheduleStore.
+    """
+    groups: dict = {}
+    for job in jobs:
+        gk = (job.network, job.log_block, job.spad_scale, job.batch_log,
+              job.per_layer, job.residency, job.tune, job.backend)
+        groups.setdefault(gk, []).append(job)
+    return list(groups.values())
+
+
+def _pool_eval(job: DSEJob, tune_dir: Optional[str] = None,
+               schedule_dir: Optional[str] = None) -> dict:
+    return eval_job(job, tune_dir, schedule_dir)
+
+
+def _pool_eval_group(jobs: list[DSEJob], tune_dir: Optional[str] = None,
+                     schedule_dir: Optional[str] = None) -> dict:
+    """Evaluate one cost-variant group; returns records + profile deltas."""
+    st0 = stages.snapshot()
+    store = _schedule_store(schedule_dir)
+    ss0 = store.stats()
+    ev0 = _LAYER_CACHE.evictions
+    recs = [eval_job(job, tune_dir, schedule_dir) for job in jobs]
+    ss1 = store.stats()
+    prof = {"stages": stages.delta(st0),
+            "schedule_store": {
+                **{k: ss1[k] - ss0[k]
+                   for k in ("hits", "misses", "evictions", "disk_hits")},
+                "len": ss1["len"], "maxsize": ss1["maxsize"]},
+            "layer_cache": {"len": len(_LAYER_CACHE),
+                            "maxsize": _LAYER_CACHE.maxsize,
+                            "evictions": _LAYER_CACHE.evictions - ev0}}
+    return {"records": recs, "profile": prof}
 
 
 # ---------------------------------------------------------------------------
@@ -319,6 +459,7 @@ class SweepResult:
     cache_hits: int = 0
     cache_misses: int = 0
     wall_s: float = 0.0
+    profile: Optional[dict] = None   # per-stage seconds + cache stats
 
     @property
     def networks(self) -> list[str]:
@@ -394,6 +535,8 @@ class SweepResult:
                             "best": (best["label"], best["area"], best["cycles"]),
                             "cycle_gain_best": ref["cycles"] / best["cycles"],
                             "area_cost_best": best["area"] / ref["area"]}
+        if self.profile is not None:
+            rep["profile"] = self.profile
         return rep
 
 
@@ -401,24 +544,35 @@ def _reference_point(pts: list[DSEPoint]) -> DSEPoint:
     """The pipelined default: smallest MAC array, narrowest bus (area 1.0x)."""
     cands = [p for p in pts if p.hw.log_block_in == 4
              and p.hw.mem_width_bytes == 8]
-    return min(cands or pts, key=lambda p: p.area)
+    # joint pipelined+unpipelined sweeps: the reference stays the
+    # *pipelined* default (the paper's §V baseline), not its slowed twin
+    pip = [p for p in cands if p.hw.gemm_ii == 1]
+    return min(pip or cands or pts, key=lambda p: p.area)
 
 
 def run_sweep(networks, *, out_dir: Optional[str] = None,
               log_blocks=DEFAULT_LOG_BLOCKS, mem_widths=DEFAULT_MEM_WIDTHS,
               spad_scales=DEFAULT_SPAD_SCALES, batch_logs=(0,),
-              pipelined: bool = True, workers: Optional[int] = None,
+              pipelined=True, workers: Optional[int] = None,
               per_layer: bool = True, use_cache: bool = True,
               residency: bool = True, tune: str = "cached",
-              backend: str = "numpy",
+              backend: str = "numpy", profile: bool = False,
               progress: Optional[Callable[[str], None]] = None) -> SweepResult:
     """Run the full (config grid x networks) sweep across a process pool.
 
     ``out_dir`` holds the content-addressed cache at ``<out_dir>/cache``,
-    the autotuner's tile cache at ``<out_dir>/autotune`` and the combined
+    the autotuner's tile cache at ``<out_dir>/autotune``, the shared
+    schedule blobs at ``<out_dir>/schedules`` and the combined
     ``report.json``; omit it for a purely in-memory sweep.
     ``residency=False`` turns the graph compiler off (per-layer baseline);
-    ``tune`` sets the autotuner policy (off | cached | full).
+    ``tune`` sets the autotuner policy (off | cached | full);
+    ``pipelined`` may be a bool or a tuple of bools (joint on/off sweep);
+    ``profile=True`` adds a per-stage wall-time + cache-stats section to
+    the report.
+
+    Jobs that differ only in cost knobs (memory width, pipelining) are
+    grouped onto one worker: the group schedules each distinct program
+    once and replays its cost model per variant (``vta/schedule_cache``).
     """
     t0 = time.time()
     jobs = make_jobs(networks, log_blocks=log_blocks, mem_widths=mem_widths,
@@ -428,12 +582,14 @@ def run_sweep(networks, *, out_dir: Optional[str] = None,
     keys = {job: job.key() for job in jobs}
     cache = None
     tune_dir = None
+    schedule_dir = None
     if out_dir is not None:
         os.makedirs(out_dir, exist_ok=True)
         if use_cache:
             cache = ResultCache(os.path.join(out_dir, "cache"))
         if tune != "off":
             tune_dir = os.path.join(out_dir, "autotune")
+        schedule_dir = os.path.join(out_dir, "schedules")
 
     records: dict[str, dict] = {}
     todo: list[DSEJob] = []
@@ -444,8 +600,21 @@ def run_sweep(networks, *, out_dir: Optional[str] = None,
         else:
             todo.append(job)
 
+    prof = {"stages": {}, "schedule_store": {}, "layer_cache": {}}
+
+    def absorb(p: dict) -> None:
+        stages.merge(prof["stages"], p["stages"])
+        for sect in ("schedule_store", "layer_cache"):
+            d = prof[sect]
+            for k, v in p[sect].items():
+                if k in ("len", "maxsize"):     # gauges, not counters
+                    d[k] = max(d.get(k, 0), v)
+                else:
+                    d[k] = d.get(k, 0) + v
+
     if todo:
         workers = workers or max(1, os.cpu_count() or 1)
+        groups = _group_jobs(todo)
 
         def note(key: str, rec: dict):
             if cache is not None:
@@ -455,22 +624,25 @@ def run_sweep(networks, *, out_dir: Optional[str] = None,
                 progress(f"[{len(records)}/{len(jobs)}] "
                          f"{rec['network']}:{rec['label']} {status}")
 
-        if workers == 1 or len(todo) == 1:
-            for job in todo:
-                rec = _pool_eval(job, tune_dir)
+        def land(group: list[DSEJob], out: dict):
+            for job, rec in zip(group, out["records"]):
                 records[keys[job]] = rec
                 note(keys[job], rec)
+            absorb(out["profile"])
+
+        if workers == 1 or len(groups) == 1:
+            for group in groups:
+                land(group, _pool_eval_group(group, tune_dir, schedule_dir))
         else:
             with ProcessPoolExecutor(max_workers=workers) as pool:
-                futs = {pool.submit(_pool_eval, job, tune_dir): job
-                        for job in todo}
+                futs = {pool.submit(_pool_eval_group, group, tune_dir,
+                                    schedule_dir): group
+                        for group in groups}
                 pending = set(futs)
                 while pending:
                     done, pending = wait(pending, return_when=FIRST_COMPLETED)
                     for fut in done:
-                        rec = fut.result()
-                        records[keys[futs[fut]]] = rec
-                        note(keys[futs[fut]], rec)
+                        land(futs[fut], fut.result())
 
     points: dict[str, list[DSEPoint]] = {}
     infeasible: dict[str, list[dict]] = {}
@@ -483,10 +655,12 @@ def run_sweep(networks, *, out_dir: Optional[str] = None,
     for net in {j.network for j in jobs}:
         points.setdefault(net, [])
 
+    prof["stages"] = {k: round(v, 3) for k, v in prof["stages"].items()}
     res = SweepResult(points=points, infeasible=infeasible,
                       cache_hits=cache.hits if cache else 0,
                       cache_misses=cache.misses if cache else 0,
-                      wall_s=time.time() - t0)
+                      wall_s=time.time() - t0,
+                      profile=prof if profile else None)
     if out_dir is not None:
         with open(os.path.join(out_dir, "report.json"), "w") as f:
             json.dump(res.report(), f, indent=2)
@@ -582,6 +756,23 @@ def _print_report(rep: dict) -> None:
             print(f"     {label:22s} area {a:6.2f}x  cycles {cyc/1e6:8.2f}M")
         print(f"     big end {j['best'][0]}: {j['cycle_gain_best']:.1f}x "
               f"fewer cycles at {j['area_cost_best']:.1f}x area")
+    p = rep.get("profile")
+    if p:
+        st = p.get("stages", {})
+        breakdown = "  ".join(f"{k} {v:.1f}s" for k, v in sorted(st.items()))
+        print(f"  -- profile: {breakdown or 'no instrumented work'}")
+        ss = p.get("schedule_store", {})
+        if ss:
+            print(f"     schedule store: {ss.get('hits', 0)} hits / "
+                  f"{ss.get('misses', 0)} misses "
+                  f"({ss.get('disk_hits', 0)} from disk, "
+                  f"{ss.get('evictions', 0)} evicted, "
+                  f"len {ss.get('len', 0)}/{ss.get('maxsize', 0)})")
+        lc = p.get("layer_cache", {})
+        if lc:
+            print(f"     layer cache: len {lc.get('len', 0)}"
+                  f"/{lc.get('maxsize', 0)} "
+                  f"({lc.get('evictions', 0)} evicted)")
 
 
 def main(argv=None) -> int:
@@ -599,6 +790,13 @@ def main(argv=None) -> int:
     ap.add_argument("--mem-widths", default="8,16,32,64")
     ap.add_argument("--spad-scales", default="1,2,4")
     ap.add_argument("--batch-logs", default="0")
+    ap.add_argument("--pipelined", default="1",
+                    help='comma list of 1/0, e.g. "1,0" for a joint '
+                         "pipelined + unpipelined sweep (default: 1)")
+    ap.add_argument("--profile", action="store_true",
+                    help="add per-stage wall time (schedule / autotune / "
+                         "tsim-cost / fsim-verify) and cache statistics to "
+                         "the report")
     ap.add_argument("--no-cache", action="store_true",
                     help="recompute everything, do not read/write the cache")
     ap.add_argument("--no-per-layer", action="store_true",
@@ -632,10 +830,11 @@ def main(argv=None) -> int:
         out_dir=args.out,
         log_blocks=ints(args.log_blocks), mem_widths=ints(args.mem_widths),
         spad_scales=ints(args.spad_scales), batch_logs=ints(args.batch_logs),
+        pipelined=tuple(bool(int(x)) for x in args.pipelined.split(",") if x),
         workers=args.workers, per_layer=not args.no_per_layer,
         use_cache=not args.no_cache, residency=not args.no_residency,
         tune="off" if args.no_autotune else args.tune,
-        backend=args.backend,
+        backend=args.backend, profile=args.profile,
         progress=lambda line: print(line, flush=True))
     _print_report(res.report())
     if args.out:

@@ -39,10 +39,12 @@ import hashlib
 import json
 import time
 from dataclasses import asdict, dataclass, replace
+from types import SimpleNamespace
 from typing import Optional
 
 import numpy as np
 
+from repro.core.stages import stage
 from repro.core.tile_search import (vta_alu_tile_candidates,
                                     vta_tile_candidates)
 from repro.core.tps import ConvWorkload, Tiling, heuristic_conv_tiling
@@ -50,6 +52,8 @@ from repro.vta.fsim import (conv2d_ref, depthwise_ref, pool_ref,
                             post_op_ref)
 from repro.vta.isa import VTAConfig
 from repro.vta.runtime import Program, UopAllocator, finalize
+from repro.vta.schedule_cache import (KnownScheduleFailure, alu_key,
+                                      conv_key, fused_conv_key)
 from repro.vta.scheduler import (emit_conv_tasks, schedule_conv,
                                  schedule_depthwise, schedule_pool)
 from repro.vta.tsim import run_tsim
@@ -204,7 +208,8 @@ class LayerTuner:
     def __init__(self, mode: str = "cached", cache=None, *,
                  k_traffic: int = 12, k_cycles: int = 8,
                  tune_alu: bool = True, verify: bool = True,
-                 backend: str = "numpy", verify_batch: int = 1):
+                 backend: str = "numpy", verify_batch: int = 1,
+                 schedules=None):
         assert mode in ("cached", "full"), mode
         self.mode = mode
         self.cache = cache               # ResultCache-like or None
@@ -214,7 +219,16 @@ class LayerTuner:
         self.verify = verify
         self.backend = backend           # execution backend for winner
         self.verify_batch = verify_batch  # images per verification
+        self.schedules = schedules       # ScheduleStore: candidate programs
+                                         # + cost models shared across
+                                         # cost-only config variants (not a
+                                         # search knob — excluded from tag)
         self._memo: dict = {}            # fingerprint -> TuneResult
+        # verification verdicts per *shared* program object: when the store
+        # hands cost variants the same scheduled program, fsim bit-exactness
+        # (a function of the program, not of cost parameters) transfers.
+        # Keyed by id() with a strong reference held, so ids stay valid.
+        self._verify_memo: dict = {}     # id(prog) -> (prog, ok)
         # stats live in a dict so with_backend() copies keep reporting into
         # the caller-held tuner (searches / hits / verify_seconds)
         self._stats = {"searches": 0, "hits": 0, "verify_seconds": 0.0}
@@ -287,6 +301,27 @@ class LayerTuner:
             self.cache.put(key, tr.to_record())
         return tr
 
+    # -- staged candidate scheduling (shared across cost variants) ---------
+    @staticmethod
+    def _rebuild_raises(build, validate: bool = True):
+        """A cached-failure hit must surface the *exact* per-variant
+        exception (messages can embed this config's repr): re-run the
+        builder — it throws its cheap failing prefix — and propagate."""
+        sched = build()
+        if validate:
+            sched.program.validate_encoding()
+        raise RuntimeError(
+            "cached schedule failure did not reproduce")   # pragma: no cover
+
+    def _score_entry(self, skey, build, hw):
+        """(cycles, program) of one candidate via the shared ScheduleStore;
+        schedule + encode + tsim structural pass are paid once per
+        geometry, the replayed cycles are bit-identical to ``run_tsim``."""
+        ent = self.schedules.entry(skey, build, hw, validate=True)
+        with stage("tsim_cost"):
+            cycles = ent.cost_model.cost(hw).total_cycles
+        return cycles, ent.program
+
     # -- search loops ------------------------------------------------------
     def _pick(self, scored: list, kind: str, heuristic_cycles: int,
               pruned: int, verify_fn) -> TuneResult:
@@ -299,9 +334,21 @@ class LayerTuner:
         for i in order:
             cycles, tile, prog = scored[i]
             if self.verify:
-                t0 = time.perf_counter()
-                ok = verify_fn(prog)
-                self._stats["verify_seconds"] += time.perf_counter() - t0
+                # programs shared via the ScheduleStore carry their verify
+                # verdict across cost variants (verification data varies by
+                # fingerprint, but bit-exactness is a program property)
+                memo = self._verify_memo if self.schedules is not None \
+                    else None
+                hit = memo.get(id(prog)) if memo is not None else None
+                if hit is not None and hit[0] is prog:
+                    ok = hit[1]
+                else:
+                    t0 = time.perf_counter()
+                    with stage("fsim_verify"):
+                        ok = verify_fn(prog)
+                    self._stats["verify_seconds"] += time.perf_counter() - t0
+                    if memo is not None:
+                        memo[id(prog)] = (prog, ok)
                 if not ok:
                     last_err = f"fsim mismatch for {kind} tile {tile}"
                     continue
@@ -329,25 +376,48 @@ class LayerTuner:
         if hit is not None:
             return hit
         self._stats["searches"] += 1
-        heur = heuristic_conv_tiling(wl, hw, prefer_db=prefer_db)
-        cands = [heur] + [t for t in vta_tile_candidates(
-            wl, hw, k_traffic=self.k_traffic, k_cycles=self.k_cycles)
-            if (t.tb_o, t.th_o, t.tw_o, t.tco_o, t.tci_o, t.oc_n, t.h_n)
-            != (heur.tb_o, heur.th_o, heur.tw_o, heur.tco_o, heur.tci_o,
-                heur.oc_n, heur.h_n)]
-        scored, pruned = [], 0
-        for t in cands:
-            try:
-                sched = schedule_conv(wl, t, hw, post_op=post_op,
-                                      dedup_loads=dedup_loads, bias=bias)
-                sched.program.validate_encoding()
-            except (AssertionError, ValueError):
-                if t is heur:       # the untuned path would fail identically
-                    raise
-                pruned += 1        # scheduler/uop/encoder capacity pruning
-                continue
-            scored.append((run_tsim(sched.program, hw).total_cycles, t,
-                           sched.program))
+        with stage("autotune"):
+            heur = heuristic_conv_tiling(wl, hw, prefer_db=prefer_db)
+            cands = [heur] + [t for t in vta_tile_candidates(
+                wl, hw, k_traffic=self.k_traffic, k_cycles=self.k_cycles)
+                if (t.tb_o, t.th_o, t.tw_o, t.tco_o, t.tci_o, t.oc_n, t.h_n)
+                != (heur.tb_o, heur.th_o, heur.tw_o, heur.tco_o, heur.tci_o,
+                    heur.oc_n, heur.h_n)]
+            wl_id = replace(wl, name="")
+            sk = hw.schedule_key()
+            scored, pruned = [], 0
+            for t in cands:
+                def build(t=t):
+                    return schedule_conv(wl, t, hw, post_op=post_op,
+                                         dedup_loads=dedup_loads, bias=bias)
+                if self.schedules is not None:
+                    skey = conv_key(wl_id, post_op, bias, dedup_loads, sk,
+                                    t, True)
+                    try:
+                        cycles, prog = self._score_entry(skey, build, hw)
+                    except KnownScheduleFailure as kf:
+                        if t is heur or kf.exc_type == "RuntimeError":
+                            self._rebuild_raises(build)
+                        pruned += 1
+                        continue
+                    except (AssertionError, ValueError):
+                        if t is heur:  # the untuned path would fail identically
+                            raise
+                        pruned += 1    # scheduler/uop/encoder capacity pruning
+                        continue
+                    scored.append((cycles, t, prog))
+                    continue
+                try:
+                    sched = build()
+                    sched.program.validate_encoding()
+                except (AssertionError, ValueError):
+                    if t is heur:       # the untuned path would fail identically
+                        raise
+                    pruned += 1        # scheduler/uop/encoder capacity pruning
+                    continue
+                with stage("tsim_cost"):
+                    cycles = run_tsim(sched.program, hw).total_cycles
+                scored.append((cycles, t, sched.program))
         tr = self._pick(
             scored, kind, scored[0][0], pruned,
             lambda prog: _verify_conv(prog, wl, hw, post_op=post_op,
@@ -371,34 +441,70 @@ class LayerTuner:
                 return schedule_depthwise(wl, hw, post_op=post_op, tile=tile)
             return schedule_pool(wl, hw, mode=kind[:3], tile=tile)
 
-        default = build(None)          # the greedy capacity-maximal tile
-        # record the default's concrete (th_i, tw_i) so the result is
-        # self-describing even when the default wins
-        d_t = default.tiling
-        d_tile = (-(-wl.oh // d_t.th_o), -(-wl.ow // d_t.tw_o))
-        scored = [(run_tsim(default.program, hw).total_cycles, d_tile,
-                   default.program)]
-        pruned = 0
+        with stage("autotune"):
+            wl_id = replace(wl, name="")
+            sk = hw.schedule_key()
+            if self.schedules is not None:
+                # the default (untuned) build is unvalidated in the direct
+                # path too; its failure must propagate with the real message
+                try:
+                    ent = self.schedules.entry(
+                        alu_key(kind, wl_id, post_op, sk, None, False),
+                        lambda: build(None), hw)
+                except KnownScheduleFailure:
+                    self._rebuild_raises(lambda: build(None), validate=False)
+                d_t = ent.tiling
+                d_tile = (-(-wl.oh // d_t.th_o), -(-wl.ow // d_t.tw_o))
+                with stage("tsim_cost"):
+                    d_cycles = ent.cost_model.cost(hw).total_cycles
+                scored = [(d_cycles, d_tile, ent.program)]
+            else:
+                default = build(None)  # the greedy capacity-maximal tile
+                # record the default's concrete (th_i, tw_i) so the result
+                # is self-describing even when the default wins
+                d_t = default.tiling
+                d_tile = (-(-wl.oh // d_t.th_o), -(-wl.ow // d_t.tw_o))
+                with stage("tsim_cost"):
+                    d_cycles = run_tsim(default.program, hw).total_cycles
+                scored = [(d_cycles, d_tile, default.program)]
+            pruned = 0
 
-        def n_tiles(tile):
-            return -(-wl.oh // tile[0]) * -(-wl.ow // tile[1])
+            def n_tiles(tile):
+                return -(-wl.oh // tile[0]) * -(-wl.ow // tile[1])
 
-        # schedule-time budget: tiles much smaller than the default explode
-        # the task count (cost to search AND per-task latency overhead to
-        # run) without ever winning — skip anything past 4x the default's
-        # spatial tile count
-        budget = max(4 * n_tiles(d_tile), 16)
-        for tile in vta_alu_tile_candidates(wl.oh, wl.ow):
-            if tile == d_tile or n_tiles(tile) > budget:
-                continue
-            try:
-                sched = build(tile)
-                sched.program.validate_encoding()
-            except (AssertionError, ValueError):
-                pruned += 1
-                continue
-            scored.append((run_tsim(sched.program, hw).total_cycles, tile,
-                           sched.program))
+            # schedule-time budget: tiles much smaller than the default
+            # explode the task count (cost to search AND per-task latency
+            # overhead to run) without ever winning — skip anything past 4x
+            # the default's spatial tile count
+            budget = max(4 * n_tiles(d_tile), 16)
+            for tile in vta_alu_tile_candidates(wl.oh, wl.ow):
+                if tile == d_tile or n_tiles(tile) > budget:
+                    continue
+                if self.schedules is not None:
+                    skey = alu_key(kind, wl_id, post_op, sk, tile, True)
+                    try:
+                        cycles, prog = self._score_entry(
+                            skey, lambda tile=tile: build(tile), hw)
+                    except KnownScheduleFailure as kf:
+                        if kf.exc_type == "RuntimeError":
+                            self._rebuild_raises(
+                                lambda tile=tile: build(tile))
+                        pruned += 1
+                        continue
+                    except (AssertionError, ValueError):
+                        pruned += 1
+                        continue
+                    scored.append((cycles, tile, prog))
+                    continue
+                try:
+                    sched = build(tile)
+                    sched.program.validate_encoding()
+                except (AssertionError, ValueError):
+                    pruned += 1
+                    continue
+                with stage("tsim_cost"):
+                    cycles = run_tsim(sched.program, hw).total_cycles
+                scored.append((cycles, tile, sched.program))
         tr = self._pick(
             scored, kind, scored[0][0], pruned,
             lambda prog: _verify_alu(prog, wl, hw, kind=kind,
@@ -425,40 +531,74 @@ class LayerTuner:
         if hit is not None:
             return hit
         self._stats["searches"] += 1
-        shrunk = replace(hw, log_acc_buff=hw.log_acc_buff - 1)
-        try:
-            heur = heuristic_conv_tiling(wl, shrunk, prefer_db=prefer_db)
-        except RuntimeError:
-            return None
-        cands = [heur] + [t for t in vta_tile_candidates(
-            wl, shrunk, k_traffic=self.k_traffic, k_cycles=self.k_cycles)
-            if (t.tb_o, t.th_o, t.tw_o, t.tco_o, t.tci_o, t.oc_n, t.h_n)
-            != (heur.tb_o, heur.th_o, heur.tw_o, heur.tco_o, heur.tci_o,
-                heur.oc_n, heur.h_n)]
-
-        def build(t) -> Program:
-            alloc = UopAllocator(hw)
-            tasks: list = []
-            n_ctx = emit_conv_tasks(wl, t, hw, alloc, tasks, post_op=post_op,
-                                    dedup_loads=dedup_loads, bias=bias,
-                                    tensors=tensors, fuse_add=skip_name)
-            prog = finalize(tasks, hw, n_ctx=n_ctx)
-            prog.uop_mem = alloc.mem
-            return prog
-
-        scored, pruned = [], 0
-        for t in cands:
+        with stage("autotune"):
+            shrunk = replace(hw, log_acc_buff=hw.log_acc_buff - 1)
             try:
-                prog = build(t)
-                prog.validate_encoding()
-            except (AssertionError, ValueError):
-                if t is heur:
-                    # the compiler's own _fused_tiling would fail the same
-                    # way: report "no tunable plan" and let it fall back
-                    return None
-                pruned += 1
-                continue
-            scored.append((run_tsim(prog, hw).total_cycles, t, prog))
+                heur = heuristic_conv_tiling(wl, shrunk, prefer_db=prefer_db)
+            except RuntimeError:
+                return None
+            cands = [heur] + [t for t in vta_tile_candidates(
+                wl, shrunk, k_traffic=self.k_traffic, k_cycles=self.k_cycles)
+                if (t.tb_o, t.th_o, t.tw_o, t.tco_o, t.tci_o, t.oc_n, t.h_n)
+                != (heur.tb_o, heur.th_o, heur.tw_o, heur.tco_o, heur.tci_o,
+                    heur.oc_n, heur.h_n)]
+
+            def build(t) -> Program:
+                alloc = UopAllocator(hw)
+                tasks: list = []
+                n_ctx = emit_conv_tasks(wl, t, hw, alloc, tasks,
+                                        post_op=post_op,
+                                        dedup_loads=dedup_loads, bias=bias,
+                                        tensors=tensors, fuse_add=skip_name)
+                prog = finalize(tasks, hw, n_ctx=n_ctx)
+                prog.uop_mem = alloc.mem
+                return prog
+
+            wl_id = replace(wl, name="")
+            sk = hw.schedule_key()
+            scored, pruned = [], 0
+            for t in cands:
+                if self.schedules is not None:
+                    def build_sched(t=t):
+                        # adapt the bare-Program builder to the store's
+                        # Schedule-like contract
+                        return SimpleNamespace(program=build(t), tiling=t,
+                                               dram_bytes={})
+                    skey = fused_conv_key(wl_id, post_op, bias, dedup_loads,
+                                          sk, skip_name, tensors, t, True)
+                    try:
+                        cycles, prog = self._score_entry(skey, build_sched,
+                                                         hw)
+                    except KnownScheduleFailure as kf:
+                        if kf.exc_type == "RuntimeError":
+                            self._rebuild_raises(build_sched)
+                        if t is heur:
+                            # the compiler's own _fused_tiling would fail
+                            # the same way: let it fall back
+                            return None
+                        pruned += 1
+                        continue
+                    except (AssertionError, ValueError):
+                        if t is heur:
+                            return None
+                        pruned += 1
+                        continue
+                    scored.append((cycles, t, prog))
+                    continue
+                try:
+                    prog = build(t)
+                    prog.validate_encoding()
+                except (AssertionError, ValueError):
+                    if t is heur:
+                        # the compiler's own _fused_tiling would fail the
+                        # same way: report "no tunable plan" and let it
+                        # fall back
+                        return None
+                    pruned += 1
+                    continue
+                with stage("tsim_cost"):
+                    cycles = run_tsim(prog, hw).total_cycles
+                scored.append((cycles, t, prog))
         if not scored:
             return None
         names = {"inp": tensors["inp"], "wgt": tensors["wgt"],

@@ -175,6 +175,36 @@ class VTAConfig:
         """32-bit uops when fields fit, else 64-bit (paper: wider uops)."""
         return 4 if self.uop_bits_needed <= 32 else 8
 
+    # ------------------------------------------------------------------
+    # Config projections (staged DSE caching).  Every dataclass field is
+    # claimed by exactly one projection — enforced by tests — so a new
+    # field cannot silently leak a scheduling input into a cost-only key.
+    #
+    #   schedule_key: everything scheduling / lowering / encoding reads
+    #     (block shapes, scratchpad geometry, ISA field widths via the
+    #     data-element widths).  Two configs with equal schedule_key
+    #     produce byte-identical programs for the same workload.
+    #   cost_key: everything only the cycle/area models read (bus width,
+    #     initiation intervals, pipeline depth, DRAM latency, VME depth).
+    SCHEDULE_FIELDS = (
+        "log_batch", "log_block_in", "log_block_out",
+        "log_inp_buff", "log_wgt_buff", "log_acc_buff", "log_uop_buff",
+        "inp_bytes", "wgt_bytes", "acc_bytes", "out_bytes",
+        "uop_bytes_base",
+    )
+    COST_FIELDS = (
+        "mem_width_bytes", "gemm_ii", "alu_ii", "gemm_depth",
+        "dram_latency", "max_inflight",
+    )
+
+    def schedule_key(self) -> tuple:
+        """Projection of the config that scheduling depends on."""
+        return tuple(getattr(self, f) for f in self.SCHEDULE_FIELDS)
+
+    def cost_key(self) -> tuple:
+        """Projection of the config that only costing depends on."""
+        return tuple(getattr(self, f) for f in self.COST_FIELDS)
+
     def validate(self) -> list[str]:
         """Compile-time ISA constraint checks. Returns list of violations."""
         errs = []

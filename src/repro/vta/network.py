@@ -18,9 +18,12 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 from typing import Optional, Union
 
+from repro.core.stages import stage
 from repro.core.tps import Tiling, heuristic_conv_tiling
 from repro.vta.graph import Graph, Node
 from repro.vta.isa import VTAConfig
+from repro.vta.schedule_cache import (KnownScheduleFailure, add_key,
+                                      alu_key, conv_key)
 from repro.vta.scheduler import (Schedule, schedule_add, schedule_conv,
                                  schedule_depthwise, schedule_pool)
 from repro.vta.tsim import run_tsim
@@ -182,9 +185,16 @@ def layer_key(layer: Layer, hw: VTAConfig, *, prefer_db: bool = True,
     networks in one sweep) share one schedule + tsim run. The autotuner's
     ``tag`` (search-space knobs) joins the key — tuned and untuned
     evaluations of the same shape must never collide in a shared cache.
+
+    The config enters as its two projections — ``hw.schedule_key()`` +
+    ``hw.cost_key()`` — rather than the config object: together they
+    cover every field (the projections partition VTAConfig, tested), and
+    keeping them separate makes the staged sharing explicit: entries of
+    cost-only variants differ in the cost half only, and the schedule
+    half is exactly what the ScheduleStore keys programs on.
     """
     return (layer.kind, replace(layer.wl, name=""), layer.post_op, layer.bias,
-            hw, prefer_db, dedup_loads,
+            hw.schedule_key(), hw.cost_key(), prefer_db, dedup_loads,
             tuner.tag if tuner is not None else None)
 
 
@@ -193,12 +203,51 @@ def _layer_macs(layer: Layer) -> int:
     return 0 if layer.kind == "add" else layer.wl.macs
 
 
+def _layer_build(layer: Layer, hw: VTAConfig, *, plan, prefer_db,
+                 dedup_loads, validate):
+    """(store key, build thunk) for one layer's schedule — the build
+    identity the ScheduleStore shares across cost-only config variants.
+    Reproduces ``schedule_layer``'s tile selection exactly."""
+    wl = pad_for_blocking(layer.wl, hw)
+    wl_id = replace(wl, name="")
+    sk = hw.schedule_key()
+    if layer.kind in ("conv", "dense"):
+        tiling = plan.tile if plan is not None \
+            else heuristic_conv_tiling(wl, hw, prefer_db=prefer_db)
+        key = conv_key(wl_id, layer.post_op, layer.bias, dedup_loads, sk,
+                       tiling, validate)
+        build = lambda: schedule_conv(wl, tiling, hw, post_op=layer.post_op,
+                                      dedup_loads=dedup_loads,
+                                      bias=layer.bias)
+    elif layer.kind == "depthwise":
+        tile = tuple(plan.tile) if plan is not None else None
+        key = alu_key("depthwise", wl_id, layer.post_op, sk, tile, validate)
+        build = lambda: schedule_depthwise(wl, hw, post_op=layer.post_op,
+                                           tile=tile)
+    elif layer.kind in ("maxpool", "avgpool"):
+        tile = tuple(plan.tile) if plan is not None else None
+        key = alu_key(layer.kind, wl_id, layer.post_op, sk, tile, validate)
+        build = lambda: schedule_pool(wl, hw, mode=layer.kind[:3], tile=tile)
+    elif layer.kind == "add":
+        key = add_key(wl_id, sk, validate)
+        build = lambda: schedule_add(wl, hw)
+    else:
+        raise ValueError(layer.kind)
+    return key, build
+
+
 def _eval_single(layer: Layer, hw: VTAConfig, *, prefer_db, dedup_loads,
                  validate_encoding, tiling_fn, layer_cache,
-                 tuner=None) -> tuple:
+                 tuner=None, schedules=None) -> tuple:
     """(cycles, dram_bytes, tiling, counts, util, bytes_by_buffer,
     tune_info), cached. ``tune_info`` is None on the untuned path, else
-    {"chosen_tile", "tuning_gain"} from the autotuner's committed plan."""
+    {"chosen_tile", "tuning_gain"} from the autotuner's committed plan.
+
+    With ``schedules`` (a vta/schedule_cache.ScheduleStore) the
+    schedule+lower+encode work and the tsim structural pass are shared
+    across configs that differ only in cost parameters; each variant
+    replays its own cycle cost (bit-identical to the direct path).
+    """
     key = None
     if layer_cache is not None and tiling_fn is None:
         key = layer_key(layer, hw, prefer_db=prefer_db,
@@ -210,18 +259,39 @@ def _eval_single(layer: Layer, hw: VTAConfig, *, prefer_db, dedup_loads,
     if tiling_fn is None and tuner is not None:
         plan = plan_layer_tiles(layer, hw, tuner, prefer_db=prefer_db,
                                 dedup_loads=dedup_loads)
-    sched = schedule_layer(layer, hw, prefer_db=prefer_db,
-                           dedup_loads=dedup_loads, tiling_fn=tiling_fn,
-                           plan=plan)
     tune_info = None
     if plan is not None:
         tune_info = {"chosen_tile": plan.tile_dict(),
                      "tuning_gain": plan.tuning_gain}
-    if validate_encoding:
-        sched.program.validate_encoding()
-    ts = run_tsim(sched.program, hw)
-    val = (ts.total_cycles, ts.dram_bytes, sched.tiling, ts.counts,
-           ts.utilization(), dict(sched.dram_bytes), tune_info)
+    if schedules is not None and tiling_fn is None:
+        skey, build = _layer_build(layer, hw, plan=plan, prefer_db=prefer_db,
+                                   dedup_loads=dedup_loads,
+                                   validate=validate_encoding)
+        try:
+            ent = schedules.entry(skey, build, hw,
+                                  validate=validate_encoding, persist=True)
+        except KnownScheduleFailure:
+            # regenerate the exact per-variant exception (its message may
+            # embed this config's repr) — the rebuild throws early
+            sched = build()
+            if validate_encoding:
+                sched.program.validate_encoding()
+            raise RuntimeError(
+                "cached schedule failure did not reproduce")   # pragma: no cover
+        with stage("tsim_cost"):
+            ts = ent.cost_model.cost(hw)
+        val = (ts.total_cycles, ts.dram_bytes, ent.tiling, ts.counts,
+               ts.utilization(), dict(ent.dram_bytes), tune_info)
+    else:
+        sched = schedule_layer(layer, hw, prefer_db=prefer_db,
+                               dedup_loads=dedup_loads, tiling_fn=tiling_fn,
+                               plan=plan)
+        if validate_encoding:
+            sched.program.validate_encoding()
+        with stage("tsim_cost"):
+            ts = run_tsim(sched.program, hw)
+        val = (ts.total_cycles, ts.dram_bytes, sched.tiling, ts.counts,
+               ts.utilization(), dict(sched.dram_bytes), tune_info)
     if key is not None:
         layer_cache[key] = val
     return val
@@ -265,7 +335,8 @@ def run_network(name: str, layers: Union[Graph, list], hw: VTAConfig, *,
                 validate_encoding: bool = False,
                 tiling_fn=None, layer_cache: Optional[dict] = None,
                 fusion: bool = True, residency: bool = True,
-                tuner=None, backend: Optional[str] = None) -> NetworkReport:
+                tuner=None, backend: Optional[str] = None,
+                schedules=None) -> NetworkReport:
     """Compile + tsim a network. ``layers`` may be a Graph (graph compiler:
     fused segments, scratchpad residency) or a list of Layers (strict
     per-layer path). With ``layer_cache`` (any mutable mapping), identical
@@ -274,7 +345,11 @@ def run_network(name: str, layers: Union[Graph, list], hw: VTAConfig, *,
     replaces the heuristic tilings with tsim-searched ones per layer;
     ``backend`` (vta/backend.py registry name) selects the execution
     backend its winner verification runs on — every backend is bit-exact
-    by contract, so results are identical and only wall-clock changes."""
+    by contract, so results are identical and only wall-clock changes.
+    ``schedules`` (vta/schedule_cache.ScheduleStore) shares scheduled
+    programs + tsim cost models across configs that agree on
+    ``hw.schedule_key()`` — results stay bit-identical, cost-only config
+    variants skip straight to costing."""
     if backend is not None and tuner is not None:
         tuner = tuner.with_backend(backend)
     report = NetworkReport(name=name, hw=hw)
@@ -284,7 +359,8 @@ def run_network(name: str, layers: Union[Graph, list], hw: VTAConfig, *,
                             tuner=tuner)
     eval_kw = dict(prefer_db=prefer_db, dedup_loads=dedup_loads,
                    validate_encoding=validate_encoding, tiling_fn=tiling_fn,
-                   layer_cache=layer_cache, tuner=tuner)
+                   layer_cache=layer_cache, tuner=tuner,
+                   schedules=schedules)
     def emit_single(node, si):
         layer = node.layer
         sr = SegmentReport(index=si, layers=[layer.wl.name])
@@ -319,7 +395,8 @@ def run_network(name: str, layers: Union[Graph, list], hw: VTAConfig, *,
         else:
             if validate_encoding:
                 seg.program.validate_encoding()
-            ts = run_tsim(seg.program, hw)
+            with stage("tsim_cost"):
+                ts = run_tsim(seg.program, hw)
             seg_cycles, seg_dram = ts.total_cycles, ts.dram_bytes
             counts, util = ts.counts, ts.utilization()
             onchip = seg.dram_bytes.get("onchip", 0)

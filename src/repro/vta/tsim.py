@@ -21,6 +21,8 @@ import math
 from collections import deque
 from dataclasses import dataclass, field
 
+import numpy as np
+
 from repro.vta.isa import (AluInsn, Buffer, GemmInsn, LoadInsn,
                            StoreInsn, VTAConfig)
 from repro.vta.lowering import insn_dram_bytes, lower_ranges
@@ -152,6 +154,35 @@ def _check_hazards(prog: Program, hw: VTAConfig, spans: list) -> None:
         active.append((end, q, i))
 
 
+def _pops_of(insn, q: str) -> list:
+    """Dependency-token FIFOs this instruction pops (paper Fig 1 edges)."""
+    out = []
+    if q == "load" and insn.pop_next:
+        out.append(("compute", "load"))
+    if q == "compute":
+        if insn.pop_prev:
+            out.append(("load", "compute"))
+        if insn.pop_next:
+            out.append(("store", "compute"))
+    if q == "store" and insn.pop_prev:
+        out.append(("compute", "store"))
+    return out
+
+
+def _pushes_of(insn, q: str) -> list:
+    out = []
+    if q == "load" and insn.push_next:
+        out.append(("load", "compute"))
+    if q == "compute":
+        if insn.push_prev:
+            out.append(("compute", "load"))
+        if insn.push_next:
+            out.append(("compute", "store"))
+    if q == "store" and insn.push_prev:
+        out.append(("store", "compute"))
+    return out
+
+
 def run_tsim(prog: Program, hw: VTAConfig, *, check_hazards: bool = False) -> TsimResult:
     queues = prog.queues
     if check_hazards:
@@ -167,32 +198,7 @@ def run_tsim(prog: Program, hw: VTAConfig, *, check_hazards: bool = False) -> Ts
     stall_cycles = {q: 0 for q in names}
     mem_wait = {q: 0 for q in names}
     total_dram = 0
-
-    def pops_of(insn, q):
-        out = []
-        if q == "load" and insn.pop_next:
-            out.append(("compute", "load"))
-        if q == "compute":
-            if insn.pop_prev:
-                out.append(("load", "compute"))
-            if insn.pop_next:
-                out.append(("store", "compute"))
-        if q == "store" and insn.pop_prev:
-            out.append(("compute", "store"))
-        return out
-
-    def pushes_of(insn, q):
-        out = []
-        if q == "load" and insn.push_next:
-            out.append(("load", "compute"))
-        if q == "compute":
-            if insn.push_prev:
-                out.append(("compute", "load"))
-            if insn.push_next:
-                out.append(("compute", "store"))
-        if q == "store" and insn.push_prev:
-            out.append(("store", "compute"))
-        return out
+    pops_of, pushes_of = _pops_of, _pushes_of
 
     progress = True
     while progress:
@@ -252,6 +258,208 @@ def run_tsim(prog: Program, hw: VTAConfig, *, check_hazards: bool = False) -> Ts
     return TsimResult(total_cycles=total, busy=busy, counts=prog.counts(),
                       dram_bytes=total_dram, stalls=stall_cycles,
                       mem_wait=mem_wait)
+
+
+# ---------------------------------------------------------------------------
+# Two-phase costing: structural pass once per schedule, cheap replay per
+# cost variant (DSE engine fast path — bit-identical to run_tsim)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class CostParams:
+    """The VTAConfig projection run_tsim's timing depends on.
+
+    Mirrors ``VTAConfig.COST_FIELDS``: two configs with equal CostParams
+    cost any given program identically, whatever their geometry."""
+    mem_width_bytes: int = 8
+    dram_latency: int = 64
+    gemm_ii: int = 4
+    alu_ii: int = 4
+    gemm_depth: int = 5
+    max_inflight: int = 8
+
+    @staticmethod
+    def of(hw: VTAConfig) -> "CostParams":
+        return CostParams(**{f: getattr(hw, f) for f in VTAConfig.COST_FIELDS})
+
+
+_MEM, _SPILL, _GEMM, _ALU, _CTRL = range(5)
+_QNAMES = ("load", "compute", "store")
+
+
+class TsimCostModel:
+    """Replayable costing of one lowered program across cost variants.
+
+    ``run_tsim``'s fixpoint advances an instruction exactly when every
+    dependency token it pops is *available* — a boolean that does not
+    depend on timestamps — so the execution order, the FIFO matching of
+    each pop to its producing push, and the memory-engine serialization
+    order are all invariant under the cost parameters. The constructor
+    runs that fixpoint once (structurally, recording matched producer
+    event indices and the static per-instruction cost inputs as numpy
+    arrays); ``cost()`` replays the max-plus recurrence for one
+    ``CostParams``, reproducing ``run_tsim``'s TsimResult bit-for-bit at
+    a fraction of the price. ``cost_many()`` prices K variants of the
+    same program in one call.
+
+    ``hw`` contributes only its schedule projection (geometry: DRAM byte
+    accounting, spill tile sizes) — any config with the same
+    ``schedule_key()`` builds the same model.
+    """
+
+    def __init__(self, prog: Program, hw: VTAConfig):
+        self._prog = prog
+        self._hw = hw
+        queues = prog.queues
+        pos = {id(insn): i for i, insn in enumerate(prog.order)}
+        idx = {q: 0 for q in _QNAMES}
+        tokens: dict = {("load", "compute"): deque(),
+                        ("compute", "load"): deque(),
+                        ("compute", "store"): deque(),
+                        ("store", "compute"): deque()}
+        qof = {q: i for i, q in enumerate(_QNAMES)}
+        ev_q: list = []        # queue index per event
+        ev_code: list = []     # _MEM/_SPILL/_GEMM/_ALU/_CTRL
+        ev_kind: list = []     # busy-span kind string
+        ev_prod: list = []     # tuple of producer event indices (popped tokens)
+        ev_ord: list = []      # index into prog.order (hazard spans)
+        a_v: list = []         # bytes (mem/spill) or iterations (gemm/alu)
+        b_v: list = []         # alu: acc reads, latched
+        c_v: list = []         # alu: acc reads, unlatched
+        total_dram = 0
+        progress = True
+        while progress:
+            progress = False
+            for q in _QNAMES:
+                while idx[q] < len(queues[q]):
+                    insn = queues[q][idx[q]]
+                    pops = _pops_of(insn, q)
+                    if any(not tokens[p] for p in pops):
+                        break
+                    prods = tuple(tokens[p].popleft() for p in pops)
+                    a = b = c = 0
+                    if isinstance(insn, StoreInsn) and insn.on_chip:
+                        code, kind = _SPILL, "spill"
+                        a = insn.tiles() * hw.out_tile_bytes
+                    elif isinstance(insn, (LoadInsn, StoreInsn)):
+                        code = _MEM
+                        a = insn_dram_bytes(insn, hw)
+                        total_dram += a
+                        kind = ("uop_load" if getattr(insn, "buffer", None) == Buffer.UOP
+                                else "acc_load" if getattr(insn, "buffer", None) == Buffer.ACC
+                                and isinstance(insn, LoadInsn)
+                                else "store" if isinstance(insn, StoreInsn) else "load")
+                    elif isinstance(insn, GemmInsn):
+                        code, kind = _GEMM, "gemm"
+                        a = insn.iterations()
+                    elif isinstance(insn, AluInsn):
+                        code, kind = _ALU, "alu"
+                        a = insn.iterations()
+                        b = insn.acc_reads(latched=True)
+                        c = insn.acc_reads(latched=False)
+                    else:
+                        code, kind = _CTRL, "ctrl"
+                    e = len(ev_q)
+                    ev_q.append(qof[q])
+                    ev_code.append(code)
+                    ev_kind.append(kind)
+                    ev_prod.append(prods)
+                    ev_ord.append(pos[id(insn)])
+                    a_v.append(a)
+                    b_v.append(b)
+                    c_v.append(c)
+                    for p in _pushes_of(insn, q):
+                        tokens[p].append(e)
+                    idx[q] += 1
+                    progress = True
+        for q in _QNAMES:
+            if idx[q] < len(queues[q]):
+                raise RuntimeError(
+                    f"tsim deadlock: queue {q} stuck at insn {idx[q]}/{len(queues[q])} "
+                    f"({type(queues[q][idx[q]]).__name__})")
+        self._n = len(ev_q)
+        self._qi = ev_q
+        self._codes = ev_code
+        self._kinds = ev_kind
+        self._prods = ev_prod
+        self._ords = ev_ord
+        self._a = np.asarray(a_v, dtype=np.int64)
+        self._b = np.asarray(b_v, dtype=np.int64)
+        self._c = np.asarray(c_v, dtype=np.int64)
+        self._code_arr = np.asarray(ev_code, dtype=np.int64)
+        self._dram = total_dram
+
+    # -- replay ------------------------------------------------------------
+    def _durations(self, p: CostParams):
+        """Per-event static durations for one variant (vectorized)."""
+        a, code = self._a, self._code_arr
+        dur = np.full(self._n, DECODE_OVERHEAD, dtype=np.int64)   # _CTRL
+        m = code == _SPILL
+        dur[m] = -(-a[m] // p.mem_width_bytes) + CMD_OVERHEAD
+        m = code == _GEMM
+        dur[m] = a[m] * p.gemm_ii + p.gemm_depth + DECODE_OVERHEAD
+        m = code == _ALU
+        if p.alu_ii >= 4:                # unpipelined (as published)
+            ii = p.alu_ii + np.maximum(0, self._c[m] - 1)
+        else:
+            ii = np.maximum(np.maximum(p.alu_ii, 1), self._b[m])
+        dur[m] = a[m] * ii + p.gemm_depth + DECODE_OVERHEAD
+        m = code == _MEM
+        occ = np.zeros(self._n, dtype=np.int64)
+        occ[m] = -(-a[m] // p.mem_width_bytes)
+        return dur.tolist(), occ.tolist()
+
+    def cost(self, hw_or_params, *, check_hazards: bool = False) -> TsimResult:
+        """One variant's TsimResult — bit-identical to ``run_tsim`` of the
+        same program under a config with these cost parameters."""
+        p = hw_or_params if isinstance(hw_or_params, CostParams) \
+            else CostParams.of(hw_or_params)
+        dur, occ = self._durations(p)
+        n = self._n
+        qi, codes, prods, kinds = self._qi, self._codes, self._prods, self._kinds
+        latcmd = p.dram_latency + CMD_OVERHEAD
+        qtime = [0, 0, 0]
+        stalls = [0, 0, 0]
+        mwait = [0, 0, 0]
+        engine_free = 0
+        end = [0] * n
+        busy: tuple = ([], [], [])
+        spans = [] if check_hazards else None
+        for e in range(n):
+            q = qi[e]
+            ready = qtime[q]
+            for pe in prods[e]:
+                v = end[pe]
+                if v > ready:
+                    ready = v
+            stalls[q] += ready - qtime[q]
+            if codes[e] == _MEM:
+                issue = engine_free if engine_free > ready else ready
+                mwait[q] += issue - ready
+                o = occ[e]
+                engine_free = issue + o
+                t = issue + latcmd + o
+            else:
+                t = ready + dur[e]
+            if check_hazards:
+                spans.append((ready, t, _QNAMES[q], self._ords[e]))
+            if t > ready:
+                busy[q].append((ready, t, kinds[e]))
+            end[e] = t
+            qtime[q] = t
+        if check_hazards:
+            hz_hw = hw_or_params if isinstance(hw_or_params, VTAConfig) \
+                else self._hw
+            _check_hazards(self._prog, hz_hw, spans)
+        return TsimResult(
+            total_cycles=max(qtime) if n else 0,
+            busy={_QNAMES[i]: busy[i] for i in range(3)},
+            counts=self._prog.counts(), dram_bytes=self._dram,
+            stalls={_QNAMES[i]: stalls[i] for i in range(3)},
+            mem_wait={_QNAMES[i]: mwait[i] for i in range(3)})
+
+    def cost_many(self, variants) -> list[TsimResult]:
+        """Cost K config variants of this program in one call."""
+        return [self.cost(v) for v in variants]
 
 
 def utilization_ascii(res: TsimResult, width: int = 100) -> str:

@@ -149,3 +149,70 @@ def test_layer_cache_preserves_totals():
     assert warm.total_dram_bytes == cold.total_dram_bytes
     # repeat blocks mean strictly fewer unique evaluations than layers
     assert 0 < len(cache) < sum(1 for l in layers if not l.on_cpu)
+
+
+# ---------------------------------------------------------------------------
+# Joint pipelined+unpipelined sweeps and the --profile report section
+# ---------------------------------------------------------------------------
+def test_joint_pipelined_sweep_labels_and_reference(tmp_path):
+    out = str(tmp_path / "dse")
+    res = run_sweep(["resnet18"], out_dir=out, per_layer=False, workers=1,
+                    pipelined=(True, False), log_blocks=(4,),
+                    mem_widths=(8,), spad_scales=(1,), tune="off")
+    pts = res.points["resnet18"]
+    assert len(pts) == 2
+    labels = {p.label for p in pts}
+    # unpipelined points carry their own label (joint dedup + Fig-13 axis)
+    assert any(l.endswith("/np") for l in labels)
+    assert len(labels) == 2
+    rep = res.report()
+    # the reference stays the *pipelined* default
+    assert not rep["per_network"]["resnet18"]["ref"][0].endswith("/np")
+    assert rep["joint"]["n_points"] == 2
+    # grouping is an engine detail: records match two scalar sweeps
+    a = run_sweep(["resnet18"], out_dir=str(tmp_path / "a"), workers=1,
+                  per_layer=False, pipelined=True, log_blocks=(4,),
+                  mem_widths=(8,), spad_scales=(1,), tune="off")
+    b = run_sweep(["resnet18"], out_dir=str(tmp_path / "b"), workers=1,
+                  per_layer=False, pipelined=False, log_blocks=(4,),
+                  mem_widths=(8,), spad_scales=(1,), tune="off")
+    by_pip = {p.hw.gemm_ii == 1: p for p in pts}
+    assert by_pip[True].cycles == a.points["resnet18"][0].cycles
+    assert by_pip[False].cycles == b.points["resnet18"][0].cycles
+
+
+def _reset_worker_state():
+    """Serial sweeps share this process's layer/schedule caches; profiling
+    tests need a cold worker."""
+    from repro.core import dse
+    dse._LAYER_CACHE.clear()
+    dse._SCHEDULE_STORES.clear()
+
+
+def test_profile_report_section(tmp_path):
+    _reset_worker_state()
+    kw = dict(per_layer=False, workers=1, log_blocks=(4,), mem_widths=(8,),
+              spad_scales=(1,), tune="off")
+    res = run_sweep(["resnet18"], out_dir=str(tmp_path / "p"), profile=True,
+                    **kw)
+    rep = res.report()
+    prof = rep["profile"]
+    assert set(prof) == {"stages", "schedule_store", "layer_cache"}
+    assert prof["stages"].get("schedule", 0) > 0
+    assert prof["stages"].get("tsim_cost", 0) > 0
+    assert prof["schedule_store"]["misses"] > 0
+    assert prof["layer_cache"]["maxsize"] > 0
+    # without the flag the report stays byte-compatible with older engines
+    res2 = run_sweep(["resnet18"], out_dir=str(tmp_path / "q"), **kw)
+    assert "profile" not in res2.report()
+
+
+def test_mem_width_variants_share_schedules(tmp_path):
+    _reset_worker_state()
+    res = run_sweep(["resnet18"], out_dir=str(tmp_path / "s"), profile=True,
+                    per_layer=False, workers=1, log_blocks=(4,),
+                    mem_widths=(8, 64), spad_scales=(1,), tune="off")
+    prof = res.profile
+    # the second mem-width variant replays the first one's schedules
+    assert prof["schedule_store"]["hits"] >= prof["schedule_store"]["misses"]
+    assert [p.cycles for p in res.points["resnet18"]]
